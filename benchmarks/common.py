@@ -1,0 +1,80 @@
+"""Shared benchmark utilities: the synthetic 'dataset' suite.
+
+The paper evaluates on 8 NLP datasets with PALM-2 models. Our stand-ins
+are oracle model pairs whose (entropy, drafter-agreement) profile is swept
+the same way the paper sweeps datasets and drafter sizes; dataset names
+are kept for table alignment (see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import oracle
+
+# name -> (seed, concentration, rho, alpha).
+#
+# Drafters are "bimodal": on a fraction ``rho`` of contexts (easy tokens)
+# the drafter agrees with the target exactly; on the rest it is an
+# ``alpha``-perturbed mixture. Both knobs are CALIBRATED (see
+# EXPERIMENTS.md) so that at gamma=8 each dataset matches the paper's
+# Table-1 operating point in BOTH coordinates — TokenV block efficiency
+# AND BlockV relative improvement. (A single-knob Dirichlet-mixture
+# drafter can match the BE but overshoots the improvement 2x: the gain of
+# block verification is governed by the dispersion structure of the
+# likelihood ratios, not by the acceptance rate alone.)
+DATASETS = {
+    "LM1B": (11, 0.6, 0.345, 0.9),        # BE 3.18/3.21, +8.6%/+8.68%
+    "GPT-Prompt": (22, 0.8, 0.404, 0.9),  # BE 3.40/3.41, +9.9%/+10.06%
+    "WebQA": (33, 0.5, 0.471, 0.9),       # BE 3.39/3.44, +7.2%/+7.53%
+    "PIQA": (44, 0.7, 0.442, 0.9),        # BE 3.40/3.40, +9.3%/+8.3%
+    "ShareGPT": (55, 0.9, 0.397, 0.9),    # BE 3.33/3.34, +10.7%/+8.45%
+    "XSum": (66, 0.6, 0.546, 0.9),        # BE 3.46/3.49, +8.2%/+7.63%
+    "GSM8K": (77, 0.4, 0.412, 0.7),       # BE 3.82/3.81, +8.0%/+8.74%
+    "WMT-DeEn": (88, 1.0, 0.286, 0.9),    # BE 3.15/3.19, +12.9%/+7.0%
+}
+
+# drafter quality tiers (paper: PALM-2-XXS vs the weaker XXXS). XXXS
+# agrees on slightly fewer contexts AND its hard-context distribution is
+# sharpened (overconfidently wrong — ratios near 0, less partial credit
+# for block verification). Calibrated to the paper's XXXS gamma=8 row:
+# avg token BE 2.45 (paper 2.57), BlockV improvement +6.3% (paper +6.27%),
+# reproducing Figure 4's ordering: the better drafter gains MORE.
+DRAFTERS = {"XXS": (0.0, 1.0), "XXXS": (0.06, 2.5)}  # (drop rho, sharpen)
+
+
+def dataset_pair(name: str, drafter: str = "XXS", vocab=16, order=2):
+    seed, conc, rho, alpha = DATASETS[name]
+    drho, sharp = DRAFTERS[drafter]
+    rho = max(0.02, rho - drho)
+    kt, _ = jax.random.split(jax.random.key(seed))
+    target = oracle.random_lm(kt, vocab, order, conc)
+    k1, k2 = jax.random.split(jax.random.key(seed + 1))
+    noise = jax.random.dirichlet(
+        k1, jnp.ones(vocab), (target.n_contexts,)
+    )
+    hard = (1 - alpha) * target.table + alpha * noise.astype(jnp.float32)
+    if sharp != 1.0:
+        hard = jnp.power(hard, sharp)
+    hard = hard / jnp.sum(hard, axis=-1, keepdims=True)
+    easy = jax.random.uniform(k2, (target.n_contexts, 1)) < rho
+    draft = oracle.TabularLM(
+        table=jnp.where(easy, target.table, hard), order=order
+    )
+    return target, draft
+
+
+def timeit(fn, n_warmup=1, n_iter=3) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(n_warmup):
+        fn()
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

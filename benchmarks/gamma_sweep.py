@@ -1,0 +1,46 @@
+"""Paper Figures 3/4: average block efficiency and relative improvement
+for gamma in {2,4,6,8} under two drafter-quality tiers (XXS / XXXS)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks import common
+from repro.core import simulate
+
+
+def run(quick: bool = True):
+    batch, iters = (256, 24) if quick else (1024, 64)
+    gammas = [2, 4, 6, 8]
+    rows = []
+    for drafter in ["XXS", "XXXS"]:
+        prev_imp = None
+        for gamma in gammas:
+            toks, blks = [], []
+            for ds in common.DATASETS:
+                target, draft = common.dataset_pair(ds, drafter)
+                toks.append(float(simulate.block_efficiency(
+                    jax.random.key(0), target, draft, gamma, "token",
+                    batch=batch, n_iters=iters)))
+                blks.append(float(simulate.block_efficiency(
+                    jax.random.key(0), target, draft, gamma, "block",
+                    batch=batch, n_iters=iters)))
+            tok, blk = np.mean(toks), np.mean(blks)
+            imp = (blk / tok - 1) * 100
+            rows.append({
+                "name": f"gamma_sweep/{drafter}/g{gamma}",
+                "tokenv_be": round(tok, 3),
+                "blockv_be": round(blk, 3),
+                "improve_pct": round(imp, 2),
+                "improvement_grows": (
+                    None if prev_imp is None else bool(imp >= prev_imp - 0.3)
+                ),
+            })
+            prev_imp = imp
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

@@ -1,0 +1,60 @@
+"""Kernel/verification microbenchmarks.
+
+Two claims measured:
+* the paper's "no additional computation cost": block verification's
+  per-call overhead vs token verification at serving shapes;
+* the fused-residual roofline estimate for the Pallas kernel (bytes
+  touched / HBM bandwidth on the TPU target; on CPU we report the
+  XLA-compiled reference timing — interpret-mode timings are meaningless).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.core import verification
+from repro.kernels import ref
+from repro.launch.mesh import HBM_BW
+
+
+def run(quick: bool = True):
+    rows = []
+    shapes = [(8, 4, 32_000)] if quick else [
+        (8, 4, 32_000), (32, 8, 32_000), (8, 8, 256_000),
+    ]
+    key = jax.random.key(0)
+    for b, g, v in shapes:
+        k1, k2, k3, kk = jax.random.split(key, 4)
+        q = jax.random.dirichlet(k1, jnp.ones(v), (b, g))
+        p = jax.random.dirichlet(k2, jnp.ones(v), (b, g + 1))
+        toks = jax.random.randint(k3, (b, g), 0, v)
+
+        for name in ["token", "block"]:
+            fn = jax.jit(verification.get_verifier(name))
+            us = timeit(
+                lambda fn=fn: jax.block_until_ready(fn(kk, toks, q, p))
+            )
+            rows.append({
+                "name": f"kernels/verify_{name}_B{b}_G{g}_V{v}",
+                "us_per_call": round(us, 1),
+            })
+
+        # fused residual reduction: CPU-compiled reference timing + the
+        # TPU roofline bound for the same bytes.
+        ps = jax.random.uniform(kk, (b, g))
+        fn = jax.jit(ref.verify_residual_sums)
+        us = timeit(lambda: jax.block_until_ready(fn(ps, p[:, :g], q)))
+        hbm_bytes = 2 * b * g * v * 4
+        rows.append({
+            "name": f"kernels/residual_sums_B{b}_G{g}_V{v}",
+            "us_per_call": round(us, 1),
+            "tpu_roofline_us": round(hbm_bytes / HBM_BW * 1e6, 2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

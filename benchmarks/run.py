@@ -1,0 +1,54 @@
+"""Benchmark driver: one function per paper table/figure.
+
+``python -m benchmarks.run``            -- quick pass (CI-sized)
+``python -m benchmarks.run --full``     -- paper-sized statistics
+``python -m benchmarks.run --only table1``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        gamma_sweep, greedy_table3, kernels_bench, motivating, table1,
+        wallclock,
+    )
+
+    suites = {
+        "motivating": motivating.run,        # paper Section 2
+        "table1": table1.run,                # paper Table 1 (block efficiency)
+        "gamma_sweep": gamma_sweep.run,      # paper Figures 3/4
+        "greedy_table3": greedy_table3.run,  # paper Table 3 (Appendix C)
+        "wallclock": wallclock.run,          # paper Table 1 (wall clock)
+        "kernels": kernels_bench.run,        # kernel/verifier microbench
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    failures = 0
+    for name, fn in suites.items():
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        try:
+            for row in fn(quick=quick):
+                print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"BENCH FAILURE {name}: {e!r}", flush=True)
+        print(f"== {name} done in {time.time()-t0:.1f}s ==\n", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

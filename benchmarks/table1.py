@@ -1,0 +1,47 @@
+"""Paper Table 1: block efficiency, TokenV vs BlockV, gamma=8, per dataset,
+with multi-seed mean +/- std. (Wall-clock analog: benchmarks/wallclock.py.)"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks import common
+from repro.core import simulate
+
+
+def run(quick: bool = True, gamma: int = 8, drafter: str = "XXS"):
+    batch, iters = (256, 24) if quick else (2048, 64)
+    seeds = [0, 1, 2]
+    rows = []
+    improvements = []
+    for ds in common.DATASETS:
+        target, draft = common.dataset_pair(ds, drafter)
+        bes = {"token": [], "block": []}
+        for s in seeds:
+            for name in bes:
+                bes[name].append(float(simulate.block_efficiency(
+                    jax.random.key(s), target, draft, gamma, name,
+                    batch=batch, n_iters=iters,
+                )))
+        tok = np.array(bes["token"])
+        blk = np.array(bes["block"])
+        imp = (blk / tok - 1.0) * 100
+        improvements.append(imp.mean())
+        rows.append({
+            "name": f"table1/{ds}",
+            "tokenv_be": f"{tok.mean():.3f}±{tok.std():.3f}",
+            "blockv_be": f"{blk.mean():.3f}±{blk.std():.3f}",
+            "improve_pct": f"{imp.mean():.2f}±{imp.std():.2f}",
+        })
+    rows.append({
+        "name": "table1/average_improve_pct",
+        "value": round(float(np.mean(improvements)), 2),
+        "paper_avg_improve_pct": 8.30,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

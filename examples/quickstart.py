@@ -1,0 +1,32 @@
+"""Quickstart: block verification in 60 seconds.
+
+Reproduces the paper's Section-2 motivating example exactly, then runs a
+Monte-Carlo block-efficiency comparison of all three verification
+algorithms on a random oracle model pair.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.core import oracle, simulate
+
+print("=== Section 2 motivating example (exact enumeration) ===")
+target, drafter = oracle.section2_models()
+for kind, paper in [("token", "10/9"), ("block", "11/9"), ("ideal", "12/9")]:
+    val = oracle.exact_expected_accepted(target, drafter, gamma=2, kind=kind)
+    print(f"  E[accepted tokens] {kind:6s} = {val:.6f}   (paper: {paper})")
+
+print("\n=== Block efficiency on a random LM pair (gamma=8) ===")
+key = jax.random.key(0)
+kt, kd = jax.random.split(key)
+target = oracle.random_lm(kt, vocab=16, order=2)
+drafter = oracle.perturbed_drafter(kd, target, alpha=0.35)
+for name in ["token", "greedy_block", "block"]:
+    be = float(simulate.block_efficiency(
+        key, target, drafter, gamma=8, verifier_name=name,
+        batch=1024, n_iters=48,
+    ))
+    print(f"  {name:13s} block efficiency = {be:.3f} tokens / target call")
+
+print("\nBlock verification is lossless AND strictly faster -- Theorem 2.")

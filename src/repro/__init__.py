@@ -1,0 +1,5 @@
+"""repro: production-grade JAX reproduction of
+"Block Verification Accelerates Speculative Decoding" (ICLR 2025).
+"""
+
+__version__ = "1.0.0"

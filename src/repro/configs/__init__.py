@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCHS, ASSIGNED, get_config, smoke_config  # noqa: F401

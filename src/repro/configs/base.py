@@ -1,0 +1,138 @@
+"""Assigned-architecture configs (exact values from the public pool) and
+the generic smoke-reduction used by per-arch CPU tests."""
+
+from __future__ import annotations
+
+from repro.models.common import ModelConfig
+
+# --------------------------------------------------------------------------
+# The 10 assigned architectures. Sources cited per entry.
+# --------------------------------------------------------------------------
+
+MIXTRAL_8X22B = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv=8, d_ff=16384, vocab=32768,
+    n_experts=8, top_k=2, window_pattern=(4096,),
+    source="arXiv:2401.04088 (8 experts top-2, SWA)",
+)
+
+ZAMBA2_1P2B = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv=32, d_ff=8192, vocab=32000,
+    ssm_state=64, hybrid_attn_every=6, window_pattern=(4096,),
+    source="arXiv:2411.15242 (Mamba2 backbone + shared attention blocks; "
+    "window 4096 is our long-context adaptation, see DESIGN.md)",
+)
+
+OLMO_1B = ModelConfig(
+    name="olmo-1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=16, n_kv=16, d_ff=8192, vocab=50304,
+    norm="np_layernorm",
+    source="arXiv:2402.00838 (non-parametric LayerNorm)",
+)
+
+MISTRAL_LARGE_123B = ModelConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv=8, d_ff=28672, vocab=32768,
+    head_dim=128,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)
+
+GEMMA2_9B = ModelConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv=8, d_ff=14336, vocab=256000,
+    head_dim=256, window_pattern=(4096, -1), attn_softcap=50.0,
+    final_softcap=30.0, post_norms=True, tie_embeddings=True,
+    source="arXiv:2408.00118 (local/global alternating, logit softcap)",
+)
+
+SMOLLM_135M = ModelConfig(
+    name="smollm-135m", family="dense",
+    n_layers=30, d_model=576, n_heads=9, n_kv=3, d_ff=1536, vocab=49152,
+    tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M (llama-arch small)",
+)
+
+LLAMA4_SCOUT = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv=8, d_ff=8192, vocab=202048,
+    head_dim=128, n_experts=16, top_k=1,
+    window_pattern=(8192, 8192, 8192, -1),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E (MoE top-1; chunked local "
+    "attention 3/4 layers, iRoPE-style global every 4th; text backbone "
+    "only — early-fusion image tokens stubbed per DESIGN.md)",
+)
+
+WHISPER_TINY = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv=6, d_ff=1536, vocab=51865,
+    n_encoder_layers=4, n_audio_frames=1500,
+    norm="layernorm", mlp="gelu", use_rope=False,
+    source="arXiv:2212.04356 (enc-dec; mel+conv frontend stubbed: "
+    "input_specs feeds precomputed frame embeddings)",
+)
+
+LLAMA32_VISION_11B = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv=8, d_ff=14336, vocab=128256,
+    cross_attn_every=5, n_vision_tokens=1600,
+    source="hf:meta-llama/Llama-3.2-11B-Vision (cross-attn image layers "
+    "every 5th; ViT encoder stubbed: input_specs feeds patch embeddings)",
+)
+
+MAMBA2_370M = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv=0, d_ff=0, vocab=50280,
+    head_dim=1, ssm_state=128,
+    source="arXiv:2405.21060 (SSD state-space duality; attention-free)",
+)
+
+# The char-LM pair used for the paper-style Table-1 experiments
+# (PALM-2 is proprietary; see DESIGN.md §6).
+CHARLM_TARGET = ModelConfig(
+    name="charlm-target", family="dense",
+    n_layers=6, d_model=256, n_heads=8, n_kv=4, d_ff=1024, vocab=512,
+    max_seq=1024,
+    source="in-repo byte-level target model (paper M_b stand-in)",
+)
+
+CHARLM_DRAFTER = ModelConfig(
+    name="charlm-drafter", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv=2, d_ff=512, vocab=512,
+    max_seq=1024,
+    source="in-repo byte-level drafter (paper M_s stand-in)",
+)
+
+
+def smoke_of(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests: <=2-ish layers,
+    d_model <= 512, <= 4 experts, tiny windows (exercises ring caches)."""
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        d_model=256,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab=512,
+        head_dim=0,
+        max_seq=256,
+        ssm_state=32 if cfg.ssm_state else 0,
+        ssm_chunk=16,
+        n_vision_tokens=16 if cfg.n_vision_tokens else 0,
+        n_audio_frames=32 if cfg.n_audio_frames else 0,
+        n_encoder_layers=2 if cfg.n_encoder_layers else 0,
+        window_pattern=tuple(
+            32 if w > 0 else -1 for w in cfg.window_pattern
+        ),
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv=max(1, 4 * cfg.n_kv // cfg.n_heads))
+        if kw["n_heads"] % kw["n_kv"]:
+            kw["n_kv"] = 2
+    if cfg.n_experts:
+        kw["n_experts"] = min(4, cfg.n_experts)
+    if cfg.family == "hybrid":
+        kw.update(n_layers=5, hybrid_attn_every=2)   # 2 groups + remainder
+    elif cfg.family == "vlm":
+        kw.update(n_layers=4, cross_attn_every=2)    # 2 (dense, cross) groups
+    else:
+        kw["n_layers"] = 2 * len(cfg.window_pattern)
+    return cfg.with_(**kw)

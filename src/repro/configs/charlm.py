@@ -1,0 +1,4 @@
+"""Assigned architecture config — see base.py for the values and source."""
+
+from repro.configs.base import CHARLM_TARGET as CONFIG  # noqa: F401
+from repro.configs.base import CHARLM_DRAFTER as DRAFTER_CONFIG  # noqa: F401

@@ -1,0 +1,3 @@
+"""Assigned architecture config — see base.py for the values and source."""
+
+from repro.configs.base import LLAMA4_SCOUT as CONFIG  # noqa: F401

@@ -1,0 +1,3 @@
+"""Assigned architecture config — see base.py for the values and source."""
+
+from repro.configs.base import MISTRAL_LARGE_123B as CONFIG  # noqa: F401

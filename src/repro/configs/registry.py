@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+
+from __future__ import annotations
+
+from repro.configs import base
+from repro.models.common import ModelConfig
+
+ARCHS: dict[str, ModelConfig] = {
+    "mixtral-8x22b": base.MIXTRAL_8X22B,
+    "zamba2-1.2b": base.ZAMBA2_1P2B,
+    "olmo-1b": base.OLMO_1B,
+    "mistral-large-123b": base.MISTRAL_LARGE_123B,
+    "gemma2-9b": base.GEMMA2_9B,
+    "smollm-135m": base.SMOLLM_135M,
+    "llama4-scout-17b-a16e": base.LLAMA4_SCOUT,
+    "whisper-tiny": base.WHISPER_TINY,
+    "llama-3.2-vision-11b": base.LLAMA32_VISION_11B,
+    "mamba2-370m": base.MAMBA2_370M,
+    # the paper-experiment char-LM pair
+    "charlm-target": base.CHARLM_TARGET,
+    "charlm-drafter": base.CHARLM_DRAFTER,
+}
+
+ASSIGNED = tuple(k for k in ARCHS if not k.startswith("charlm"))
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return base.smoke_of(get_config(name))

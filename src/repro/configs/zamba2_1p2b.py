@@ -1,0 +1,3 @@
+"""Assigned architecture config — see base.py for the values and source."""
+
+from repro.configs.base import ZAMBA2_1P2B as CONFIG  # noqa: F401

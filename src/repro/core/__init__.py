@@ -1,0 +1,9 @@
+"""Core: the paper's contribution (verification algorithms) + harnesses."""
+
+from repro.core.verification import (  # noqa: F401
+    VerifyResult,
+    block_verify,
+    get_verifier,
+    greedy_block_verify,
+    token_verify,
+)

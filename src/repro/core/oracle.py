@@ -1,0 +1,186 @@
+"""Tabular oracle language models.
+
+An order-``k`` Markov model over a small vocabulary, stored as an explicit
+conditional table ``(V**k, V)``. These make the paper's distributional
+claims *exactly* checkable:
+
+* closed-form expected accepted tokens per iteration for token / block /
+  ideal verification (used to reproduce the Section 2 motivating example
+  10/9 vs 11/9 vs 12/9 and to cross-check Monte-Carlo simulation);
+* exact losslessness tests (the joint output distribution of speculative
+  decoding can be compared against M_b^ell by enumeration).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from dataclasses import field as dataclass_field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TabularLM:
+    """Order-``order`` Markov LM: ``table[ctx_code]`` is the next-token
+    distribution, where ``ctx_code`` encodes the last ``order`` tokens in
+    base ``vocab`` (rolling)."""
+
+    table: jax.Array  # (vocab**order, vocab) float32, rows sum to 1
+    order: int = dataclass_field(metadata=dict(static=True))
+
+    @property
+    def vocab(self) -> int:
+        return self.table.shape[-1]
+
+    @property
+    def n_contexts(self) -> int:
+        return self.table.shape[0]
+
+    def next_probs(self, ctx_code: jax.Array) -> jax.Array:
+        """ctx_code (B,) int32 -> (B, V)."""
+        return self.table[ctx_code]
+
+    def advance(self, ctx_code: jax.Array, token: jax.Array) -> jax.Array:
+        """Roll the context code forward by one token."""
+        return (ctx_code * self.vocab + token) % self.n_contexts
+
+    def sample(self, key: jax.Array, ctx_code: jax.Array) -> jax.Array:
+        return jax.random.categorical(
+            key, jnp.log(jnp.maximum(self.next_probs(ctx_code), 1e-30))
+        )
+
+
+def random_lm(key: jax.Array, vocab: int, order: int, concentration: float = 1.0) -> TabularLM:
+    """Random Dirichlet conditional table."""
+    n_ctx = vocab**order
+    table = jax.random.dirichlet(
+        key, jnp.full((vocab,), concentration), shape=(n_ctx,)
+    )
+    return TabularLM(table=table.astype(jnp.float32), order=order)
+
+
+def perturbed_drafter(
+    key: jax.Array, target: TabularLM, alpha: float, concentration: float = 1.0
+) -> TabularLM:
+    """A drafter of controllable quality: (1-alpha)*target + alpha*noise.
+
+    ``alpha`` plays the role the paper sweeps via drafter size
+    (PALM-2-XXS vs XXXS): smaller alpha = better drafter.
+    """
+    noise = jax.random.dirichlet(
+        key, jnp.full((target.vocab,), concentration), shape=(target.n_contexts,)
+    )
+    table = (1.0 - alpha) * target.table + alpha * noise.astype(jnp.float32)
+    table = table / jnp.sum(table, axis=-1, keepdims=True)
+    return TabularLM(table=table, order=target.order)
+
+
+def section2_models() -> tuple[TabularLM, TabularLM]:
+    """The paper's Section 2 example: context-independent two-token models.
+    M_b(A)=1/3, M_b(B)=2/3; M_s(A)=2/3, M_s(B)=1/3."""
+    target = TabularLM(jnp.array([[1 / 3, 2 / 3]], jnp.float32), order=0)
+    drafter = TabularLM(jnp.array([[2 / 3, 1 / 3]], jnp.float32), order=0)
+    return target, drafter
+
+
+# ---------------------------------------------------------------------------
+# Closed-form expectations (enumeration over draft paths).
+# ---------------------------------------------------------------------------
+
+
+def _paths(vocab: int, length: int):
+    return itertools.product(range(vocab), repeat=length)
+
+
+def _path_probs(lm: TabularLM, ctx0: int, path) -> tuple[float, list[np.ndarray]]:
+    """Joint probability of ``path`` under ``lm`` plus the conditional rows
+    visited along it (rows at i = 0..len(path))."""
+    table = np.asarray(lm.table, dtype=np.float64)
+    ctx = ctx0
+    prob = 1.0
+    rows = []
+    for tok in path:
+        rows.append(table[ctx])
+        prob *= float(table[ctx][tok])
+        ctx = (ctx * lm.vocab + tok) % lm.n_contexts
+    rows.append(table[ctx])
+    return prob, rows
+
+
+def exact_expected_accepted(
+    target: TabularLM,
+    drafter: TabularLM,
+    gamma: int,
+    kind: str,
+    ctx0: int = 0,
+) -> float:
+    """E[tau] = sum_ell Pr(tau >= ell), enumerated over all draft paths.
+
+    kind: 'token'  -> Pr(tau>=ell | X^ell) = prod_i min(1, r_i)
+          'block'  -> Pr(tau>=ell | X^ell) = p_ell(X^ell)   (Lemma 3)
+          'ideal'  -> sum_ell sum_{x^ell} min(M_s, M_b)      (Lemma 7/8;
+                      equals the optimum over full-information couplings,
+                      achieved per-iteration by greedy block verification)
+    """
+    assert target.vocab == drafter.vocab and target.order == drafter.order
+    total = 0.0
+    for ell in range(1, gamma + 1):
+        for path in _paths(target.vocab, ell):
+            qs_prob, q_rows = _path_probs(drafter, ctx0, path)
+            pb_prob, p_rows = _path_probs(target, ctx0, path)
+            if qs_prob <= 0.0:
+                continue
+            if kind == "token":
+                acc = 1.0
+                for i, tok in enumerate(path):
+                    acc *= min(1.0, p_rows[i][tok] / q_rows[i][tok])
+            elif kind == "block":
+                acc = 1.0
+                for i, tok in enumerate(path):
+                    acc = min(acc * p_rows[i][tok] / q_rows[i][tok], 1.0)
+            elif kind == "ideal":
+                acc = min(1.0, pb_prob / qs_prob)
+            else:
+                raise ValueError(kind)
+            total += qs_prob * acc
+    return total
+
+
+def exact_output_distribution(
+    target: TabularLM,
+    drafter: TabularLM,
+    gamma: int,
+    length: int,
+    verifier,
+    n_samples: int,
+    key: jax.Array,
+) -> np.ndarray:
+    """Monte-Carlo joint distribution of the first ``length`` output tokens
+    of speculative decoding (one full SpecDec run per sample), flattened to
+    a vector over vocab**length outcomes. Used by losslessness tests."""
+    from repro.core import simulate  # local import to avoid cycle
+
+    toks = simulate.specdec_rollout(
+        key, target, drafter, gamma, verifier, n_samples, length
+    )
+    toks = np.asarray(toks)  # (n_samples, length)
+    codes = np.zeros(n_samples, np.int64)
+    for j in range(length):
+        codes = codes * target.vocab + toks[:, j]
+    counts = np.bincount(codes, minlength=target.vocab**length)
+    return counts / n_samples
+
+
+def target_joint_distribution(
+    target: TabularLM, length: int, ctx0: int = 0
+) -> np.ndarray:
+    """Exact joint distribution of the first ``length`` tokens under M_b."""
+    out = np.zeros(target.vocab**length)
+    for code, path in enumerate(_paths(target.vocab, length)):
+        prob, _ = _path_probs(target, ctx0, path)
+        out[code] = prob
+    return out

@@ -1,0 +1,68 @@
+"""Sampling primitives shared by the drafter, target and verification paths.
+
+All functions are jit-friendly and operate on batched arrays. Probabilities
+are float32; zero-probability entries are handled exactly (categorical
+sampling goes through log-space with -inf for zeros).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def logits_to_probs(
+    logits: jax.Array,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> jax.Array:
+    """Convert raw logits to a sampling distribution.
+
+    temperature == 0.0 means greedy (a point mass on the argmax), matching
+    the convention in the speculative-decoding literature.
+    """
+    logits = logits.astype(jnp.float32)
+    if temperature == 0.0:
+        am = jnp.argmax(logits, axis=-1)
+        return jax.nn.one_hot(am, logits.shape[-1], dtype=jnp.float32)
+    logits = logits / jnp.asarray(temperature, jnp.float32)
+    if top_k and top_k > 0 and top_k < logits.shape[-1]:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, _NEG_INF, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(sorted_probs, axis=-1)
+        # Keep the smallest prefix with cumulative mass >= top_p.
+        keep = cum - sorted_probs < top_p
+        threshold = jnp.min(
+            jnp.where(keep, sorted_logits, jnp.inf), axis=-1, keepdims=True
+        )
+        logits = jnp.where(logits < threshold, _NEG_INF, logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def categorical(key: jax.Array, probs: jax.Array) -> jax.Array:
+    """Sample token ids from (possibly unnormalized) probability rows."""
+    logp = jnp.log(jnp.maximum(probs, 0.0))
+    return jax.random.categorical(key, logp, axis=-1)
+
+
+def gumbel_argmax(key: jax.Array, probs: jax.Array) -> jax.Array:
+    """Alias kept for clarity in kernels/serving code paths."""
+    return categorical(key, probs)
+
+
+def normalize(weights: jax.Array, fallback: jax.Array) -> jax.Array:
+    """Normalize non-negative weights rows; rows with ~zero mass fall back.
+
+    `fallback` must itself be a valid distribution (e.g. the target model
+    row). Used for residual distributions where the residual mass can be
+    exactly zero (drafter == target on that row).
+    """
+    z = jnp.sum(weights, axis=-1, keepdims=True)
+    safe = weights / jnp.maximum(z, 1e-30)
+    return jnp.where(z > 1e-12, safe, fallback)

@@ -1,0 +1,348 @@
+"""Speculative-decoding simulator over tabular oracle models.
+
+This is the measurement harness for the paper's *algorithmic* claims:
+block efficiency (expected decoded tokens per serial target call),
+losslessness, and the token/block/greedy comparisons of Tables 1 and 3.
+The real batched serving system lives in ``repro.serving``; this module
+isolates the verification algorithms from model-execution concerns so the
+distributional properties can be tested exactly and fast.
+
+Greedy block verification (Appendix C)
+--------------------------------------
+Algorithm 6 replaces the target distribution with Eq. (23)'s *joint-ratio*
+modification after every iteration, and the modifications nest. We
+implement this faithfully with a stack of "modification layers": layer
+``l`` is created when an iteration rejects with ``tau < gamma - 1`` and is
+parameterized by
+
+* ``rem``: how many upcoming positions it still covers
+  (initially ``gamma - tau - 1``), and
+* ``rho``: the running ratio T_{l-1}(path | anchor) / M_s(path | anchor)
+  accumulated along the realized output path since the layer's anchor,
+  where T_{l-1} is the effective target *below* this layer.
+
+The effective target row at a position is then computed bottom-up:
+``row_0 = M_b`` and ``row_l = normalize(max(rho_l * row_{l-1} - M_s, 0))``
+for each active layer. Because every new layer's window provably outlives
+all existing ones (new rem = gamma - n > old rem - n), layers expire in
+creation order and at most ``gamma - 1`` are active at once; we keep
+``gamma`` fixed slots sorted by remaining length.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling, verification
+from repro.core.oracle import TabularLM
+
+
+class SimState(NamedTuple):
+    key: jax.Array
+    ctx_t: jax.Array       # (B,) target-context codes
+    ctx_d: jax.Array       # (B,) drafter-context codes
+    layer_rem: jax.Array   # (B, D) remaining window per modification layer
+    layer_rho: jax.Array   # (B, D) running joint ratio per layer
+
+
+def init_state(key: jax.Array, batch: int, gamma: int) -> SimState:
+    return SimState(
+        key=key,
+        ctx_t=jnp.zeros((batch,), jnp.int32),
+        ctx_d=jnp.zeros((batch,), jnp.int32),
+        layer_rem=jnp.zeros((batch, gamma), jnp.int32),
+        layer_rho=jnp.ones((batch, gamma), jnp.float32),
+    )
+
+
+def _sort_layers(state: SimState) -> SimState:
+    """Sort layer slots by remaining window ascending (expired slots last),
+    so a static bottom-up application order is valid for the iteration."""
+    key = jnp.where(state.layer_rem > 0, state.layer_rem, 10**6)
+    order = jnp.argsort(key, axis=1)
+    return state._replace(
+        layer_rem=jnp.take_along_axis(state.layer_rem, order, axis=1),
+        layer_rho=jnp.take_along_axis(state.layer_rho, order, axis=1),
+    )
+
+
+def _effective_stack(
+    base_row: jax.Array,   # (B, V) M_b(.|ctx)
+    q_row: jax.Array,      # (B, V) M_s(.|ctx)
+    rho: jax.Array,        # (B, D)
+    active: jax.Array,     # (B, D) bool
+) -> jax.Array:
+    """Rows fed into each layer, bottom-up: (B, D+1, V); [:, -1] is the
+    effective (top) target row."""
+    d = rho.shape[1]
+    rows = [base_row]
+    for l in range(d):
+        new = sampling.normalize(
+            jnp.maximum(rho[:, l, None] * rows[-1] - q_row, 0.0),
+            fallback=rows[-1],
+        )
+        rows.append(jnp.where(active[:, l, None], new, rows[-1]))
+    return jnp.stack(rows, axis=1)
+
+
+def _draft_and_score(
+    key: jax.Array,
+    target: TabularLM,
+    drafter: TabularLM,
+    state: SimState,
+    gamma: int,
+    greedy: bool,
+):
+    """Sample a draft block; collect drafter rows, effective target rows and
+    (greedy) the full layer-input row stacks along the path."""
+    d = state.layer_rem.shape[1]
+    rem0 = state.layer_rem  # (B, D), sorted ascending among active
+
+    def step(carry, inp):
+        ctx_t, ctx_d, rho = carry
+        key_i, pos = inp
+        q_row = drafter.next_probs(ctx_d)
+        base = target.next_probs(ctx_t)
+        active = pos < rem0  # (B, D)
+        if greedy:
+            stack = _effective_stack(base, q_row, rho, active)
+        else:
+            stack = jnp.broadcast_to(
+                base[:, None], (base.shape[0], d + 1, base.shape[1])
+            )
+        top = stack[:, -1]
+        tok = sampling.categorical(key_i, q_row)
+        if greedy:
+            in_tok = jnp.take_along_axis(
+                stack[:, :d], tok[:, None, None].repeat(d, 1), axis=2
+            )[..., 0]                                   # (B, D) rows_l(tok)
+            q_tok = jnp.take_along_axis(q_row, tok[:, None], axis=1)
+            factor = jnp.where(active, in_tok / jnp.maximum(q_tok, 1e-30), 1.0)
+            rho = rho * factor
+        carry = (target.advance(ctx_t, tok), drafter.advance(ctx_d, tok), rho)
+        return carry, (tok, q_row, top, stack)
+
+    keys = jax.random.split(key, gamma)
+    carry0 = (state.ctx_t, state.ctx_d, state.layer_rho)
+    (ctx_t_end, ctx_d_end, _), (toks, q_rows, tops, stacks) = jax.lax.scan(
+        step, carry0, (keys, jnp.arange(gamma))
+    )
+    # Final (offset gamma) rows. Layers never cover offset >= gamma, so the
+    # effective row equals the base target row there.
+    q_last = drafter.next_probs(ctx_d_end)
+    p_last = target.next_probs(ctx_t_end)
+
+    draft_tokens = toks.T                                   # (B, G)
+    q_rows = jnp.swapaxes(q_rows, 0, 1)                     # (B, G, V)
+    q_ext = jnp.concatenate([q_rows, q_last[:, None]], 1)   # (B, G+1, V)
+    p_rows = jnp.concatenate(
+        [jnp.swapaxes(tops, 0, 1), p_last[:, None]], axis=1
+    )                                                       # (B, G+1, V)
+    stacks = jnp.swapaxes(stacks, 0, 1)                     # (B, G, D+1, V)
+    return draft_tokens, q_rows, q_ext, p_rows, stacks
+
+
+def _advance_contexts(target, drafter, state, tokens, num_tokens, gamma):
+    def step(carry, pos):
+        ctx_t, ctx_d = carry
+        tok = tokens[:, pos]
+        take = pos < num_tokens
+        ctx_t = jnp.where(take, target.advance(ctx_t, tok), ctx_t)
+        ctx_d = jnp.where(take, drafter.advance(ctx_d, tok), ctx_d)
+        return (ctx_t, ctx_d), None
+
+    (ctx_t, ctx_d), _ = jax.lax.scan(
+        step, (state.ctx_t, state.ctx_d), jnp.arange(gamma + 1)
+    )
+    return ctx_t, ctx_d
+
+
+def _roll_layers(
+    state: SimState,
+    res: verification.VerifyResult,
+    draft_tokens: jax.Array,
+    q_rows: jax.Array,   # (B, G, V)
+    q_ext: jax.Array,    # (B, G+1, V)
+    p_rows: jax.Array,   # (B, G+1, V) effective rows along the path
+    stacks: jax.Array,   # (B, G, D+1, V) layer-input rows along the path
+    gamma: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Update (rem, rho) of existing layers along the accepted path and
+    append the new layer created by this iteration's rejection."""
+    b, d = state.layer_rem.shape
+    tau = res.num_accepted
+    n = res.num_tokens
+    bonus = jnp.take_along_axis(res.tokens, tau[:, None], axis=1)[:, 0]
+
+    rem0 = state.layer_rem                      # (B, D)
+    pos = jnp.arange(gamma)[None, :, None]      # (1, G, 1)
+    active_pos = pos < rem0[:, None, :]         # (B, G, D)
+
+    # Per-position per-layer ratio factors along the draft path.
+    tok_b = draft_tokens[:, :, None, None].repeat(d, 2)     # (B, G, D, 1)
+    in_tok = jnp.take_along_axis(stacks[:, :, :d], tok_b, axis=3)[..., 0]
+    q_tok = jnp.take_along_axis(q_rows, draft_tokens[..., None], axis=2)
+    factors = jnp.where(
+        active_pos, in_tok / jnp.maximum(q_tok, 1e-30), 1.0
+    )                                           # (B, G, D)
+    # Product over accepted draft positions i < tau.
+    cum = jnp.cumprod(factors, axis=1)
+    cum = jnp.concatenate([jnp.ones((b, 1, d), jnp.float32), cum], axis=1)
+    prefix_prod = jnp.take_along_axis(
+        cum, tau[:, None, None].repeat(d, 2), axis=1
+    )[:, 0]                                     # (B, D)
+
+    # Bonus-token factor at offset tau (identity beyond any window or at
+    # offset gamma, where no layer is ever active).
+    stacks_ext = jnp.concatenate(
+        [stacks, jnp.broadcast_to(
+            p_rows[:, gamma][:, None, None], (b, 1, d + 1, p_rows.shape[-1])
+        )], axis=1
+    )                                           # (B, G+1, D+1, V)
+    stack_tau = jnp.take_along_axis(
+        stacks_ext, tau[:, None, None, None].repeat(d + 1, 2)
+        .repeat(stacks_ext.shape[-1], 3), axis=1
+    )[:, 0]                                     # (B, D+1, V)
+    in_bonus = jnp.take_along_axis(
+        stack_tau[:, :d], bonus[:, None, None].repeat(d, 1), axis=2
+    )[..., 0]                                   # (B, D)
+    q_bonus = jnp.take_along_axis(
+        jnp.take_along_axis(
+            q_ext, tau[:, None, None].repeat(q_ext.shape[-1], 2), axis=1
+        )[:, 0],
+        bonus[:, None], axis=1,
+    )                                           # (B, 1)
+    bonus_active = tau[:, None] < rem0
+    bonus_factor = jnp.where(
+        bonus_active, in_bonus / jnp.maximum(q_bonus, 1e-30), 1.0
+    )
+
+    rho = state.layer_rho * prefix_prod * bonus_factor
+    rem = jnp.maximum(rem0 - n[:, None], 0)
+    rho = jnp.where(rem > 0, rho, 1.0)
+
+    # New layer: rho0 = T_top(X^tau, Y | anchor) / M_s(X^tau, Y | anchor).
+    p_tok = jnp.take_along_axis(
+        p_rows[:, :gamma], draft_tokens[..., None], axis=2
+    )[..., 0]
+    ratio_path = jnp.where(
+        q_tok[..., 0] > 0, p_tok / jnp.maximum(q_tok[..., 0], 1e-30), 0.0
+    )
+    cum_top = jnp.concatenate(
+        [jnp.ones((b, 1), jnp.float32), jnp.cumprod(ratio_path, axis=1)],
+        axis=1,
+    )
+    top_prefix = jnp.take_along_axis(cum_top, tau[:, None], axis=1)[:, 0]
+    top_bonus = jnp.take_along_axis(
+        stack_tau[:, d], bonus[:, None], axis=1
+    )[:, 0]
+    rho0 = top_prefix * top_bonus / jnp.maximum(q_bonus[:, 0], 1e-30)
+    m_new = res.mod_remaining                   # gamma - tau - 1 (>= 0)
+
+    # Insert into the slot with the smallest remaining window (an expired
+    # one is guaranteed to exist: at most gamma-1 layers are active).
+    slot = jnp.argmin(rem, axis=1)
+    onehot = jax.nn.one_hot(slot, d, dtype=bool)
+    insert = (m_new > 0)[:, None] & onehot
+    rem = jnp.where(insert, m_new[:, None], rem)
+    rho = jnp.where(insert, rho0[:, None], rho)
+    return rem, rho
+
+
+def _one_iteration(
+    state: SimState, target: TabularLM, drafter: TabularLM, gamma: int,
+    verifier_name: str,
+):
+    greedy = verifier_name == "greedy_block"
+    verify = verification.get_verifier(verifier_name)
+    state = _sort_layers(state)
+    key, key_draft, key_verify = jax.random.split(state.key, 3)
+    draft_tokens, q_rows, q_ext, p_rows, stacks = _draft_and_score(
+        key_draft, target, drafter, state, gamma, greedy
+    )
+    res = verify(key_verify, draft_tokens, q_rows, p_rows)
+    ctx_t, ctx_d = _advance_contexts(
+        target, drafter, state, res.tokens, res.num_tokens, gamma
+    )
+    if greedy:
+        rem, rho = _roll_layers(
+            state, res, draft_tokens, q_rows, q_ext, p_rows, stacks, gamma
+        )
+    else:
+        rem, rho = state.layer_rem, state.layer_rho
+    new_state = SimState(
+        key=key, ctx_t=ctx_t, ctx_d=ctx_d, layer_rem=rem, layer_rho=rho
+    )
+    return new_state, res
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "verifier_name", "batch", "n_iters")
+)
+def block_efficiency(
+    key: jax.Array,
+    target: TabularLM,
+    drafter: TabularLM,
+    gamma: int,
+    verifier_name: str,
+    batch: int = 512,
+    n_iters: int = 64,
+) -> jax.Array:
+    """Average decoded tokens per target call (= E[tau] + 1) over
+    ``batch`` independent chains and ``n_iters`` SpecDec iterations."""
+    state = init_state(key, batch, gamma)
+
+    def step(st, _):
+        st, res = _one_iteration(st, target, drafter, gamma, verifier_name)
+        return st, res.num_tokens
+
+    _, nums = jax.lax.scan(step, state, None, length=n_iters)
+    return jnp.mean(nums.astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gamma", "verifier_name", "n_samples", "length"),
+)
+def specdec_rollout(
+    key: jax.Array,
+    target: TabularLM,
+    drafter: TabularLM,
+    gamma: int,
+    verifier_name: str,
+    n_samples: int,
+    length: int,
+) -> jax.Array:
+    """Run ``n_samples`` independent SpecDec chains and return the first
+    ``length`` output tokens of each — the losslessness witness."""
+    state = init_state(key, n_samples, gamma)
+    buf = jnp.zeros((n_samples, length + gamma + 1), jnp.int32)
+    count = jnp.zeros((n_samples,), jnp.int32)
+
+    def step(carry, _):
+        st, buf, count = carry
+        frozen = count >= length  # chain already emitted `length` tokens
+
+        st, res = _one_iteration(st, target, drafter, gamma, verifier_name)
+        # Frozen chains keep iterating (their state updates are harmless)
+        # but their writes are redirected to a per-row dustbin slot (the
+        # last buffer column, which is never read back: valid writes stop
+        # at length - 1 + gamma = buflen - 2).
+        pos = jnp.arange(gamma + 1)[None, :]
+        valid = (pos < res.num_tokens[:, None]) & (~frozen[:, None])
+        write_idx = jnp.where(valid, count[:, None] + pos, buf.shape[1] - 1)
+        b_idx = jnp.broadcast_to(
+            jnp.arange(n_samples)[:, None], write_idx.shape
+        )
+        buf = buf.at[b_idx, write_idx].set(res.tokens)
+        count = jnp.where(frozen, count, count + res.num_tokens)
+        return (st, buf, count), None
+
+    (state, buf, count), _ = jax.lax.scan(
+        step, (state, buf, count), None, length=length
+    )
+    return buf[:, :length]

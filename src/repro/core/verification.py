@@ -1,0 +1,281 @@
+"""Draft-verification algorithms for speculative decoding.
+
+Implements, in batched JAX:
+
+* ``token_verify``        — Algorithm 1 (Leviathan et al., 2022), the
+                            standard independent per-token accept/reject.
+* ``block_verify``        — Algorithm 2, the paper's contribution: joint
+                            (coupled) verification of the whole block.
+                            Lossless (Thm 1) and optimal (Thm 2).
+* ``greedy_block_verify`` — Algorithm 4 (Appendix C): accepts more tokens
+                            per iteration but requires the caller to apply
+                            the distribution modification (Algorithm 5)
+                            for the next ``gamma - tau - 1`` positions.
+
+Shapes (``B`` = batch, ``G`` = gamma = draft length, ``V`` = vocab):
+
+* ``draft_tokens``: ``(B, G)`` int32 — tokens sampled from the drafter.
+* ``q_probs``:      ``(B, G, V)``    — drafter next-token distributions
+                                       M_s(. | c, X^i) for i = 0..G-1.
+* ``p_probs``:      ``(B, G+1, V)``  — target next-token distributions
+                                       M_b(. | c, X^i) for i = 0..G.
+
+All three return a :class:`VerifyResult` whose ``tokens[:, :num_tokens]``
+are the decoded tokens for this iteration: ``tau`` accepted draft tokens
+followed by one bonus/corrected token. Functions are pure and jit-safe.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+
+_EPS = 1e-30
+
+
+class VerifyResult(NamedTuple):
+    tokens: jax.Array        # (B, G+1) int32; valid prefix of length num_tokens
+    num_accepted: jax.Array  # (B,) int32 — tau, number of accepted draft tokens
+    num_tokens: jax.Array    # (B,) int32 — tau + 1 (accepted + bonus token)
+    mod_remaining: jax.Array  # (B,) int32 — greedy only: positions whose target
+    #                           distribution must be modified (Algorithm 5);
+    #                           zero for token/block verification.
+
+
+def _gather(probs: jax.Array, tokens: jax.Array) -> jax.Array:
+    """probs (B, K, V), tokens (B, K) -> (B, K) probs of the given tokens."""
+    return jnp.take_along_axis(probs, tokens[..., None], axis=-1)[..., 0]
+
+
+def _row_at(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """x (B, K, V), idx (B,) -> (B, V) row x[b, idx[b]]."""
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
+def _assemble(
+    draft_tokens: jax.Array, bonus: jax.Array, tau: jax.Array
+) -> jax.Array:
+    """Lay out [X_1..X_tau, Y, pad...] as an (B, G+1) int32 array."""
+    b, g = draft_tokens.shape
+    pos = jnp.arange(g + 1)[None, :]
+    padded = jnp.concatenate(
+        [draft_tokens, jnp.zeros((b, 1), draft_tokens.dtype)], axis=1
+    )
+    out = jnp.where(pos < tau[:, None], padded, 0)
+    out = jnp.where(pos == tau[:, None], bonus[:, None], out)
+    return out.astype(jnp.int32)
+
+
+def _ratios(p_tok: jax.Array, q_tok: jax.Array) -> jax.Array:
+    """M_b/M_s at the draft tokens; q == 0 (never drafted) -> ratio 0.
+
+    A drafter cannot emit a zero-probability token, so q_tok == 0 only
+    happens with adversarial inputs; following the paper's reference
+    implementation (non-finite ratio => reject) we map it to ratio 0.
+    """
+    return jnp.where(q_tok > 0, p_tok / jnp.maximum(q_tok, _EPS), 0.0)
+
+
+def token_verify(
+    key: jax.Array,
+    draft_tokens: jax.Array,
+    q_probs: jax.Array,
+    p_probs: jax.Array,
+) -> VerifyResult:
+    """Algorithm 1: accept X_i independently w.p. min(1, p/q); stop at the
+    first rejection; bonus token from the token residual (Eq. 2)."""
+    b, g = draft_tokens.shape
+    q_probs = q_probs.astype(jnp.float32)
+    p_probs = p_probs.astype(jnp.float32)
+    key_u, key_y = jax.random.split(key)
+    u = jax.random.uniform(key_u, (b, g))
+
+    p_tok = _gather(p_probs[:, :g], draft_tokens)
+    q_tok = _gather(q_probs, draft_tokens)
+    ratio = _ratios(p_tok, q_tok)
+    accept = u <= jnp.minimum(ratio, 1.0)
+    # tau = number of leading accepts.
+    tau = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+    p_tau = _row_at(p_probs, tau)  # (B, V): M_b(.|c, X^tau)
+    q_tau = _row_at(q_probs, jnp.minimum(tau, g - 1))
+    residual = sampling.normalize(
+        jnp.maximum(p_tau - q_tau, 0.0), fallback=p_tau
+    )
+    bonus_dist = jnp.where((tau == g)[:, None], p_tau, residual)
+    bonus = sampling.categorical(key_y, bonus_dist)
+
+    return VerifyResult(
+        tokens=_assemble(draft_tokens, bonus, tau),
+        num_accepted=tau,
+        num_tokens=tau + 1,
+        mod_remaining=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def _block_ps(ratio: jax.Array) -> jax.Array:
+    """p_i = min(p_{i-1} * r_i, 1) scan (Eq. 8). ratio (B, G) -> (B, G)."""
+    b = ratio.shape[0]
+
+    def step(p_prev, r_i):
+        p_i = jnp.minimum(p_prev * r_i, 1.0)
+        return p_i, p_i
+
+    _, ps = jax.lax.scan(step, jnp.ones((b,), jnp.float32), ratio.T)
+    return ps.T  # (B, G): p_1 .. p_G
+
+
+def block_verify(
+    key: jax.Array,
+    draft_tokens: jax.Array,
+    q_probs: jax.Array,
+    p_probs: jax.Array,
+    residual_sums: Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+    | None = None,
+) -> VerifyResult:
+    """Algorithm 2 (the paper's contribution): block verification.
+
+    ``residual_sums(p_scale, p_rows, q_rows) -> (B, K)`` optionally
+    overrides the vocab reductions ``sum_x max(p_scale*P - Q, 0)`` with a
+    fused implementation (the Pallas kernel in repro.kernels); the default
+    is the pure-jnp expression.
+    """
+    b, g = draft_tokens.shape
+    q_probs = q_probs.astype(jnp.float32)
+    p_probs = p_probs.astype(jnp.float32)
+    key_u, key_y = jax.random.split(key)
+    u = jax.random.uniform(key_u, (b, g))
+
+    p_tok = _gather(p_probs[:, :g], draft_tokens)
+    q_tok = _gather(q_probs, draft_tokens)
+    ratio = _ratios(p_tok, q_tok)
+
+    ps = _block_ps(ratio)                     # (B, G): p_1..p_G
+    p_full = jnp.concatenate([jnp.ones((b, 1), jnp.float32), ps], axis=1)
+
+    def _default_sums(p_scale, p_rows, q_rows):
+        return jnp.sum(
+            jnp.maximum(p_scale[..., None] * p_rows - q_rows, 0.0), axis=-1
+        )
+
+    sums = residual_sums or _default_sums
+    # S_i for i = 0..G-1 : conditioning on X^i uses row i of p_probs/q_probs,
+    # scaled by p_i (Eq. 4). Row G has no drafter distribution (no residual).
+    s_all = sums(p_full[:, :g], p_probs[:, :g], q_probs)  # (B, G)
+
+    # Acceptance probabilities h_i for i = 1..G (Eq. 4; h_G = p_G).
+    p_i = ps[:, : g - 1]                      # p_1..p_{G-1}
+    s_i = s_all[:, 1:g]                       # S_1..S_{G-1}
+    h_mid = jnp.where(
+        p_i >= 1.0, 1.0, s_i / jnp.maximum(s_i + 1.0 - p_i, _EPS)
+    )
+    h = jnp.concatenate([h_mid, ps[:, g - 1 :]], axis=1)  # (B, G): h_1..h_G
+
+    accept = u <= h
+    idx = jnp.arange(1, g + 1)[None, :]
+    tau = jnp.max(jnp.where(accept, idx, 0), axis=1)  # longest accepted block
+
+    # Bonus token: from M_b(.|X^G) when tau == G, else block residual (Eq. 3).
+    p_tau_scale = jnp.take_along_axis(p_full, tau[:, None], axis=1)[:, 0]
+    p_row = _row_at(p_probs, tau)
+    q_row = _row_at(q_probs, jnp.minimum(tau, g - 1))
+    residual = sampling.normalize(
+        jnp.maximum(p_tau_scale[:, None] * p_row - q_row, 0.0), fallback=p_row
+    )
+    bonus_dist = jnp.where((tau == g)[:, None], p_row, residual)
+    bonus = sampling.categorical(key_y, bonus_dist)
+
+    return VerifyResult(
+        tokens=_assemble(draft_tokens, bonus, tau),
+        num_accepted=tau,
+        num_tokens=tau + 1,
+        mod_remaining=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def greedy_block_verify(
+    key: jax.Array,
+    draft_tokens: jax.Array,
+    q_probs: jax.Array,
+    p_probs: jax.Array,
+) -> VerifyResult:
+    """Algorithm 4 (Appendix C): greedy block verification.
+
+    Accepts at least as many tokens as block verification in a single
+    iteration (Thm 3) but is only lossless when the caller modifies the
+    target distribution for the next ``mod_remaining`` positions according
+    to Algorithm 5 (see ``modified_target_row``).
+    """
+    b, g = draft_tokens.shape
+    q_probs = q_probs.astype(jnp.float32)
+    p_probs = p_probs.astype(jnp.float32)
+    key_u, key_y = jax.random.split(key)
+    u = jax.random.uniform(key_u, (b, g))
+
+    p_tok = _gather(p_probs[:, :g], draft_tokens)
+    q_tok = _gather(q_probs, draft_tokens)
+    ratio = _ratios(p_tok, q_tok)
+    # ptilde_i = prod_{j<=i} r_j, no clipping (Appendix C).
+    ptilde = jnp.cumprod(ratio, axis=1)                      # (B, G): i=1..G
+    ptilde_full = jnp.concatenate(
+        [jnp.ones((b, 1), jnp.float32), ptilde], axis=1
+    )
+
+    # h_i for i = 1..G-1 (Algorithm 4 line 5).
+    scale = ptilde[:, : g - 1, None]                         # ptilde_1..G-1
+    p_rows = p_probs[:, 1:g]
+    q_rows = q_probs[:, 1:g]
+    num = jnp.sum(jnp.maximum(scale * p_rows - q_rows, 0.0), axis=-1)
+    den = jnp.sum(jnp.maximum(q_rows - scale * p_rows, 0.0), axis=-1)
+    h_mid = jnp.where(den > _EPS, num / jnp.maximum(den, _EPS), jnp.inf)
+    h_last = jnp.minimum(ptilde[:, g - 1 :], 1.0)            # accept X^G step
+    h = jnp.concatenate([h_mid, h_last], axis=1)
+
+    accept = u <= h
+    idx = jnp.arange(1, g + 1)[None, :]
+    tau = jnp.max(jnp.where(accept, idx, 0), axis=1)
+
+    pt_tau = jnp.take_along_axis(ptilde_full, tau[:, None], axis=1)[:, 0]
+    p_row = _row_at(p_probs, tau)
+    q_row = _row_at(q_probs, jnp.minimum(tau, g - 1))
+    residual = sampling.normalize(
+        jnp.maximum(pt_tau[:, None] * p_row - q_row, 0.0), fallback=p_row
+    )
+    bonus_dist = jnp.where((tau == g)[:, None], p_row, residual)
+    bonus = sampling.categorical(key_y, bonus_dist)
+
+    mod_remaining = jnp.where(tau == g, 0, g - tau - 1).astype(jnp.int32)
+    return VerifyResult(
+        tokens=_assemble(draft_tokens, bonus, tau),
+        num_accepted=tau,
+        num_tokens=tau + 1,
+        mod_remaining=jnp.maximum(mod_remaining, 0),
+    )
+
+
+def modified_target_row(
+    p_row: jax.Array, q_row: jax.Array
+) -> jax.Array:
+    """Algorithm 5 (Eq. 23): the modified target distribution used for the
+    ``mod_remaining`` positions after a greedy-block-verification step:
+    M_new ∝ max(M_b - M_s, 0), falling back to M_b when M_b == M_s."""
+    return sampling.normalize(jnp.maximum(p_row - q_row, 0.0), fallback=p_row)
+
+
+_VERIFIERS = {
+    "token": token_verify,
+    "block": block_verify,
+    "greedy_block": greedy_block_verify,
+}
+
+
+def get_verifier(name: str):
+    if name not in _VERIFIERS:
+        raise ValueError(
+            f"unknown verifier {name!r}; choose from {sorted(_VERIFIERS)}"
+        )
+    return _VERIFIERS[name]

@@ -1,0 +1,42 @@
+"""Deterministic token pipeline: corpus -> packed (tokens, labels) batches."""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.synthetic import generate_corpus
+from repro.data.tokenizer import ByteTokenizer
+
+
+def packed_stream(seed: int, style: str = "mixed") -> np.ndarray:
+    """Flat token stream: BOS-joined lines of the synthetic corpus."""
+    tok = ByteTokenizer()
+    lines = generate_corpus(seed, style=style)
+    ids: list[int] = []
+    for ln in lines:
+        ids.extend(tok.encode(ln, bos=True, eos=True))
+    return np.asarray(ids, np.int32)
+
+
+def batches(
+    seed: int,
+    batch_size: int,
+    seq_len: int,
+    n_steps: int,
+    style: str = "mixed",
+) -> Iterator[dict]:
+    """Yields {tokens (B, S), labels (B, S)} — labels are next tokens."""
+    stream = packed_stream(seed, style)
+    need = batch_size * (seq_len + 1)
+    rng = np.random.default_rng(seed + 1)
+    n = len(stream) - seq_len - 1
+    for _ in range(n_steps):
+        starts = rng.integers(0, n, size=batch_size)
+        chunk = np.stack([stream[s : s + seq_len + 1] for s in starts])
+        yield {
+            "tokens": chunk[:, :-1].astype(np.int32),
+            "labels": chunk[:, 1:].astype(np.int32),
+        }
+    del need

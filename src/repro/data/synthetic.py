@@ -1,0 +1,66 @@
+"""Seeded synthetic corpora.
+
+The paper evaluates on 8 NLP datasets; we cannot ship those, so we
+generate deterministic corpora with enough structure for a small
+transformer to learn (and for a drafter to partially agree with a target
+— the axis the paper's experiments sweep). Styles:
+
+* ``prose``  — template-grammar sentences over a Zipfian word list;
+* ``math``   — grade-school-style arithmetic lines (GSM8K stand-in);
+* ``mixed``  — interleaving of the two.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_CONSONANTS = "bcdfghjklmnpqrstvwz"
+_VOWELS = "aeiou"
+
+
+def _word_list(rng: np.random.Generator, n: int) -> list[str]:
+    words = []
+    for _ in range(n):
+        syll = rng.integers(1, 4)
+        w = "".join(
+            rng.choice(list(_CONSONANTS)) + rng.choice(list(_VOWELS))
+            for _ in range(syll)
+        )
+        words.append(w)
+    return words
+
+
+def _prose_line(rng: np.random.Generator, words: list[str], zipf_p) -> str:
+    n = int(rng.integers(4, 12))
+    idx = rng.choice(len(words), size=n, p=zipf_p)
+    toks = [words[i] for i in idx]
+    return " ".join(toks).capitalize() + "."
+
+
+def _math_line(rng: np.random.Generator) -> str:
+    a, b = int(rng.integers(2, 99)), int(rng.integers(2, 99))
+    op = rng.choice(["+", "-", "*"])
+    val = {"+": a + b, "-": a - b, "*": a * b}[op]
+    return f"Q: what is {a} {op} {b}? A: {val}."
+
+
+def generate_corpus(
+    seed: int, n_lines: int = 4000, style: str = "mixed"
+) -> list[str]:
+    rng = np.random.default_rng(seed)
+    words = _word_list(rng, 256)
+    ranks = np.arange(1, len(words) + 1, dtype=np.float64)
+    zipf_p = (1.0 / ranks) / np.sum(1.0 / ranks)
+    lines = []
+    for _ in range(n_lines):
+        if style == "prose" or (style == "mixed" and rng.random() < 0.5):
+            lines.append(_prose_line(rng, words, zipf_p))
+        else:
+            lines.append(_math_line(rng))
+    return lines
+
+
+def generate_prompts(seed: int, n: int, style: str = "mixed") -> list[str]:
+    """Held-out prompt prefixes for serving benchmarks."""
+    lines = generate_corpus(seed + 10_000, n, style)
+    return [ln[: max(8, len(ln) // 2)] for ln in lines]

@@ -1,0 +1,29 @@
+"""Byte-level tokenizer: 256 byte values + BOS/EOS/PAD specials."""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+VOCAB_SIZE = 259
+
+
+class ByteTokenizer:
+    vocab_size = VOCAB_SIZE
+    pad_id = PAD_ID
+    bos_id = BOS_ID
+    eos_id = EOS_ID
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> list[int]:
+        ids = list(text.encode("utf-8"))
+        if bos:
+            ids = [BOS_ID] + ids
+        if eos:
+            ids = ids + [EOS_ID]
+        return ids
+
+    def decode(self, ids) -> str:
+        ids = [int(i) for i in np.asarray(ids).reshape(-1) if int(i) < 256]
+        return bytes(ids).decode("utf-8", errors="replace")

@@ -1,0 +1,189 @@
+"""Sharding rules: logical parameter axes -> mesh axes, with per-tensor
+divisibility fallback (e.g. smollm's 9 heads cannot shard over model=16:
+that tensor falls back to replication while its FFN still shards).
+
+Parameter scheme (2-D "TP + FSDP"):
+  * model axis: heads / kv_heads / ffn / vocab (tensor parallelism)
+  * data axes (+pod): the embed dim of weight matrices (FSDP-style weight
+    sharding — XLA inserts per-layer all-gathers). This is what makes the
+    123B config fit 16 GB/chip; see EXPERIMENTS.md.
+
+Cache scheme:
+  * batch over data axes when divisible; for ``long_500k`` (batch=1) the
+    KV/state sequence dim shards over data instead (sequence parallelism
+    for decode: XLA turns the attention reduction into an all-reduce).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.attention import KVCache
+from repro.models.model import Model
+from repro.models.ssm import SSMEntry, SSMVerify
+from repro.models.transformer import CrossKV
+
+# logical axis -> preferred mesh axis (None = replicate)
+MODEL_AXES = {"heads": "model", "kv_heads": "model", "ffn": "model",
+              "vocab": "model", "experts": None, "embed": None}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _mesh_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        import math
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def param_spec(
+    logical: tuple, shape: tuple, mesh: Mesh, fsdp: bool = True,
+    experts_axis: str | None = None,
+) -> P:
+    """Map one tensor's logical axes to a PartitionSpec.
+
+    ``experts_axis``: mesh axis for expert parallelism (e.g. "data") —
+    expert-sharded weights make expert-grad reduction local instead of a
+    full all-reduce over the data axis (see EXPERIMENTS.md §Perf)."""
+    dax = data_axes(mesh)
+    out: list = []
+    used_data = False
+    is_expert = "experts" in logical
+    for name, dim in zip(logical, shape):
+        axis = MODEL_AXES.get(name) if name else None
+        if name == "experts" and experts_axis is not None:
+            axis = experts_axis
+        if axis is not None and dim % _mesh_size(mesh, axis) == 0:
+            out.append(axis)
+            if axis == "data" or (isinstance(axis, tuple) and "data" in axis):
+                used_data = True
+        elif (
+            fsdp and not used_data and name == "embed"
+            and not (is_expert and experts_axis)
+            and dim % _mesh_size(mesh, dax) == 0 and dax
+        ):
+            out.append(dax if len(dax) > 1 else dax[0])
+            used_data = True
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_shardings(model: Model, mesh: Mesh, fsdp: bool = True,
+                    experts_axis: str | None = None):
+    axes = model.logical_axes()
+    shapes = model.abstract_params()
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(
+            mesh, param_spec(ax, sh.shape, mesh, fsdp, experts_axis)
+        ),
+        axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+_SEQ_SHARD_MIN = 4096  # shard the KV sequence dim only when it is long
+
+
+def _entry_spec(leaf_shape, batch_dim, seq_dim, model_dim, mesh, shard_seq):
+    """Spec for one cache leaf.
+
+    * batch over the data axes when divisible; for batch=1 long-context
+      (``shard_seq``) the sequence dim takes the data axes instead;
+    * long KV sequence dims additionally shard over "model" (the KV-head
+      dim of GQA caches is rarely divisible by model=16, and 32k x 128
+      caches otherwise dwarf HBM) — decode attention then runs as a
+      partial softmax + all-reduce, flash-decode style;
+    * short (ring/window) caches stay unsharded on the sequence dim.
+    """
+    dax = data_axes(mesh)
+    n_data = _mesh_size(mesh, dax)
+    n_model = mesh.shape["model"]
+    spec = [None] * len(leaf_shape)
+    if not shard_seq and leaf_shape[batch_dim] % n_data == 0 and dax:
+        spec[batch_dim] = dax if len(dax) > 1 else dax[0]
+    elif (
+        shard_seq and seq_dim is not None
+        and leaf_shape[seq_dim] % n_data == 0 and dax
+    ):
+        spec[seq_dim] = dax if len(dax) > 1 else dax[0]
+    if model_dim is not None and leaf_shape[model_dim] % n_model == 0:
+        spec[model_dim] = "model"
+    elif (
+        seq_dim is not None
+        and spec[seq_dim] is None
+        and leaf_shape[seq_dim] >= _SEQ_SHARD_MIN
+        and leaf_shape[seq_dim] % n_model == 0
+    ):
+        spec[seq_dim] = "model"
+    elif (
+        seq_dim is not None
+        and shard_seq
+        and spec[seq_dim] is not None
+        and leaf_shape[seq_dim] % (n_data * n_model) == 0
+    ):
+        # batch=1 long-context: fold model into the sequence shard too
+        cur = spec[seq_dim]
+        cur = cur if isinstance(cur, tuple) else (cur,)
+        spec[seq_dim] = cur + ("model",)
+    return P(*spec)
+
+
+def cache_shardings(model: Model, mesh: Mesh, cache, shard_seq: bool = False,
+                    tp: bool = True):
+    """Shardings matching the structure of ``cache`` (committed form).
+    Leaves have a leading group dim; batch is dim 1. ``tp=False`` shards
+    the batch dim only (pure data-parallel serving)."""
+
+    def one(entry):
+        if isinstance(entry, KVCache):
+            # (G, B, C, K, hd)
+            return KVCache(
+                k=NamedSharding(mesh, _entry_spec(entry.k.shape, 1, 2, 3, mesh, shard_seq)),
+                v=NamedSharding(mesh, _entry_spec(entry.v.shape, 1, 2, 3, mesh, shard_seq)),
+            )
+        if isinstance(entry, SSMEntry):
+            # conv (G, B, w-1, conv_dim); state (G, B, H, P, N)
+            return SSMEntry(
+                conv=NamedSharding(mesh, _entry_spec(entry.conv.shape, 1, None, 3, mesh, False)),
+                state=NamedSharding(mesh, _entry_spec(entry.state.shape, 1, None, 2, mesh, False)),
+            )
+        if isinstance(entry, CrossKV):
+            return CrossKV(
+                k=NamedSharding(mesh, _entry_spec(entry.k.shape, 1, None, 3, mesh, False)),
+                v=NamedSharding(mesh, _entry_spec(entry.v.shape, 1, None, 3, mesh, False)),
+            )
+        raise TypeError(type(entry))
+
+    def one_dp(entry):
+        def spec(a):
+            sp = [None] * a.ndim
+            dax = data_axes(mesh)
+            if a.shape[1] % _mesh_size(mesh, dax) == 0 and dax:
+                sp[1] = dax if len(dax) > 1 else dax[0]
+            return NamedSharding(mesh, P(*sp))
+
+        return jax.tree.map(spec, entry)
+
+    return jax.tree.map(
+        one if tp else one_dp, cache,
+        is_leaf=lambda x: isinstance(x, (KVCache, SSMEntry, CrossKV)),
+    )
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    dax = data_axes(mesh)
+    return NamedSharding(mesh, P(dax if len(dax) > 1 else dax[0]))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: flash-decode GQA attention over a (ring) KV cache.
+
+One query token per sequence attends a cache of ``C`` slots. The KV length
+is tiled; the online-softmax running (max, sum, acc) state stays in VMEM
+across KV tiles (innermost sequential grid dim). Supports GQA (all query
+heads of one KV head processed together — an (G, hd) x (hd, Ck) MXU
+matmul per tile), sliding windows, gemma-style logit softcap, and ring
+validity via key positions.
+
+This is the target-model hot spot of speculative decoding at decode time:
+arithmetic intensity ~ O(G) FLOPs/byte, i.e. HBM-bandwidth-bound; the
+kernel exists to reach that bound in one pass rather than XLA's
+materialize-scores path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KV_BLOCK = 512
+_MASK = -1e30
+_INIT_M = -1e30
+
+
+def _kernel(
+    q_ref,       # (G, hd)
+    k_ref,       # (Ck, hd)
+    v_ref,       # (Ck, hd)
+    kpos_ref,    # (1, Ck)
+    qpos_ref,    # (1, 1)
+    out_ref,     # (G, hd)
+    m_ref, l_ref, acc_ref,        # VMEM scratch
+    *, window: int, softcap: float, scale: float,
+):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _INIT_M)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # (G, hd)
+    k = k_ref[...].astype(jnp.float32)                  # (Ck, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # (G, Ck)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = kpos_ref[...]       # (Ck,) — None block dims are squeezed
+    qpos = qpos_ref[0]
+    mask = (kpos >= 0) & (kpos <= qpos)
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, :], s, _MASK)
+
+    m_prev = m_ref[...]                                 # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # (G, Ck)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(cj == pl.num_programs(2) - 1)
+    def _done():
+        out_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret")
+)
+def flash_decode(
+    q: jax.Array,       # (B, H, hd)
+    k: jax.Array,       # (B, C, Kh, hd)
+    v: jax.Array,       # (B, C, Kh, hd)
+    q_pos: jax.Array,   # (B,)
+    k_pos: jax.Array,   # (B, C)
+    window: int = -1,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, hd = q.shape
+    c, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    blk = min(KV_BLOCK, c)
+    pad_c = (-c) % blk
+    if pad_c:
+        k = jnp.pad(k, ((0, 0), (0, pad_c), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_c), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_c)), constant_values=-1)
+    c_pad = k.shape[1]
+
+    qg = q.reshape(b, kh, g, hd)
+    kt = jnp.swapaxes(k, 1, 2)  # (B, Kh, C, hd)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    kernel = functools.partial(
+        _kernel, window=window, softcap=softcap, scale=1.0 / (hd ** 0.5)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, c_pad // blk),
+        in_specs=[
+            pl.BlockSpec((None, None, g, hd), lambda i, j, cj: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, blk, hd), lambda i, j, cj: (i, j, cj, 0)),
+            pl.BlockSpec((None, None, blk, hd), lambda i, j, cj: (i, j, cj, 0)),
+            pl.BlockSpec((None, blk), lambda i, j, cj: (i, cj)),
+            pl.BlockSpec((None, 1), lambda i, j, cj: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, g, hd), lambda i, j, cj: (i, j, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, k_pos, q_pos.reshape(b, 1))
+    return out.reshape(b, h, hd)

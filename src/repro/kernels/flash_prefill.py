@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: causal flash attention for prefill/training.
+
+Standard flash-attention-2 style online softmax over KV tiles, with GQA
+(the KV-head block index is derived from the query-head program id),
+sliding windows and logit softcap. Query tiles are MXU-aligned; the
+(m, l, acc) running state lives in VMEM scratch across the innermost KV
+grid dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 256
+K_BLOCK = 256
+_MASK = -1e30
+_INIT_M = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, out_ref,
+    m_ref, l_ref, acc_ref,
+    *, window: int, softcap: float, scale: float, blkq: int, blkk: int,
+    seq_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _INIT_M)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * blkq + jax.lax.broadcasted_iota(jnp.int32, (blkq, blkk), 0)
+    k_pos = ki * blkk + jax.lax.broadcasted_iota(jnp.int32, (blkq, blkk), 1)
+    mask = (k_pos <= q_pos) & (k_pos < seq_len)
+    if window > 0:
+        mask &= q_pos - k_pos < window
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    s = jax.lax.dot_general(
+        q, k_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask, s, _MASK)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _done():
+        out_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret")
+)
+def flash_prefill(
+    q: jax.Array,       # (B, S, H, hd)
+    k: jax.Array,       # (B, S, Kh, hd)
+    v: jax.Array,       # (B, S, Kh, hd)
+    window: int = -1,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    blkq = min(Q_BLOCK, s)
+    blkk = min(K_BLOCK, s)
+    pad_q = (-s) % blkq
+    pad_k = (-s) % blkk
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, S, hd)
+    kt = jnp.moveaxis(k, 2, 1)  # (B, Kh, S, hd)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, window=window, softcap=softcap, scale=1.0 / (hd ** 0.5),
+        blkq=blkq, blkk=blkk, seq_len=s,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, qt.shape[2] // blkq, kt.shape[2] // blkk),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, blkq, hd), lambda i, hj, qi, ki: (i, hj, qi, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, blkk, hd),
+                lambda i, hj, qi, ki, g=g: (i, hj // g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (None, None, blkk, hd),
+                lambda i, hj, qi, ki, g=g: (i, hj // g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, blkq, hd), lambda i, hj, qi, ki: (i, hj, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blkq, 1), jnp.float32),
+            pltpu.VMEM((blkq, 1), jnp.float32),
+            pltpu.VMEM((blkq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out[:, :, :s], 1, 2)

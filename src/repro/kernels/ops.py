@@ -1,0 +1,55 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container)
+they run in ``interpret=True`` mode, which executes the kernel body in
+Python per grid step — bitwise-faithful to the lowering semantics, used
+by the allclose tests against ``repro.kernels.ref``.
+
+``block_verify_fused`` plugs the fused residual-sum kernel into the
+paper's block-verification algorithm (the ``residual_sums`` hook in
+``repro.core.verification.block_verify``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import verification
+from repro.kernels import flash_decode as _fd
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import verify_residuals as _vr
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def verify_residual_sums(p_scale, p_rows, q_rows):
+    return _vr.verify_residual_sums(
+        p_scale, p_rows, q_rows, interpret=not _on_tpu()
+    )
+
+
+def flash_decode(q, k, v, q_pos, k_pos, window=-1, softcap=0.0):
+    return _fd.flash_decode(
+        q, k, v, q_pos, k_pos, window=window, softcap=softcap,
+        interpret=not _on_tpu(),
+    )
+
+
+def flash_prefill(q, k, v, window=-1, softcap=0.0):
+    return _fp.flash_prefill(
+        q, k, v, window=window, softcap=softcap, interpret=not _on_tpu()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def block_verify_fused(key, draft_tokens, q_probs, p_probs):
+    """Block verification (Algorithm 2) with the vocab reductions running
+    through the fused Pallas kernel."""
+    return verification.block_verify(
+        key, draft_tokens, q_probs, p_probs,
+        residual_sums=verify_residual_sums,
+    )

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MASK = -1e30
+
+
+def verify_residual_sums(
+    p_scale: jax.Array,  # (B, K)
+    p_rows: jax.Array,   # (B, K, V) target rows
+    q_rows: jax.Array,   # (B, K, V) drafter rows
+) -> jax.Array:
+    """S[b, k] = sum_v max(p_scale[b,k] * P[b,k,v] - Q[b,k,v], 0).
+
+    The vocab-reduction at the heart of block verification (Eq. 4):
+    bandwidth-bound over (B, K, V) with V up to 256k."""
+    return jnp.sum(
+        jnp.maximum(
+            p_scale[..., None].astype(jnp.float32) * p_rows.astype(jnp.float32)
+            - q_rows.astype(jnp.float32),
+            0.0,
+        ),
+        axis=-1,
+    )
+
+
+def flash_decode(
+    q: jax.Array,       # (B, H, hd)
+    k: jax.Array,       # (B, C, Kh, hd)
+    v: jax.Array,       # (B, C, Kh, hd)
+    q_pos: jax.Array,   # (B,) position of the query token
+    k_pos: jax.Array,   # (B, C) key positions (negative = invalid slot)
+    window: int = -1,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single-token GQA decode attention over a (ring) KV cache."""
+    b, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qf = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bckd->bkgc", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window > 0:
+        mask &= q_pos[:, None] - k_pos < window
+    scores = jnp.where(mask[:, None, None], scores, _MASK)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, hd)
+
+
+def flash_prefill(
+    q: jax.Array,       # (B, S, H, hd)
+    k: jax.Array,       # (B, S, Kh, hd)
+    v: jax.Array,       # (B, S, Kh, hd)
+    window: int = -1,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Causal (optionally windowed / softcapped) self-attention."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qf = q.reshape(b, s, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,bckd->bkgsc", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(s)
+    mask = pos[None, :, None] >= pos[None, None, :]
+    if window > 0:
+        mask &= pos[None, :, None] - pos[None, None, :] < window
+    scores = jnp.where(mask[:, None, None], scores, _MASK)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsc,bckd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd)

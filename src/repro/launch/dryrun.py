@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, print memory/cost analysis, extract roofline terms.
+
+Must be run as a module (the XLA_FLAGS lines above execute before any jax
+import): ``PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b
+--shape train_4k --mesh single``. Results accumulate as JSON under
+``results/dryrun/`` so the full sweep is resumable.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.launch import roofline, shapes  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model import Model  # noqa: E402
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            variant: str = "base") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    cfg = registry.get_config(arch)
+    model = Model(cfg)
+    shape = shapes.SHAPES[shape_name]
+
+    t0 = time.time()
+    fn, args, in_shardings, out_shardings = shapes.build(
+        model, mesh, shape_name, variant
+    )
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            fn, in_shardings=in_shardings, out_shardings=out_shardings
+        ).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = roofline.collective_bytes(hlo)
+    coll_total = sum(coll.values())
+
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    terms = roofline.roofline_terms(flops, hbm_bytes, coll_total, n_chips)
+
+    n_tokens = shape.global_batch * (
+        shape.seq_len if shape.kind == "train" else
+        shape.seq_len if shape.kind == "prefill" else shapes.GAMMA + 1
+    )
+    mflops = roofline.model_flops(cfg, n_tokens, train=shape.kind == "train")
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "variant": variant,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll_total,
+        "collectives": coll,
+        "bytes_per_device": {
+            "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak": int(getattr(mem, "peak_memory_in_bytes", 0) or (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            )),
+        },
+        "model_flops": mflops,
+        # cost_analysis flops are per-device; model_flops is global.
+        "useful_flops_ratio": (
+            mflops / (flops * n_chips) if flops else 0.0
+        ),
+        **terms,
+    }
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{rec['mesh']}__{variant}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    combos = shapes.pairs()
+    if args.arch != "all":
+        combos = [(a, s) for a, s in combos if a == args.arch]
+    if args.shape != "all":
+        combos = [(a, s) for a, s in combos if s == args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape_name in combos:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            fname = os.path.join(
+                args.out, f"{arch}__{shape_name}__{mesh_name}__{args.variant}.json"
+            )
+            if args.skip_existing and os.path.exists(fname):
+                print(f"SKIP {arch} {shape_name} {mesh_name}")
+                continue
+            try:
+                rec = run_one(arch, shape_name, mp, args.out, args.variant)
+                print(
+                    f"OK   {arch:24s} {shape_name:12s} {mesh_name:6s} "
+                    f"compile={rec['compile_s']:.0f}s "
+                    f"peak/dev={rec['bytes_per_device']['peak']/2**30:.2f}GiB "
+                    f"terms(c/m/x)="
+                    f"{rec['compute_s']:.3e}/{rec['memory_s']:.3e}/"
+                    f"{rec['collective_s']:.3e} -> {rec['bottleneck']}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape_name, mesh_name, repr(e)))
+                print(f"FAIL {arch} {shape_name} {mesh_name}: {e!r}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

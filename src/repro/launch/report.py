@@ -1,0 +1,84 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(out_dir: str, variant: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if variant is None or r.get("variant") == variant:
+            recs.append(r)
+    return recs
+
+
+def fmt_table(recs: list[dict], mesh: str = "single") -> str:
+    """Analytic compute/memory terms + HLO-derived collective term (see
+    roofline.py for why the HLO flops/bytes cannot be primary)."""
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["shape"], r["arch"]))
+    out = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| roofline frac | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        c = r.get("analytic_compute_s", r["compute_s"])
+        m = r.get("analytic_memory_s", r["memory_s"])
+        x = r["collective_s"]
+        frac = c / max(c, m, x)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {c:.3e} "
+            f"| {m:.3e} | {x:.3e} "
+            f"| **{r.get('bottleneck_analytic', r['bottleneck'])}** "
+            f"| {frac:.3f} "
+            f"| {r['bytes_per_device']['peak']/2**30:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def fmt_dryrun_summary(recs: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | chips | compile s | peak GiB/dev "
+        "| HLO GFLOPs | coll MiB (ag/ar/rs/a2a/cp) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        c = r["collectives"]
+        coll = "/".join(
+            f"{c.get(k, 0)/2**20:.0f}"
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute")
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_chips']} "
+            f"| {r['compile_s']:.0f} "
+            f"| {r['bytes_per_device']['peak']/2**30:.2f} "
+            f"| {r['flops']/1e9:.0f} | {coll} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.out, args.variant)
+    if args.kind == "roofline":
+        print(fmt_table(recs, args.mesh))
+    else:
+        print(fmt_dryrun_summary(recs))
+
+
+if __name__ == "__main__":
+    main()

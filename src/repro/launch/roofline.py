@@ -1,0 +1,216 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` provides FLOPs/bytes; collective bytes are parsed from
+the optimized HLO text by summing operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.launch import mesh as mesh_consts
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=(]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+
+
+def _tensor_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op, by kind.
+
+    '-start' variants are counted once ('-done' carries no shape work);
+    output bytes are the standard proxy for data moved per participant.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # skip the -done halves (they would double count)
+        line = m.group(0)
+        if f"{kind}-done(" in line:
+            continue
+        out[kind] += _tensor_bytes(shape_str)
+    return out
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    n_chips: int,
+    links_per_chip: int = 4,
+) -> dict:
+    """NOTE: XLA's ``cost_analysis()`` on a partitioned module reports
+    PER-DEVICE flops/bytes, and HLO shapes are post-partition, so the
+    collective bytes parsed from the text are per-device too. The terms
+    are therefore per-chip step times directly — no further division by
+    ``n_chips``."""
+    del n_chips
+    compute_s = flops / mesh_consts.PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / mesh_consts.HBM_BW
+    collective_s = coll_bytes / (links_per_chip * mesh_consts.ICI_BW)
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    terms["bottleneck"] = max(terms, key=terms.get).replace("_s", "")
+    return terms
+
+
+def model_flops(cfg, n_tokens: int, train: bool) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-FLOPs estimate
+    (2*N*D forward-only for serving steps), GLOBAL across chips."""
+    n = active_param_count(cfg)
+    mult = 6.0 if train else 2.0
+    return mult * float(n) * n_tokens
+
+
+def analytic_costs(cfg, shape, n_chips: int, gamma: int = 4,
+                   ragged_moe: bool = False, moe_impl: str = "einsum") -> dict:
+    """Analytic per-chip flops / HBM bytes for one step.
+
+    Why analytic: XLA's ``cost_analysis()`` counts while-loop (lax.scan)
+    bodies ONCE, not x trip-count, so scan-over-layers models report
+    ~1/n_layers of their real flops/bytes (a finding documented in
+    EXPERIMENTS.md). Collectives mostly operate on full stacked tensors
+    outside the loops, so the HLO-parsed collective bytes stay valid.
+
+    Model (documented approximations):
+      flops  = matmul flops (6ND train / 2ND serve, MoE active-only,
+               all-experts for the drop-free decode scoring path unless
+               ``ragged_moe``) + attention O(S_eff) scores;
+      bytes  = param-shard traffic (params read + grad/opt update for
+               train; read-per-step for serve) + KV/state cache traffic +
+               activation I/O at 2 bytes/elem.
+    """
+    from repro.models.model import Model
+    from repro.models.common import drafter_of as _drafter_of
+
+    train = shape.kind == "train"
+    b = shape.global_batch
+    s = shape.seq_len
+    par_bytes = 4 if train else 2
+
+    def one_model(c, tokens, scoring_all_experts):
+        n_active = active_param_count(c)
+        n_total = Model(c).param_count()
+        n_eff = n_active
+        if c.n_experts and scoring_all_experts and not ragged_moe:
+            n_eff = n_total  # drop-free all-experts scoring path
+        mult = 6.0 if train else 2.0
+        flops = mult * n_eff * tokens
+        # attention scores: 4 flops per (q, kv) pair per head-dim element
+        # (QK^T + PV), x3 for the backward pass in training; causal /
+        # windowed kv length averaged as min(S, window) (upper bound).
+        if c.n_heads:
+            kv_eff = sum(
+                min(s, c.window_of(i)) if c.window_of(i) > 0 else s
+                for i in range(c.n_layers)
+            )
+            # kv_eff already sums over layers
+            flops += (3.0 if train else 1.0) * 4.0 * tokens * kv_eff * (
+                c.n_heads * c.hd
+            )
+        bytes_params = n_total * par_bytes * (3.0 if train else 1.0)
+        return flops, bytes_params
+
+    t_tokens = b * (s if train or shape.kind == "prefill" else gamma + 1)
+    flops, pbytes = one_model(cfg, t_tokens, shape.kind == "decode")
+    if shape.kind == "decode":  # speculative step includes the drafter
+        d_cfg = _drafter_of(cfg)
+        d_flops, d_bytes = one_model(d_cfg, b * 2 * gamma, False)
+        flops += d_flops
+        pbytes += d_bytes
+    # cache traffic (decode reads the whole cache once per step)
+    cache_bytes = 0.0
+    if shape.kind == "decode":
+        kv_eff = 0.0
+        if cfg.n_heads:
+            for i in range(cfg.n_layers):
+                w = cfg.window_of(i)
+                kv_eff += min(s, w) if w > 0 else s
+            cache_bytes += 2 * b * kv_eff * cfg.n_kv * cfg.hd * 2
+        if cfg.ssm_state:
+            n_m = cfg.n_layers if cfg.family == "ssm" else (
+                cfg.n_layers - cfg.n_layers // max(cfg.hybrid_attn_every, 1)
+                if cfg.hybrid_attn_every else cfg.n_layers
+            )
+            cache_bytes += (
+                2 * b * n_m * cfg.ssm_heads * cfg.ssm_head_dim
+                * cfg.ssm_state * (gamma + 1) * 2
+            )
+    # activation I/O: ~12 tensor touches of (tokens, d_model) per layer
+    act_bytes = 12.0 * t_tokens * cfg.d_model * cfg.n_layers * 2
+    if train:
+        act_bytes *= 3.0
+    # MoE dispatch traffic (train/prefill): the einsum path reads+writes
+    # the O(B*S*E*C) one-hot dispatch AND combine tensors; the gather path
+    # only moves the (E*C) index tables and gathered activations.
+    moe_bytes = 0.0
+    if cfg.n_experts and shape.kind != "decode":
+        c_cap = cfg.capacity_factor * s * cfg.top_k / cfg.n_experts
+        per_layer = (
+            4.0 * b * s * cfg.n_experts * c_cap * 4      # dispatch+combine
+            if moe_impl == "einsum"
+            else 4.0 * b * cfg.n_experts * c_cap * cfg.d_model * 2
+        )
+        moe_bytes = per_layer * cfg.n_layers * (3.0 if train else 1.0)
+    total_bytes = pbytes + cache_bytes + act_bytes + moe_bytes
+    return {
+        "analytic_flops_per_chip": flops / n_chips,
+        "analytic_bytes_per_chip": total_bytes / n_chips,
+        "analytic_compute_s": flops / n_chips / mesh_consts.PEAK_FLOPS_BF16,
+        "analytic_memory_s": total_bytes / n_chips / mesh_consts.HBM_BW,
+    }
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE counts top_k of n_experts)."""
+    from repro.models.model import Model
+
+    model = Model(cfg)
+    total = model.param_count()
+    if cfg.n_experts and cfg.top_k:
+        # expert FFN params scale down by top_k / n_experts
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        if cfg.mlp != "swiglu":
+            expert = 2 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        total = total - expert + expert * cfg.top_k // cfg.n_experts
+    return total

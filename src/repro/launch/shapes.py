@@ -1,0 +1,272 @@
+"""The four assigned input shapes and the per-(arch, shape) step builders.
+
+Each builder returns (fn, input_specs, in_shardings) ready for
+``jax.jit(fn, in_shardings=...).lower(*input_specs)``. No device arrays
+are ever created — everything is ShapeDtypeStruct.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import drafter_of
+from repro.models.model import Model
+from repro.serving import engine as serving_engine
+from repro.serving.engine import EngineConfig
+from repro.training import optim
+from repro.training import train as training
+from repro.training.optim import OptConfig
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k runs only for architectures with sub-quadratic context
+# (see DESIGN.md §4): SSM state, sliding windows, or chunked attention.
+LONG_OK = {
+    "mamba2-370m", "zamba2-1.2b", "mixtral-8x22b",
+    "llama4-scout-17b-a16e", "gemma2-9b",
+}
+
+GAMMA = 4          # draft length in the speculative serve step
+SERVE_DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------------------
+# Perf-iteration variants (EXPERIMENTS.md section Perf). "base" is the
+# paper-faithful baseline; the others are hypothesis-driven changes.
+# ---------------------------------------------------------------------------
+VARIANTS: dict[str, dict] = {
+    "base": {},
+    # MoE dispatch via gather/scatter index tables instead of one-hot
+    # dispatch einsums (kills the O(S*E*C) HBM traffic).
+    "gather-moe": {"cfg": {"moe_impl": "gather"}},
+    # Serving: replicate params across the data axes (no per-layer FSDP
+    # all-gathers) — only valid when the model fits; applied to serve
+    # steps of models < 4 GiB bf16.
+    "replicated-serve": {"serve_fsdp": False},
+    # MoE via jax.lax.ragged_dot grouped matmuls: exact top-k with no
+    # capacity drops and no all-experts waste in the decode/verify path.
+    "ragged-moe": {"cfg": {"moe_impl": "ragged"}},
+    # Expert parallelism for MoE training: shard the expert dim over the
+    # data axis (16 experts == 16 data shards for llama4) so expert-grad
+    # reduction is local; tokens all-to-all to expert owners instead.
+    "expert-parallel": {"experts_axis": "data"},
+    # EP + gather dispatch.
+    "ep-gather": {"experts_axis": "data", "cfg": {"moe_impl": "gather"}},
+    # Serving small models: fully replicated params (no TP, no FSDP) —
+    # pure data parallelism; kills the per-layer partial-sum all-reduces
+    # that dominate the mamba2 decode step.
+    "pure-dp-serve": {"serve_fsdp": False, "serve_tp": False},
+    # Both.
+    "combined": {"cfg": {"moe_impl": "gather"}, "serve_fsdp": False},
+}
+
+
+def pairs():
+    """All (arch, shape) dry-run combinations."""
+    from repro.configs import registry
+
+    out = []
+    for arch in registry.ASSIGNED:
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and arch not in LONG_OK:
+                continue
+            out.append((arch, shape.name))
+    return out
+
+
+def _specs_like(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if not isinstance(x, jax.ShapeDtypeStruct) else x,
+        tree,
+    )
+
+
+def _max_len_for(cfg, shape: ShapeCfg) -> int:
+    # rounded so the cache sequence dim stays divisible by the data axes
+    # (sequence-sharded caches for batch=1 long-context)
+    need = shape.seq_len + GAMMA + 2
+    return -(-need // 512) * 512
+
+
+def _bf16_params(model: Model):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, SERVE_DTYPE),
+        model.abstract_params(),
+    )
+
+
+def build_train_step(model: Model, mesh, shape: ShapeCfg, opts=None):
+    """train_step(params, opt_state, batch, extras) with FSDP+TP sharding."""
+    opts = opts or {}
+    cfg = model.cfg.with_(max_seq=max(model.cfg.max_seq, shape.seq_len + 8),
+                          **opts.get("cfg", {}))
+    model = Model(cfg)
+    opt_cfg = OptConfig(total_steps=1000)
+    step = training.make_train_step(model, opt_cfg)
+
+    p_shard = shd.param_shardings(
+        model, mesh, experts_axis=opts.get("experts_axis")
+    )
+    opt_shard = optim.OptState(
+        step=shd.replicated(mesh), mu=p_shard, nu=p_shard
+    )
+    bsh = shd.batch_sharding(mesh)
+    batch_shard = {"tokens": bsh, "labels": bsh}
+
+    params = model.abstract_params()
+    opt_state = optim.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=params, nu=params
+    )
+    batch = {
+        "tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32
+        ),
+        "labels": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32
+        ),
+    }
+    extras = model.extras_specs(shape.global_batch)
+    extras_shard = {k: bsh for k in extras} or None
+    args = (params, opt_state, batch, extras or None)
+    shardings = (p_shard, opt_shard, batch_shard, extras_shard)
+    rep = shd.replicated(mesh)
+    out_shardings = (
+        p_shard, opt_shard,
+        {"loss": rep, "aux": rep, "grad_norm": rep},
+    )
+    return step, args, shardings, out_shardings
+
+
+def build_prefill_step(model: Model, mesh, shape: ShapeCfg, opts=None):
+    """Batched prefill: tokens (B, S) -> (last logits, filled cache)."""
+    opts = opts or {}
+    cfg = model.cfg.with_(max_seq=max(model.cfg.max_seq, shape.seq_len + 8),
+                          **opts.get("cfg", {}))
+    model = Model(cfg)
+    max_len = _max_len_for(cfg, shape)
+
+    def prefill(params, tokens, extras):
+        cache = model.init_cache(
+            tokens.shape[0], max_len, dtype=SERVE_DTYPE,
+            chunk_slack=GAMMA + 1,
+        )
+        logits, cache, _ = model.apply(
+            params, tokens, cache=cache, extras=extras, mode="prefill",
+            last_logits_only=True,
+        )
+        return logits[:, -1], cache
+
+    p_shard = shd.param_shardings(model, mesh)
+    bsh = shd.batch_sharding(mesh)
+    tokens = jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len), jnp.int32
+    )
+    extras = model.extras_specs(shape.global_batch, SERVE_DTYPE)
+    extras_shard = {k: bsh for k in extras} or None
+    args = (_bf16_params(model), tokens, extras or None)
+    shardings = (p_shard, bsh, extras_shard)
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(
+            shape.global_batch, max_len, SERVE_DTYPE, GAMMA + 1
+        )
+    )
+    c_shard = shd.cache_shardings(model, mesh, cache_abs, shard_seq=False)
+    out_shardings = (bsh, c_shard)
+    return prefill, args, shardings, out_shardings
+
+
+def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
+    """The speculative serve step (the paper's pipeline): one full
+    iteration — drafter catch-up + draft, target verify chunk over the
+    (seq_len)-token cache, block verification, commit."""
+    opts = opts or {}
+    cfg = model.cfg.with_(max_seq=max(model.cfg.max_seq, shape.seq_len + 8),
+                          **opts.get("cfg", {}))
+    model = Model(cfg)
+    drafter = Model(
+        drafter_of(cfg).with_(max_seq=cfg.max_seq)
+    )
+    b = shape.global_batch
+    max_len = _max_len_for(cfg, shape)
+    e_cfg = EngineConfig(
+        gamma=GAMMA, verifier="block", max_slots=b, max_len=max_len,
+        temperature=1.0,
+    )
+    shard_seq = b == 1  # long_500k: sequence-sharded caches
+
+    def serve_step(t_params, d_params, t_cache, d_cache,
+                   seq_buf, lens, d_lens, active, key):
+        key = jax.random.wrap_key_data(key)
+        return serving_engine._iteration(
+            model, drafter, e_cfg,
+            t_params, d_params, t_cache, d_cache,
+            seq_buf, lens, d_lens, active, key,
+        )
+
+    t_cache = jax.eval_shape(
+        lambda: model.init_cache(b, max_len, SERVE_DTYPE, GAMMA + 1)
+    )
+    d_cache = jax.eval_shape(
+        lambda: drafter.init_cache(b, max_len, SERVE_DTYPE, GAMMA + 1)
+    )
+    fsdp = opts.get("serve_fsdp", True)
+    if opts.get("serve_tp", True):
+        t_p = shd.param_shardings(model, mesh, fsdp=fsdp)
+        d_p = shd.param_shardings(drafter, mesh, fsdp=fsdp)
+    else:  # fully replicated params (pure data-parallel serving)
+        rep_ = shd.replicated(mesh)
+        t_p = jax.tree.map(lambda _: rep_, model.abstract_params())
+        d_p = jax.tree.map(lambda _: rep_, drafter.abstract_params())
+    cache_tp = opts.get("serve_tp", True)
+    t_c = shd.cache_shardings(
+        model, mesh, t_cache, shard_seq=shard_seq, tp=cache_tp
+    )
+    d_c = shd.cache_shardings(
+        drafter, mesh, d_cache, shard_seq=shard_seq, tp=cache_tp
+    )
+    bsh = shd.batch_sharding(mesh)
+    rep = shd.replicated(mesh)
+    b_or_rep = bsh if b > 1 else rep
+
+    args = (
+        _bf16_params(model), _bf16_params(drafter),
+        t_cache, d_cache,
+        jax.ShapeDtypeStruct((b, max_len), jnp.int32),   # seq_buf
+        jax.ShapeDtypeStruct((b,), jnp.int32),           # lens
+        jax.ShapeDtypeStruct((b,), jnp.int32),           # d_lens
+        jax.ShapeDtypeStruct((b,), jnp.bool_),           # active
+        jax.ShapeDtypeStruct((2,), jnp.uint32),          # key (raw)
+    )
+    shardings = (t_p, d_p, t_c, d_c, b_or_rep, rep, rep, rep, rep)
+    out_shardings = (t_c, d_c, b_or_rep, rep, rep, b_or_rep, rep)
+    return serve_step, args, shardings, out_shardings
+
+
+def build(model: Model, mesh, shape_name: str, variant: str = "base"):
+    shape = SHAPES[shape_name]
+    opts = VARIANTS[variant]
+    if shape.kind == "train":
+        return build_train_step(model, mesh, shape, opts)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, mesh, shape, opts)
+    return build_serve_step(model, mesh, shape, opts)

@@ -1,0 +1,241 @@
+"""Grouped-query attention with unified train / prefill / verify / decode
+semantics, sliding-window ring-buffer KV caches and gemma-style softcaps.
+
+One code path serves every mode:
+
+* ``kv_cache is None``  — training: self-attention among the ``S`` new
+  tokens only (causal + window mask).
+* ``kv_cache`` present — the new tokens' K/V are scattered into the cache
+  (ring-buffered when the cache is shorter than the sequence, i.e. for
+  sliding-window layers), then queries attend over the whole cache. This
+  covers prefill (S = prompt), speculative verification (S = gamma + 1)
+  and decode (S = 1) uniformly.
+
+The pure-jnp path below is the reference; ``repro.kernels`` provides
+Pallas TPU implementations that are swapped in via ``repro.kernels.ops``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig, Spec
+
+_MASK_VALUE = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, C, n_kv, hd)
+    v: jax.Array  # (B, C, n_kv, hd)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(
+    batch: int, capacity: int, n_kv: int, hd: int, dtype=jnp.float32
+) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, n_kv, hd), dtype),
+        v=jnp.zeros((batch, capacity, n_kv, hd), dtype),
+    )
+
+
+def attn_param_specs(
+    cfg: ModelConfig, prefix: tuple[int, ...] = (), cross: bool = False
+) -> dict:
+    """Param specs for one attention block; ``prefix`` stacks over layers."""
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    pad = (None,) * len(prefix)
+    specs = {
+        "wq": Spec(prefix + (d, h, hd), "normal", pad + ("embed", "heads", None)),
+        "wk": Spec(prefix + (d, k, hd), "normal", pad + ("embed", "kv_heads", None)),
+        "wv": Spec(prefix + (d, k, hd), "normal", pad + ("embed", "kv_heads", None)),
+        "wo": Spec(prefix + (h, hd, d), "normal", pad + ("heads", None, "embed")),
+    }
+    if cross:
+        specs["gate"] = Spec(prefix + (1,), "zeros", pad + (None,))
+    return specs
+
+
+def _project(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (B, S, D) @ w (D, H, hd) -> (B, S, H, hd)."""
+    return jnp.einsum("bsd,dhk->bshk", x, w)
+
+
+def _scatter_ring(cache: jax.Array, new: jax.Array, positions: jax.Array):
+    """Scatter new (B, S, K, hd) rows at slot = position % capacity."""
+    cap = cache.shape[1]
+    slots = positions % cap  # (B, S)
+    b_idx = jnp.broadcast_to(
+        jnp.arange(cache.shape[0])[:, None], slots.shape
+    )
+    return cache.at[b_idx, slots].set(new.astype(cache.dtype))
+
+
+def _ring_key_positions(cap: int, total: jax.Array) -> jax.Array:
+    """Position stored in each ring slot given `total` tokens written.
+
+    Slot s holds the largest p < total with p % cap == s (or an invalid
+    negative value if nothing was written there yet). total: (B,).
+    """
+    s = jnp.arange(cap)[None, :]
+    t = total[:, None]
+    p = t - 1 - ((t - 1 - s) % cap)
+    return jnp.where(t > 0, p, -1)  # (B, cap); p < 0 where unwritten
+
+
+Q_CHUNK = 512  # query-block size for the memory-bounded long-seq path
+
+
+def _sdpa(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, C, K, hd)
+    v: jax.Array,          # (B, C, K, hd)
+    q_pos: jax.Array,      # (B, S)
+    k_pos: jax.Array,      # (B, C)  (negative = invalid)
+    window: int,
+    softcap: float,
+    causal: bool,
+) -> jax.Array:
+    # Long sequences: scan over query blocks so the scores buffer is
+    # O(S * Q_CHUNK) instead of O(S^2) (flash_prefill is the TPU kernel
+    # for this; the scan is its XLA-lowerable twin used by the dry-run).
+    s = q.shape[1]
+    if s > 2 * Q_CHUNK and s % Q_CHUNK == 0:
+        nq = s // Q_CHUNK
+
+        def body(_, inp):
+            qb, qpb = inp  # (B, Q_CHUNK, H, hd), (B, Q_CHUNK)
+            return None, _sdpa_dense(
+                qb, k, v, qpb, k_pos, window, softcap, causal
+            )
+
+        qs = jnp.moveaxis(
+            q.reshape(q.shape[0], nq, Q_CHUNK, *q.shape[2:]), 1, 0
+        )
+        qps = jnp.moveaxis(q_pos.reshape(q_pos.shape[0], nq, Q_CHUNK), 1, 0)
+        _, out = jax.lax.scan(body, None, (qs, qps))
+        out = jnp.moveaxis(out, 0, 1)
+        return out.reshape(q.shape)
+    return _sdpa_dense(q, k, v, q_pos, k_pos, window, softcap, causal)
+
+
+def _sdpa_dense(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    window: int,
+    softcap: float,
+    causal: bool,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    kk = k.shape[2]
+    groups = h // kk
+    q = q.reshape(b, s, kk, groups, hd)
+    scores = jnp.einsum(
+        "bskgd,bckd->bkgsc", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = k_pos[:, None, :] >= 0
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window > 0:
+        mask &= q_pos[:, :, None] - k_pos[:, None, :] < window
+    scores = jnp.where(mask[:, None, None], scores, _MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsc,bckd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                 # (B, S, D)
+    positions: jax.Array,         # (B, S)
+    kv_cache: KVCache | None,
+    *,
+    window: int = -1,
+    causal: bool = True,
+    use_rope: bool | None = None,
+    mode: str = "train",
+) -> tuple[jax.Array, KVCache | None]:
+    use_rope = cfg.use_rope if use_rope is None else use_rope
+    q = _project(x, p["wq"])
+    k = _project(x, p["wk"])
+    v = _project(x, p["wv"])
+    if use_rope:
+        q = common.rope(q, positions, cfg.rope_theta)
+        k = common.rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        out = _sdpa(
+            q, k, v, positions, positions,
+            window, cfg.attn_softcap, causal,
+        )
+        new_cache = None
+    elif mode == "prefill":
+        # Prefill always starts at position 0: every needed key is inside
+        # this chunk, so attention runs chunk-internal (ring caches shorter
+        # than the prompt would have evicted keys early queries need).
+        # Only the last `capacity` keys are written to the cache.
+        out = _sdpa(
+            q, k, v, positions, positions,
+            window, cfg.attn_softcap, causal,
+        )
+        cap = kv_cache.capacity
+        s = k.shape[1]
+        keep = min(s, cap)
+        k_cache = _scatter_ring(kv_cache.k, k[:, s - keep:], positions[:, s - keep:])
+        v_cache = _scatter_ring(kv_cache.v, v[:, s - keep:], positions[:, s - keep:])
+        new_cache = KVCache(k=k_cache, v=v_cache)
+    else:  # verify / decode: scatter into the ring then read it all.
+        k_cache = _scatter_ring(kv_cache.k, k, positions)
+        v_cache = _scatter_ring(kv_cache.v, v, positions)
+        total = positions[:, -1] + 1  # tokens written incl. this chunk
+        k_pos = _ring_key_positions(k_cache.shape[1], total)
+        out = _sdpa(
+            q, k_cache, v_cache, positions, k_pos,
+            window, cfg.attn_softcap, causal,
+        )
+        new_cache = KVCache(k=k_cache, v=v_cache)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return y, new_cache
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,             # (B, S, D)
+    ctx_k: jax.Array,         # (B, T, n_kv, hd) precomputed context keys
+    ctx_v: jax.Array,
+    gated: bool = False,
+) -> jax.Array:
+    """Cross-attention over a fixed context (vision tokens / audio frames).
+    Context K/V are computed once at prefill and cached."""
+    q = _project(x, p["wq"])
+    b, s = x.shape[:2]
+    t = ctx_k.shape[1]
+    q_pos = jnp.zeros((b, s), jnp.int32)
+    k_pos = jnp.zeros((b, t), jnp.int32)
+    out = _sdpa(
+        q, ctx_k, ctx_v, q_pos, k_pos,
+        window=-1, softcap=cfg.attn_softcap, causal=False,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    if gated:
+        y = jnp.tanh(p["gate"].astype(x.dtype)) * y
+    return y
+
+
+def context_kv(cfg: ModelConfig, p: dict, ctx: jax.Array):
+    """Project the cross-attention context once: (B, T, D) -> K/V."""
+    return _project(ctx, p["wk"]), _project(ctx, p["wv"])

@@ -1,0 +1,262 @@
+"""Shared model components: config dataclass, norms, RoPE, initializers.
+
+The single ``ModelConfig`` covers all six assigned architecture families;
+family-specific fields are zero/empty when unused. Configs are frozen and
+hashable so they can be jit static arguments.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+VOCAB_PAD = 512  # embeddings padded so the vocab dim shards over the mesh
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "einsum"     # einsum (GShard dispatch) | gather
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    # --- attention pattern ---
+    window_pattern: tuple[int, ...] = (-1,)  # cycled; -1 = global attention
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    post_norms: bool = False     # gemma2-style post-attn/post-mlp norms
+    norm: str = "rmsnorm"        # rmsnorm | layernorm | np_layernorm
+    mlp: str = "swiglu"          # swiglu | gelu
+    rope_theta: float = 10000.0
+    use_rope: bool = True        # False -> learned absolute positions
+    tie_embeddings: bool = False
+    # --- hybrid (zamba2): shared attn block every k mamba layers ---
+    hybrid_attn_every: int = 0
+    # --- vlm: cross-attention layer every k layers ---
+    cross_attn_every: int = 0
+    n_vision_tokens: int = 0
+    # --- encdec (whisper): encoder stack over stubbed frame embeddings ---
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 0
+    # --- bookkeeping ---
+    max_seq: int = 8192
+    source: str = ""             # citation for the assigned config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return (self.vocab + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def ssm_groups(self) -> int:
+        return 1
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    def window_of(self, layer_idx: int) -> int:
+        return self.window_pattern[layer_idx % len(self.window_pattern)]
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+def drafter_of(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family drafter (the paper's 'small LM' pattern)."""
+    n_layers = max(2, cfg.n_layers // 8)
+    # layer count must respect the arch's pattern period
+    period = len(cfg.window_pattern)
+    if cfg.family == "vlm":
+        period = cfg.cross_attn_every
+    n_layers = max(period, (n_layers + period - 1) // period * period)
+    d_model = max(128, cfg.d_model // 4)
+    n_heads = max(2, cfg.n_heads // 4) if cfg.n_heads else 0
+    n_kv = max(1, min(cfg.n_kv, n_heads)) if cfg.n_heads else 0
+    # keep n_heads a multiple of n_kv
+    if n_heads and n_heads % n_kv:
+        n_heads = (n_heads // n_kv) * n_kv or n_kv
+    return cfg.with_(
+        name=cfg.name + "-drafter",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv=n_kv,
+        d_ff=max(256, cfg.d_ff // 4) if cfg.d_ff else 0,
+        head_dim=0,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        hybrid_attn_every=0 if cfg.family == "hybrid" else cfg.hybrid_attn_every,
+        cross_attn_every=cfg.cross_attn_every,
+        n_encoder_layers=max(1, cfg.n_encoder_layers // 2)
+        if cfg.n_encoder_layers else 0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if w is not None:
+        x = x * (1.0 + w.astype(jnp.float32))  # gemma-style (1+w) scale
+    return x.astype(dtype)
+
+
+def layernorm(
+    x: jax.Array, w: jax.Array | None, b: jax.Array | None, eps: float = 1e-5
+) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if w is not None:
+        x = x * w.astype(jnp.float32)
+    if b is not None:
+        x = x + b.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: dict | None, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"] if p else None)
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"] if p else None, p["b"] if p else None)
+    if cfg.norm == "np_layernorm":  # olmo: non-parametric LN
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+def norm_params(cfg: ModelConfig, shape_prefix: tuple[int, ...] = ()):
+    """Spec dict for one norm's params (possibly empty for np_layernorm)."""
+    d = cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"w": Spec(shape_prefix + (d,), "zeros", (None,))}
+    if cfg.norm == "layernorm":
+        return {
+            "w": Spec(shape_prefix + (d,), "ones", (None,)),
+            "b": Spec(shape_prefix + (d,), "zeros", (None,)),
+        }
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# RoPE / positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd), positions (..., S) -> rotated x."""
+    hd = x.shape[-1]
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        -math.log(10000.0) * jnp.arange(0, d, 2, dtype=jnp.float32) / d
+    )
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: shape + init + logical sharding axes, materialized later.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    init: str                 # normal | zeros | ones | ssm_a | ssm_dt
+    axes: tuple[str | None, ...]  # logical axes, same length as shape
+    scale: float = 0.02
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "normal":
+            return (
+                jax.random.normal(key, self.shape, jnp.float32) * self.scale
+            )
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, jnp.float32)
+        if self.init == "ones":
+            return jnp.ones(self.shape, jnp.float32)
+        if self.init == "ssm_a":  # A_log init: log of uniform [1, 16]
+            u = jax.random.uniform(key, self.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u)
+        if self.init == "ssm_dt":  # dt_bias: softplus^-1(uniform 1e-3..1e-1)
+            u = jax.random.uniform(
+                key, self.shape, jnp.float32, math.log(1e-3), math.log(1e-1)
+            )
+            dt = jnp.exp(u)
+            return dt + jnp.log(-jnp.expm1(-dt))
+        raise ValueError(self.init)
+
+
+def materialize(specs, key: jax.Array):
+    """Turn a pytree of Spec into a pytree of initialized arrays."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda s: isinstance(s, Spec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [s.materialize(k) for s, k in zip(leaves, keys)]
+    )
+
+
+def spec_axes(specs):
+    """Pytree of logical-axis tuples matching the param tree."""
+    return jax.tree.map(
+        lambda s: s.axes, specs, is_leaf=lambda s: isinstance(s, Spec)
+    )
+
+
+def spec_shapes(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        specs,
+        is_leaf=lambda s: isinstance(s, Spec),
+    )

@@ -1,0 +1,243 @@
+"""Dense (SwiGLU / GELU) and Mixture-of-Experts feed-forward blocks.
+
+The MoE block uses the classic TPU dispatch-einsum formulation
+(GShard/Switch): tokens are routed top-k with a capacity limit, dispatched
+to per-expert buffers with a one-hot combine tensor, processed by a batched
+expert matmul (all experts in one einsum — MXU friendly), and combined
+back. Dropped tokens (over capacity) fall through to the residual path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec
+
+
+def mlp_param_specs(cfg: ModelConfig, prefix: tuple[int, ...] = ()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pad = (None,) * len(prefix)
+    specs = {
+        "w_up": Spec(prefix + (d, f), "normal", pad + ("embed", "ffn")),
+        "w_down": Spec(prefix + (f, d), "normal", pad + ("ffn", "embed")),
+    }
+    if cfg.mlp == "swiglu":
+        specs["w_gate"] = Spec(prefix + (d, f), "normal", pad + ("embed", "ffn"))
+    return specs
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def moe_param_specs(cfg: ModelConfig, prefix: tuple[int, ...] = ()) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pad = (None,) * len(prefix)
+    return {
+        "router": Spec(prefix + (d, e), "normal", pad + ("embed", None)),
+        "w_gate": Spec(prefix + (e, d, f), "normal", pad + ("experts", "embed", "ffn")),
+        "w_up": Spec(prefix + (e, d, f), "normal", pad + ("experts", "embed", "ffn")),
+        "w_down": Spec(prefix + (e, f, d), "normal", pad + ("experts", "ffn", "embed")),
+    }
+
+
+def moe(
+    cfg: ModelConfig, p: dict, x: jax.Array, exact: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (y, aux_loss). Top-k routing.
+
+    ``exact=True`` (verify/decode chunks, where the token count is small)
+    computes every expert on every token and masks — no capacity drops, so
+    the scored next-token distributions are independent of how generation
+    is chunked. This is required for the speculative-decoding losslessness
+    guarantee: capacity-dropping would make M_b depend on gamma. Train and
+    prefill use the capacity-dispatch path (standard TPU MoE).
+    """
+    if exact:
+        # drop-free scoring for the losslessness guarantee; ragged is the
+        # optimized form, all-experts ("exact") is the reference.
+        if cfg.moe_impl == "ragged":
+            return _moe_ragged(cfg, p, x)
+        return _moe_exact(cfg, p, x)
+    if cfg.moe_impl == "gather":
+        return _moe_gather(cfg, p, x)
+    if cfg.moe_impl == "ragged":
+        return _moe_ragged(cfg, p, x)
+    # Group-wise dispatch (GShard): each sequence is a routing group with
+    # its own capacity, so the one-hot dispatch tensors stay O(S^2) per
+    # group instead of O((B*S)^2) globally — this is what keeps the
+    # dispatch einsum ~10% of the expert matmul FLOPs and lets the batch
+    # axis shard cleanly over the data mesh axes.
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * s * k / e))
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)               # (B, S, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert's per-group buffer.
+    sel_onehot = jax.nn.one_hot(tope, e, dtype=jnp.float32)   # (B, S, k, E)
+    flat_sel = sel_onehot.reshape(b, s * k, e)
+    pos_in_expert = (
+        jnp.cumsum(flat_sel, axis=1) - flat_sel
+    ).reshape(b, s, k, e)
+    pos = jnp.sum(pos_in_expert * sel_onehot, axis=-1)        # (B, S, k)
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    # dispatch (B, S, E, C) one-hot; combine = dispatch * routing weight.
+    pos_onehot = jax.nn.one_hot(pos, cap, dtype=jnp.float32)  # (B, S, k, C)
+    disp_k = sel_onehot[..., None] * pos_onehot[..., None, :]
+    disp_k = disp_k * keep[..., None, None]
+    dispatch = jnp.sum(disp_k, axis=2)                        # (B, S, E, C)
+    combine = jnp.sum(disp_k * topw[..., None, None], axis=2)
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch, x)           # (B, E, C, D)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["w_gate"]))
+        h = h * jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xin, p["w_up"]))
+    xout = jnp.einsum("becf,efd->becd", h, p["w_down"])       # (B, E, C, D)
+    y = jnp.einsum("bsec,becd->bsd", combine, xout)
+
+    # Switch-style load-balance loss: E * sum_e f_e * m_e.
+    density = jnp.mean(sel_onehot[:, :, 0], axis=(0, 1))      # top-1 fraction
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_prob)
+    return y.astype(x.dtype), aux
+
+
+def _router(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Shared routing: (B, S, D) -> (probs, topw, tope)."""
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, tope = jax.lax.top_k(probs, cfg.top_k)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+    return probs, topw, tope
+
+
+def _moe_gather(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Gather/scatter MoE dispatch (beyond-paper optimization, MegaBlocks
+    style): instead of materializing the O(S*E*C) one-hot dispatch/combine
+    tensors and contracting them on the MXU, build an (E, C) token-index
+    table per group and move activations with gathers. Same top-k +
+    per-group capacity semantics as the einsum path (bitwise-equal outputs
+    up to summation order); HBM traffic drops from O(S*E*C) to O(E*C*D).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * s * k / e))
+    probs, topw, tope = _router(cfg, p, x)
+
+    sel_onehot = jax.nn.one_hot(tope, e, dtype=jnp.float32)   # (B, S, k, E)
+    flat_sel = sel_onehot.reshape(b, s * k, e)
+    pos = (
+        (jnp.cumsum(flat_sel, axis=1) - flat_sel).reshape(b, s, k, e)
+        * sel_onehot
+    ).sum(-1).astype(jnp.int32)                               # (B, S, k)
+    keep = pos < cap
+
+    # slot_to_token[b, e, c] = flat (token, choice) index occupying slot c.
+    tok_ids = jnp.broadcast_to(
+        jnp.arange(s)[None, :, None], (b, s, k)
+    ).reshape(b, s * k)
+    flat_e = tope.reshape(b, s * k)
+    flat_pos = jnp.where(keep, pos, cap).reshape(b, s * k)    # cap = dustbin
+    slot_to_token = jnp.zeros((b, e, cap + 1), jnp.int32)
+    b_idx = jnp.broadcast_to(jnp.arange(b)[:, None], flat_e.shape)
+    slot_to_token = slot_to_token.at[b_idx, flat_e, flat_pos].set(tok_ids)
+    slot_valid = jnp.zeros((b, e, cap + 1), bool).at[
+        b_idx, flat_e, flat_pos
+    ].set(True)
+    slot_to_token = slot_to_token[:, :, :cap]
+    slot_valid = slot_valid[:, :, :cap]
+
+    xin = jnp.take_along_axis(
+        x[:, :, None, :], slot_to_token.reshape(b, -1)[:, :, None, None],
+        axis=1,
+    )[..., 0, :].reshape(b, e, cap, d)
+    xin = jnp.where(slot_valid[..., None], xin, 0.0)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["w_gate"]))
+        h = h * jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xin, p["w_up"]))
+    xout = jnp.einsum("becf,efd->becd", h, p["w_down"])       # (B, E, C, D)
+
+    # combine by gathering each token's k expert outputs back.
+    flat_out_idx = (tope * cap + jnp.where(keep, pos, 0)).reshape(b, s * k)
+    gathered = jnp.take_along_axis(
+        xout.reshape(b, e * cap, d), flat_out_idx[:, :, None], axis=1
+    ).reshape(b, s, k, d)
+    w = jnp.where(keep, topw, 0.0)
+    y = jnp.einsum("bskd,bsk->bsd", gathered, w)
+
+    density = jnp.mean(sel_onehot[:, :, 0], axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_prob)
+    return y.astype(x.dtype), aux
+
+
+def _moe_ragged(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Ragged grouped-matmul MoE (beyond-paper optimization): sort the
+    (token, choice) pairs by expert and run ``jax.lax.ragged_dot`` over
+    contiguous expert groups. Exact top-k semantics with NO capacity drops
+    and NO all-experts waste — compute is exactly sum_e count_e rows.
+    Used for the verify/decode path where losslessness requires
+    drop-free routing (and available everywhere via moe_impl='ragged')."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    probs, topw, tope = _router(cfg, p, x)
+    flat_e = tope.reshape(t * k)
+    flat_w = topw.reshape(t * k)
+    order = jnp.argsort(flat_e)                       # stable
+    tok_of = order // k                               # source token per row
+    xin = jnp.take(xt, tok_of, axis=0)                # (T*k, D)
+    counts = jnp.bincount(flat_e, length=e)
+
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jax.lax.ragged_dot(xin, p["w_gate"], counts))
+        h = h * jax.lax.ragged_dot(xin, p["w_up"], counts)
+    else:
+        h = jax.nn.gelu(jax.lax.ragged_dot(xin, p["w_up"], counts))
+    xout = jax.lax.ragged_dot(h, p["w_down"], counts)  # (T*k, D)
+    xout = xout * jnp.take(flat_w, order)[:, None]
+    y = jnp.zeros((t, d), jnp.float32).at[tok_of].add(xout)
+
+    density = jnp.mean(
+        jax.nn.one_hot(tope[..., 0], e, dtype=jnp.float32).reshape(t, e),
+        axis=0,
+    )
+    aux = e * jnp.sum(density * jnp.mean(probs.reshape(t, e), axis=0))
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_exact(cfg: ModelConfig, p: dict, x: jax.Array):
+    """All-experts path: exact top-k MoE with no capacity drops."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(b * s, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+    w_full = jnp.sum(
+        jax.nn.one_hot(tope, e, dtype=jnp.float32) * topw[..., None], axis=1
+    )                                                          # (T, E)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["w_gate"]))
+        h = h * jnp.einsum("td,edf->tef", xt, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("td,edf->tef", xt, p["w_up"]))
+    y = jnp.einsum("tef,efd,te->td", h, p["w_down"], w_full)
+    return y.reshape(b, s, d).astype(x.dtype), jnp.zeros((), jnp.float32)

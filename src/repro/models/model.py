@@ -1,0 +1,75 @@
+"""Model facade: init / apply / cache management for every architecture."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, transformer
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def param_specs(self):
+        return transformer.param_specs(self.cfg)
+
+    def init(self, key: jax.Array):
+        return common.materialize(self.param_specs(), key)
+
+    def abstract_params(self):
+        return common.spec_shapes(self.param_specs())
+
+    def logical_axes(self):
+        return common.spec_axes(self.param_specs())
+
+    def init_cache(
+        self, batch: int, max_len: int, dtype=jnp.float32,
+        chunk_slack: int = 16,
+    ):
+        return transformer.init_cache(
+            self.cfg, batch, max_len, dtype, chunk_slack
+        )
+
+    def apply(
+        self, params, tokens, *, cache=None, lens=None, extras=None,
+        mode="train", valid_len=None, last_logits_only=False,
+    ):
+        return transformer.forward(
+            self.cfg, params, tokens,
+            cache=cache, lens=lens, extras=extras, mode=mode,
+            valid_len=valid_len, last_logits_only=last_logits_only,
+        )
+
+    def commit_cache(self, cache, tau):
+        return transformer.commit_cache(self.cfg, cache, tau)
+
+    def make_extras(self, batch: int, dtype=jnp.float32) -> dict:
+        """Stubbed modality-frontend inputs (see DESIGN.md carve-out)."""
+        cfg = self.cfg
+        extras = {}
+        if cfg.family == "vlm":
+            extras["vision_embeds"] = jnp.zeros(
+                (batch, cfg.n_vision_tokens, cfg.d_model), dtype
+            )
+        if cfg.family == "encdec":
+            extras["audio_frames"] = jnp.zeros(
+                (batch, cfg.n_audio_frames, cfg.d_model), dtype
+            )
+        return extras
+
+    def extras_specs(self, batch: int, dtype=jnp.float32) -> dict:
+        return {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+            for k, v in self.make_extras(batch, dtype).items()
+        }
+
+    def param_count(self) -> int:
+        import math
+
+        shapes = jax.tree.leaves(self.abstract_params())
+        return sum(math.prod(s.shape) for s in shapes)  # python ints: no overflow

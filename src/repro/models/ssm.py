@@ -1,0 +1,270 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Two execution paths with identical semantics:
+
+* **chunked SSD** (train / prefill): the quadratic-within-chunk, linear-
+  across-chunks dual form — matmul-heavy, MXU friendly;
+* **recurrent** (decode / speculative verify): per-token state updates.
+  In ``verify`` mode the scan emits the state after *every* position so
+  the serving engine can roll back to the last accepted draft token
+  (speculative decoding rejects suffixes; SSM states, unlike KV caches,
+  must be checkpointed explicitly).
+
+The conv cache follows the same pattern: verify mode returns the whole
+padded input window so the engine can slice the window ending at the
+accepted position.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec
+
+
+class SSMEntry(NamedTuple):
+    """Committed cache: conv tail (B, w-1, conv_dim) + state (B, H, P, N)."""
+    conv: jax.Array
+    state: jax.Array
+
+
+class SSMVerify(NamedTuple):
+    """Per-step candidates from a verify chunk of length S:
+    conv_seq (B, S + w - 1, conv_dim) and states (B, S, H, P, N).
+    ``commit(tau)`` selects the cache after consuming position tau."""
+    conv_seq: jax.Array
+    states: jax.Array
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMEntry:
+    return SSMEntry(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.conv_dim), dtype),
+        state=jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype
+        ),
+    )
+
+
+def commit_ssm(entry: SSMVerify, tau: jax.Array, w: int) -> SSMEntry:
+    """Select the committed cache after consuming chunk position ``tau``
+    (0-based). conv window = conv_seq[tau+1 : tau+w]."""
+    b = entry.states.shape[0]
+    state = jnp.take_along_axis(
+        entry.states, tau[:, None, None, None, None], axis=1
+    )[:, 0]
+    offs = tau[:, None] + 1 + jnp.arange(w - 1)[None, :]  # (B, w-1)
+    conv = jnp.take_along_axis(
+        entry.conv_seq, offs[:, :, None], axis=1
+    )
+    return SSMEntry(conv=conv, state=state)
+
+
+def ssm_param_specs(cfg: ModelConfig, prefix: tuple[int, ...] = ()) -> dict:
+    d = cfg.d_model
+    di, nh = cfg.d_inner, cfg.ssm_heads
+    g, n, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    d_in_proj = 2 * di + 2 * g * n + nh
+    pad = (None,) * len(prefix)
+    return {
+        "in_proj": Spec(prefix + (d, d_in_proj), "normal", pad + ("embed", "heads")),
+        "conv_w": Spec(prefix + (w, cfg.conv_dim), "normal", pad + (None, "heads"), scale=0.1),
+        "conv_b": Spec(prefix + (cfg.conv_dim,), "zeros", pad + ("heads",)),
+        "a_log": Spec(prefix + (nh,), "ssm_a", pad + (None,)),
+        "d_skip": Spec(prefix + (nh,), "ones", pad + (None,)),
+        "dt_bias": Spec(prefix + (nh,), "ssm_dt", pad + (None,)),
+        "norm_w": Spec(prefix + (di,), "zeros", pad + ("heads",)),
+        "out_proj": Spec(prefix + (di, d), "normal", pad + ("heads", "embed")),
+    }
+
+
+def _conv1d(
+    seq: jax.Array, w: jax.Array, b: jax.Array, out_len: int
+) -> jax.Array:
+    """Causal depthwise conv: seq (B, T, C), w (W, C) -> (B, out_len, C)
+    taking the last out_len valid positions."""
+    width = w.shape[0]
+    t = seq.shape[1]
+    start = t - out_len - width + 1
+    out = jnp.zeros((seq.shape[0], out_len, seq.shape[2]), jnp.float32)
+    for i in range(width):  # static small width (4)
+        out = out + seq[:, start + i : start + i + out_len].astype(jnp.float32) * w[i]
+    return out + b
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., T) -> (..., T, T) lower-triangular pairwise cumsums:
+    out[i, j] = sum_{k in (j, i]} a[k] for j <= i, -inf above diagonal."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(
+    x: jax.Array,      # (B, S, H, P) already dt-weighted NOT — raw x
+    dt: jax.Array,     # (B, S, H) softplus'd
+    a: jax.Array,      # (H,) negative
+    b_mat: jax.Array,  # (B, S, N)  (single group)
+    c_mat: jax.Array,  # (B, S, N)
+    init_state: jax.Array,  # (B, H, P, N)
+    chunk: int,
+):
+    """Chunked SSD dual form. Returns y (B, S, H, P), final state."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    xd = (x * dt[..., None]).reshape(bsz, nc, chunk, h, p)
+    da = (dt * a).reshape(bsz, nc, chunk, h)          # (B, C, L, H)
+    bm = b_mat.reshape(bsz, nc, chunk, n)
+    cm = c_mat.reshape(bsz, nc, chunk, n)
+
+    da_cs = jnp.cumsum(da, axis=2)                    # (B, C, L, H)
+    # Intra-chunk (quadratic) term.
+    l_mat = jnp.exp(_segsum(jnp.moveaxis(da, -1, -2)))  # (B, C, H, L, L)
+    scores = jnp.einsum("bcln,bcmn->bclm", cm, bm)    # (B, C, L, M)
+    y_diag = jnp.einsum("bchlm,bclm,bcmhp->bclhp", l_mat, scores, xd)
+
+    # Chunk-boundary states.
+    decay_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B, C, L, H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bm, decay_end, xd)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])         # (B, C, H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init_state.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)     # (B, C, H, P, N)
+
+    decay_in = jnp.exp(da_cs)                         # (B, C, L, H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", cm, prev_states, decay_in)
+
+    y = (y_diag + y_off).reshape(bsz, nc * chunk, h, p)[:, :s]
+    return y, final_state
+
+
+def _ssd_recurrent(
+    x: jax.Array, dt: jax.Array, a: jax.Array,
+    b_mat: jax.Array, c_mat: jax.Array, init_state: jax.Array,
+):
+    """Per-token recurrence; also returns the state after every step."""
+
+    def step(state, inp):
+        xi, dti, bi, ci = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dti * a)                       # (B, H)
+        upd = (dti[..., None] * xi)[..., None] * bi[:, None, None, :]
+        state = state * decay[..., None, None] + upd   # (B, H, P, N)
+        y = jnp.einsum("bhpn,bn->bhp", state, ci)
+        return state, (y, state)
+
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32),
+    )
+    final, (ys, states) = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    return (
+        jnp.moveaxis(ys, 0, 1),       # (B, S, H, P)
+        jnp.moveaxis(states, 0, 1),   # (B, S, H, P, N)
+        final,
+    )
+
+
+def mamba_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                      # (B, S, D)
+    cache: SSMEntry | None,
+    mode: str,                         # train | prefill | verify | decode
+    valid_len: jax.Array | None = None,  # (B,) valid chunk prefix length
+):
+    """Full Mamba2 mixer. Returns (y, new_cache) where new_cache is
+    SSMEntry (train: None; prefill/decode) or SSMVerify (verify).
+
+    ``valid_len`` masks padded tail positions (engine prefill buckets /
+    drafter catch-up chunks): dt is zeroed there, making the state update
+    an exact identity, so the state at the last valid position is what a
+    shorter chunk would have produced."""
+    bsz, s, _ = x.shape
+    di, nh, hd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+
+    zxbcdt = x @ p["in_proj"]          # (B, S, 2*di + 2*g*n + nh)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + di + 2 * g * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    if valid_len is not None:
+        dt = jnp.where(
+            (jnp.arange(s)[None, :] < valid_len[:, None])[..., None], dt, 0.0
+        )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (nh,)
+
+    # Causal depthwise conv over the xBC channels.
+    if cache is None:
+        conv_in = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+        init_state = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+    else:
+        conv_in = jnp.concatenate([cache.conv.astype(xbc.dtype), xbc], axis=1)
+        init_state = cache.state
+    conv_out = jax.nn.silu(_conv1d(conv_in, p["conv_w"], p["conv_b"], s))
+    x_ssm, b_mat, c_mat = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    x_ssm = x_ssm.reshape(bsz, s, nh, hd)
+
+    if mode in ("train", "prefill") and s >= cfg.ssm_chunk:
+        y, final_state = _ssd_chunked(
+            x_ssm, dt, a, b_mat, c_mat, init_state, cfg.ssm_chunk
+        )
+        states_all = None
+    else:
+        y, states_all, final_state = _ssd_recurrent(
+            x_ssm, dt, a, b_mat, c_mat, init_state
+        )
+
+    y = y + p["d_skip"][:, None] * x_ssm.astype(jnp.float32)
+    y = y.reshape(bsz, s, di)
+    # Gated RMSNorm (mamba2): norm(y * silu(z)).
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["norm_w"])
+    out = (y @ p["out_proj"]).astype(x.dtype)
+
+    if cache is None:
+        return out, None
+    if mode == "verify":
+        if states_all is None:
+            _, states_all, _ = _ssd_recurrent(
+                x_ssm, dt, a, b_mat, c_mat, init_state
+            )
+        # per-step states in the cache dtype (they are cache entries after
+        # commit; keeping them f32 doubles the dominant state traffic)
+        return out, SSMVerify(
+            conv_seq=conv_in, states=states_all.astype(cache.state.dtype)
+        )
+    if valid_len is not None:
+        # window ending at the last *valid* position, not the padded tail
+        offs = valid_len[:, None] + jnp.arange(w - 1)[None, :]
+        new_conv = jnp.take_along_axis(conv_in, offs[:, :, None], axis=1)
+    else:
+        new_conv = conv_in[:, conv_in.shape[1] - (w - 1) :]
+    return out, SSMEntry(
+        conv=new_conv.astype(cache.conv.dtype),
+        state=final_state.astype(cache.state.dtype),
+    )

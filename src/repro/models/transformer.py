@@ -1,0 +1,474 @@
+"""The generic decoder stack: every assigned architecture is expressed as a
+sequence of *segments*, each a ``lax.scan`` over identical layer *groups*.
+
+Examples
+--------
+* olmo / smollm / mistral-large: one segment, group = (dense,).
+* gemma2: group = (dense[window=4096], dense[global]) — alternating.
+* llama4: group = (moe[8192], moe[8192], moe[8192], moe[global]).
+* mixtral: group = (moe[4096],).
+* mamba2: group = (mamba,).
+* zamba2: segment of (mamba x6, shared_attn) groups + a (mamba,) remainder;
+  the shared attention block's params are closed over, not scanned.
+* llama-3.2-vision: group = (dense x4, cross).
+* whisper decoder: group = (encdec,), plus a separate bidirectional
+  encoder stack over the stubbed audio-frame embeddings.
+
+Scan-over-groups keeps the lowered HLO O(1) in depth — essential for
+compiling 88-layer configs in the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mlp, ssm
+from repro.models.attention import KVCache
+from repro.models.common import ModelConfig, Spec
+from repro.models.ssm import SSMEntry, SSMVerify
+
+MODES = ("train", "prefill", "verify", "decode")
+
+
+class CrossKV(NamedTuple):
+    """Cached cross-attention context projections (vision/audio)."""
+    k: jax.Array  # (B, T, n_kv, hd)
+    v: jax.Array
+
+
+@dataclass(frozen=True)
+class LayerDef:
+    kind: str            # dense | moe | mamba | shared_attn | cross | encdec
+    window: int = -1
+
+
+@dataclass(frozen=True)
+class Segment:
+    layers: tuple[LayerDef, ...]
+    n_groups: int
+
+
+def build_plan(cfg: ModelConfig) -> tuple[Segment, ...]:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        kind = "dense" if fam == "dense" else "moe"
+        pat = cfg.window_pattern
+        assert cfg.n_layers % len(pat) == 0, (cfg.name, pat)
+        return (
+            Segment(
+                tuple(LayerDef(kind, w) for w in pat),
+                cfg.n_layers // len(pat),
+            ),
+        )
+    if fam == "ssm":
+        return (Segment((LayerDef("mamba"),), cfg.n_layers),)
+    if fam == "hybrid":
+        k = cfg.hybrid_attn_every
+        if k <= 0:  # drafter fallback: pure ssm
+            return (Segment((LayerDef("mamba"),), cfg.n_layers),)
+        full, rem = divmod(cfg.n_layers, k)
+        segs = [
+            Segment(
+                tuple([LayerDef("mamba")] * k)
+                + (LayerDef("shared_attn", cfg.window_of(0)),),
+                full,
+            )
+        ]
+        if rem:
+            segs.append(Segment((LayerDef("mamba"),), rem))
+        return tuple(segs)
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        assert cfg.n_layers % k == 0
+        return (
+            Segment(
+                tuple(LayerDef("dense", cfg.window_of(i)) for i in range(k - 1))
+                + (LayerDef("cross"),),
+                cfg.n_layers // k,
+            ),
+        )
+    if fam == "encdec":
+        return (Segment((LayerDef("encdec"),), cfg.n_layers),)
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _layer_specs(cfg: ModelConfig, ldef: LayerDef, prefix: tuple[int, ...]):
+    nrm = lambda: common.norm_params(cfg, prefix)  # noqa: E731
+    if ldef.kind in ("dense", "shared_attn"):
+        d = {
+            "attn": attention.attn_param_specs(cfg, prefix),
+            "mlp": mlp.mlp_param_specs(cfg, prefix),
+            "ln1": nrm(),
+            "ln2": nrm(),
+        }
+        if cfg.post_norms:
+            d["ln1p"] = nrm()
+            d["ln2p"] = nrm()
+        return d
+    if ldef.kind == "moe":
+        d = {
+            "attn": attention.attn_param_specs(cfg, prefix),
+            "moe": mlp.moe_param_specs(cfg, prefix),
+            "ln1": nrm(),
+            "ln2": nrm(),
+        }
+        if cfg.post_norms:
+            d["ln1p"] = nrm()
+            d["ln2p"] = nrm()
+        return d
+    if ldef.kind == "mamba":
+        return {"mixer": ssm.ssm_param_specs(cfg, prefix), "ln": nrm()}
+    if ldef.kind == "cross":
+        return {
+            "attn": attention.attn_param_specs(cfg, prefix, cross=True),
+            "mlp": mlp.mlp_param_specs(cfg, prefix),
+            "ln1": nrm(),
+            "ln2": nrm(),
+        }
+    if ldef.kind == "encdec":
+        return {
+            "self_attn": attention.attn_param_specs(cfg, prefix),
+            "cross_attn": attention.attn_param_specs(cfg, prefix),
+            "mlp": mlp.mlp_param_specs(cfg, prefix),
+            "ln1": nrm(),
+            "ln2": nrm(),
+            "ln3": nrm(),
+        }
+    raise ValueError(ldef.kind)
+
+
+def param_specs(cfg: ModelConfig):
+    d, vp = cfg.d_model, cfg.padded_vocab
+    specs: dict[str, Any] = {
+        "embed": Spec((vp, d), "normal", ("vocab", "embed")),
+        "final_norm": common.norm_params(cfg),
+    }
+    if not cfg.use_rope:
+        specs["pos_embed"] = Spec((cfg.max_seq, d), "normal", (None, "embed"))
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = Spec((d, vp), "normal", ("embed", "vocab"))
+    segs = []
+    for seg in build_plan(cfg):
+        prefix = (seg.n_groups,)
+        segs.append(
+            [
+                _layer_specs(cfg, ldef, prefix)
+                if ldef.kind != "shared_attn"
+                else {}  # params live in specs["shared_attn"]
+                for ldef in seg.layers
+            ]
+        )
+    specs["segments"] = segs
+    if any(
+        l.kind == "shared_attn" for s in build_plan(cfg) for l in s.layers
+    ):
+        specs["shared_attn"] = _layer_specs(
+            cfg, LayerDef("shared_attn"), ()
+        )
+    if cfg.family == "encdec":
+        specs["encoder"] = {
+            "layers": [
+                _layer_specs(cfg, LayerDef("dense"), (cfg.n_encoder_layers,))
+            ],
+            "final_norm": common.norm_params(cfg),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def _stacked_kv(cfg, n_groups, batch, capacity, dtype):
+    return KVCache(
+        k=jnp.zeros((n_groups, batch, capacity, cfg.n_kv, cfg.hd), dtype),
+        v=jnp.zeros((n_groups, batch, capacity, cfg.n_kv, cfg.hd), dtype),
+    )
+
+
+def _cap_of(window: int, max_len: int, chunk_slack: int) -> int:
+    """Ring capacity for a windowed layer: the window itself plus room for
+    one in-flight chunk (whose writes must not evict keys its own earliest
+    query still needs), rounded up to a multiple of 512 so long ring
+    caches stay shardable across the mesh."""
+    if window <= 0:
+        return max_len
+    cap = window + chunk_slack
+    if cap >= 4096:
+        cap = -(-cap // 512) * 512
+    return min(cap, max_len)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
+    chunk_slack: int = 16,
+):
+    """Committed-form cache for the whole stack (stacked over groups).
+    ``chunk_slack`` must be >= the longest verify/decode chunk (gamma+1)."""
+    segs = []
+    for seg in build_plan(cfg):
+        entries = []
+        for ldef in seg.layers:
+            g = seg.n_groups
+            if ldef.kind in ("dense", "moe", "shared_attn"):
+                entries.append(
+                    _stacked_kv(cfg, g, batch, _cap_of(ldef.window, max_len, chunk_slack), dtype)
+                )
+            elif ldef.kind == "mamba":
+                base = ssm.init_ssm_cache(cfg, batch, dtype)
+                entries.append(
+                    SSMEntry(
+                        conv=jnp.zeros((g,) + base.conv.shape, dtype),
+                        state=jnp.zeros((g,) + base.state.shape, dtype),
+                    )
+                )
+            elif ldef.kind == "cross":
+                t = cfg.n_vision_tokens
+                entries.append(
+                    CrossKV(
+                        k=jnp.zeros((g, batch, t, cfg.n_kv, cfg.hd), dtype),
+                        v=jnp.zeros((g, batch, t, cfg.n_kv, cfg.hd), dtype),
+                    )
+                )
+            elif ldef.kind == "encdec":
+                t = cfg.n_audio_frames
+                entries.append(
+                    {
+                        "self": _stacked_kv(
+                            cfg, g, batch, _cap_of(ldef.window, max_len, chunk_slack), dtype
+                        ),
+                        "cross": CrossKV(
+                            k=jnp.zeros((g, batch, t, cfg.n_kv, cfg.hd), dtype),
+                            v=jnp.zeros((g, batch, t, cfg.n_kv, cfg.hd), dtype),
+                        ),
+                    }
+                )
+            else:
+                raise ValueError(ldef.kind)
+        segs.append(entries)
+    return {"segments": segs}
+
+
+def commit_cache(cfg: ModelConfig, cache, tau: jax.Array):
+    """Convert a verify-mode cache to committed form: SSM entries select the
+    state after the last accepted chunk position; KV entries pass through
+    (stale ring slots are masked/overwritten by construction)."""
+
+    def fix(entry):
+        if isinstance(entry, SSMVerify):
+            return jax.vmap(
+                lambda e: ssm.commit_ssm(e, tau, cfg.ssm_conv)
+            )(entry)
+        return entry
+
+    segs = [
+        [
+            fix(e) if not isinstance(e, dict)
+            else {k: fix(v) for k, v in e.items()}
+            for e in seg
+        ]
+        for seg in cache["segments"]
+    ]
+    return {"segments": segs}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    cfg: ModelConfig,
+    ldef: LayerDef,
+    p: dict,
+    entry,
+    x: jax.Array,
+    positions: jax.Array,
+    mode: str,
+    shared: dict | None,
+    extras: dict | None,
+    valid_len: jax.Array | None = None,
+):
+    """One layer. Returns (x, new_entry, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    nrm = lambda key, h: common.apply_norm(  # noqa: E731
+        cfg, p.get(key) if p.get(key) else None, h
+    )
+    if ldef.kind in ("dense", "moe", "shared_attn"):
+        pp = shared if ldef.kind == "shared_attn" else p
+        nrmp = lambda key, h: common.apply_norm(  # noqa: E731
+            cfg, pp.get(key) if pp.get(key) else None, h
+        )
+        h, entry = attention.attention(
+            cfg, pp["attn"], nrmp("ln1", x), positions, entry,
+            window=ldef.window, mode=mode,
+        )
+        if cfg.post_norms:
+            h = nrmp("ln1p", h)
+        x = x + h
+        if ldef.kind == "moe":
+            h, aux = mlp.moe(
+                cfg, pp["moe"], nrmp("ln2", x),
+                exact=mode in ("verify", "decode"),
+            )
+        else:
+            h = mlp.mlp(cfg, pp["mlp"], nrmp("ln2", x))
+        if cfg.post_norms:
+            h = nrmp("ln2p", h)
+        return x + h, entry, aux
+    if ldef.kind == "mamba":
+        h, entry = ssm.mamba_block(
+            cfg, p["mixer"], nrm("ln", x), entry, mode, valid_len=valid_len
+        )
+        return x + h, entry, aux
+    if ldef.kind == "cross":
+        if mode in ("train", "prefill"):
+            ctx = extras["vision_embeds"]
+            k, v = attention.context_kv(cfg, p["attn"], ctx)
+            new_entry = CrossKV(k=k, v=v) if entry is not None else None
+        else:
+            k, v = entry.k, entry.v
+            new_entry = entry
+        h = attention.cross_attention(
+            cfg, p["attn"], nrm("ln1", x), k, v, gated=True
+        )
+        x = x + h
+        return x + mlp.mlp(cfg, p["mlp"], nrm("ln2", x)), new_entry, aux
+    if ldef.kind == "encdec":
+        self_entry = entry["self"] if entry is not None else None
+        h, self_entry = attention.attention(
+            cfg, p["self_attn"], nrm("ln1", x), positions, self_entry,
+            window=ldef.window, mode=mode,
+        )
+        x = x + h
+        cross_entry = entry["cross"] if entry is not None else None
+        if mode in ("train", "prefill"):
+            ctx = extras["encoder_out"]
+            k, v = attention.context_kv(cfg, p["cross_attn"], ctx)
+            cross_entry = CrossKV(k=k, v=v)
+        h = attention.cross_attention(
+            cfg, p["cross_attn"], nrm("ln2", x), cross_entry.k, cross_entry.v
+        )
+        x = x + h
+        x = x + mlp.mlp(cfg, p["mlp"], nrm("ln3", x))
+        new_entry = (
+            None if entry is None
+            else {"self": self_entry, "cross": cross_entry}
+        )
+        return x, new_entry, aux
+    raise ValueError(ldef.kind)
+
+
+def _run_encoder(cfg: ModelConfig, params: dict, frames: jax.Array):
+    """Whisper-style bidirectional encoder over stubbed frame embeddings."""
+    x = frames + common.sinusoidal_positions(
+        frames.shape[1], cfg.d_model
+    ).astype(frames.dtype)
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1])[None], frames.shape[:2]
+    )
+    enc = params["encoder"]
+
+    def body(h, lp):
+        h2, _ = attention.attention(
+            cfg, lp["attn"],
+            common.apply_norm(cfg, lp.get("ln1") or None, h),
+            positions, None, window=-1, causal=False, use_rope=False,
+        )
+        h = h + h2
+        h = h + mlp.mlp(
+            cfg, lp["mlp"], common.apply_norm(cfg, lp.get("ln2") or None, h)
+        )
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"][0])
+    return common.apply_norm(cfg, enc["final_norm"] or None, x)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,            # (B, S) int32
+    *,
+    cache=None,
+    lens: jax.Array | None = None,  # (B,) committed length (cache modes)
+    extras: dict | None = None,
+    mode: str = "train",
+    valid_len: jax.Array | None = None,  # (B,) chunk-valid lengths (SSM
+    #                                       dt-masking for padded chunks)
+    last_logits_only: bool = False,      # skip the (B, S, V) projection
+):
+    """Returns (logits (B, S, Vp), new_cache, aux)."""
+    assert mode in MODES
+    b, s = tokens.shape
+    if lens is None:
+        lens = jnp.zeros((b,), jnp.int32)
+    positions = lens[:, None] + jnp.arange(s)[None, :]
+
+    x = params["embed"][tokens]
+    if not cfg.use_rope:
+        x = x + params["pos_embed"][positions]
+
+    if cfg.family == "encdec" and mode in ("train", "prefill"):
+        extras = dict(extras or {})
+        extras["encoder_out"] = _run_encoder(
+            cfg, params, extras["audio_frames"]
+        )
+
+    aux_total = jnp.zeros((), jnp.float32)
+    plan = build_plan(cfg)
+    new_segments = []
+    shared = params.get("shared_attn")
+    for si, seg in enumerate(plan):
+        p_stack = params["segments"][si]
+        c_stack = cache["segments"][si] if cache is not None else None
+
+        def body(h, xs, seg=seg):
+            lp, lc = xs
+            new_entries, aux = [], jnp.zeros((), jnp.float32)
+            for j, ldef in enumerate(seg.layers):
+                h, e, a = _apply_layer(
+                    cfg, ldef, lp[j], lc[j] if lc is not None else None,
+                    h, positions, mode, shared, extras, valid_len,
+                )
+                new_entries.append(e)
+                aux = aux + a
+            return h, (new_entries, aux)
+
+        if c_stack is None:
+            x, (_, auxs) = jax.lax.scan(
+                body, x, (p_stack, [None] * len(seg.layers))
+            )
+            new_segments.append(None)
+        else:
+            x, (new_stack, auxs) = jax.lax.scan(body, x, (p_stack, c_stack))
+            new_segments.append(new_stack)
+        aux_total = aux_total + jnp.sum(auxs)
+
+    x = common.apply_norm(cfg, params["final_norm"] or None, x)
+    if last_logits_only:
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    # Mask padded vocabulary columns.
+    logits = jnp.where(
+        jnp.arange(cfg.padded_vocab)[None, None] < cfg.vocab, logits, -1e30
+    )
+    new_cache = (
+        {"segments": new_segments} if cache is not None else None
+    )
+    return logits, new_cache, aux_total

@@ -1,0 +1,70 @@
+"""Non-speculative autoregressive decoding baseline (the '1x' reference
+for wall-clock speedup measurements, as in the paper's Table 1)."""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sampling
+from repro.models.model import Model
+
+
+def _decode_step(model: Model, temperature, params, cache, last_tok, lens, key):
+    logits, cache, _ = model.apply(
+        params, last_tok[:, None], cache=cache, lens=lens - 1, mode="decode"
+    )
+    probs = sampling.logits_to_probs(
+        logits[:, 0, : model.cfg.vocab], temperature=temperature
+    )
+    nxt = sampling.categorical(key, probs)
+    return cache, nxt, lens + 1
+
+
+def autoregressive_decode(
+    model: Model,
+    params,
+    prompts: list[list[int]],
+    max_new_tokens: int,
+    temperature: float = 1.0,
+    seed: int = 0,
+    max_len: int = 512,
+) -> tuple[list[list[int]], float]:
+    """Greedy/sampled AR decoding of a batch of prompts (padded into a
+    fixed batch). Returns (outputs, wall seconds for the decode loop)."""
+    b = len(prompts)
+    cache = model.init_cache(b, max_len, chunk_slack=16)
+    max_p = max(len(p) for p in prompts)
+    bucket = -(-max_p // 16) * 16
+    toks = np.zeros((b, bucket), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+    lens = jnp.asarray([len(p) for p in prompts], jnp.int32)
+
+    prefill = jax.jit(
+        lambda pr, t, vl: model.apply(
+            pr, t, cache=cache, extras=model.make_extras(b),
+            mode="prefill", valid_len=vl,
+        )[1]
+    )
+    cache = prefill(params, jnp.asarray(toks), lens - 1)
+    last = jnp.asarray([p[-1] for p in prompts], jnp.int32)
+
+    step = jax.jit(partial(_decode_step, model, temperature))
+    key = jax.random.key(seed)
+    # warmup compile
+    step(params, cache, last, lens, key)
+
+    outs = [[] for _ in range(b)]
+    t0 = time.perf_counter()
+    for _ in range(max_new_tokens):
+        key, sub = jax.random.split(key)
+        cache, last, lens = step(params, cache, last, lens, sub)
+        for i, t in enumerate(np.asarray(last)):
+            outs[i].append(int(t))
+    wall = time.perf_counter() - t0
+    return outs, wall

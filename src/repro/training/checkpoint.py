@@ -1,0 +1,60 @@
+"""Checkpointing: flat-key .npz arrays + a JSON manifest (no orbax)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        # sorted to match jax.tree flatten order for dict nodes
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = np.asarray(tree)
+    return out
+
+
+def save(path: str, params, meta: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    np.savez(os.path.join(path, "params.npz"), **flat)
+    treedef = jax.tree.structure(params)
+    manifest = {
+        "treedef": str(treedef),
+        "n_arrays": len(flat),
+        "meta": meta or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load(path: str, like) -> dict:
+    """Restore into the structure of ``like`` (an abstract or real tree)."""
+    data = np.load(os.path.join(path, "params.npz"))
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    extra = set(data.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    leaves, treedef = jax.tree.flatten(like)
+    flat_sorted = _flatten(like)
+    # rebuild in tree order
+    keys_in_order = list(flat_sorted.keys())
+    arrays = [data[k] for k in keys_in_order]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def load_meta(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["meta"]

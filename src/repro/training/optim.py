@@ -1,0 +1,84 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping (no optax
+dependency — the substrate is built in-repo per the reproduction brief)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup: int = 50
+    total_steps: int = 1000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def init_opt_state(params) -> OptState:
+    # .copy() forces distinct buffers (JAX caches zero constants; aliased
+    # mu/nu buffers would break donation in the jitted train step).
+    mu = jax.tree.map(jnp.zeros_like, params)
+    nu = jax.tree.map(lambda x: jnp.zeros_like(x).copy(), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup) / jnp.maximum(cfg.total_steps - cfg.warmup, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup, warm, 0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(
+    cfg: OptConfig, params, grads, state: OptState
+) -> tuple[dict, OptState, jax.Array]:
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads
+    )
+    nu = jax.tree.map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.nu, grads
+    )
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        return p - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        )
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step=step, mu=mu, nu=nu), gnorm

@@ -1,0 +1,82 @@
+"""Training loop: loss, jitted train_step (also the dry-run entry point),
+and a host-side loop used to train the char-LM drafter/target pair."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training import optim
+from repro.training.optim import OptConfig, OptState
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def loss_fn(model: Model, params, batch: dict, extras=None):
+    """Mean next-token cross entropy (+ weighted MoE aux)."""
+    logits, _, aux = model.apply(
+        params, batch["tokens"], extras=extras, mode="train"
+    )
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+    loss = jnp.mean(nll)
+    return loss + AUX_WEIGHT * aux, (loss, aux)
+
+
+def make_train_step(
+    model: Model, opt_cfg: OptConfig
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, extras) -> (...)"""
+
+    def train_step(params, opt_state: OptState, batch, extras=None):
+        (total, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, extras), has_aux=True
+        )(params)
+        params, opt_state, gnorm = optim.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics = {"loss": ce, "aux": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(
+    model: Model,
+    data_iter,
+    n_steps: int,
+    opt_cfg: OptConfig | None = None,
+    seed: int = 0,
+    log_every: int = 50,
+    params=None,
+) -> tuple[dict, list[dict]]:
+    """Host training loop; returns (params, metric history)."""
+    opt_cfg = opt_cfg or OptConfig(total_steps=n_steps)
+    if params is None:
+        params = model.init(jax.random.key(seed))
+    opt_state = optim.init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+    extras = model.make_extras(0) or None
+
+    history = []
+    t0 = time.time()
+    for step, batch in enumerate(data_iter):
+        if step >= n_steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        ex = (
+            model.make_extras(batch["tokens"].shape[0])
+            if extras is not None else None
+        )
+        params, opt_state, metrics = step_fn(params, opt_state, batch, ex)
+        if step % log_every == 0 or step == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = time.time() - t0
+            history.append(m)
+    return params, history

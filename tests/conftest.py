@@ -1,0 +1,18 @@
+"""Shared test config: clear JAX compilation caches between test modules.
+
+The suite compiles ~60 distinct model configurations; a single pytest
+process would otherwise accumulate compiled executables until the host
+OOMs (LLVM "Cannot allocate memory" cascades).
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,143 @@
+"""Distribution-layer tests: sharding rules (AbstractMesh — no devices
+needed), HLO collective-bytes parsing, and a real miniature dry-run in a
+subprocess with 8 forced host devices."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed import sharding as shd
+from repro.launch import roofline
+from repro.models import Model
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class TestParamSpecs:
+    def test_ffn_sharded_heads_replicated_when_indivisible(self):
+        # smollm: 9 heads % 16 != 0 -> replicate; ffn 1536 % 16 == 0 -> shard
+        spec_q = shd.param_spec(
+            (None, "embed", "heads", None), (30, 576, 9, 64), MESH
+        )
+        assert "model" not in jax.tree.leaves(spec_q)
+        spec_up = shd.param_spec((None, "embed", "ffn"), (30, 576, 1536), MESH)
+        assert spec_up[2] == "model"
+
+    def test_fsdp_on_embed_dim(self):
+        spec = shd.param_spec(
+            (None, "embed", "ffn"), (88, 12288, 28672), MESH
+        )
+        assert spec == P(None, "data", "model")
+        spec_mp = shd.param_spec(
+            (None, "embed", "ffn"), (88, 12288, 28672), MESH_MP
+        )
+        assert spec_mp == P(None, ("pod", "data"), "model")
+
+    def test_vocab_shards(self):
+        spec = shd.param_spec(("vocab", "embed"), (256512, 3584), MESH)
+        assert spec[0] == "model"
+
+    def test_all_archs_have_valid_specs(self):
+        for name in registry.ASSIGNED:
+            model = Model(registry.get_config(name))
+            axes = model.logical_axes()
+            shapes = model.abstract_params()
+            specs = jax.tree.map(
+                lambda ax, sh: shd.param_spec(ax, sh.shape, MESH),
+                axes, shapes,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x
+                ),
+            )
+            for spec, sh in zip(
+                jax.tree.leaves(
+                    specs, is_leaf=lambda x: isinstance(x, P)
+                ),
+                jax.tree.leaves(shapes),
+            ):
+                for ax, dim in zip(spec, sh.shape):
+                    if ax == "model":
+                        assert dim % 16 == 0, (name, sh.shape, spec)
+
+
+class TestCollectiveParser:
+    HLO = textwrap.dedent("""
+    ENTRY main {
+      %ag = f32[16,4096]{1,0} all-gather(f32[1,4096]{1,0} %x), dimensions={0}
+      %ar = bf16[256,128]{1,0} all-reduce(bf16[256,128]{1,0} %y), to_apply=%add
+      %rs = f32[2,64]{1,0} reduce-scatter(f32[32,64]{1,0} %z), dimensions={0}
+      %cp-start = (f32[8,8]{1,0}, f32[8,8]{1,0}) collective-permute-start(f32[8,8]{1,0} %w)
+      %dot = f32[128,128]{1,0} dot(f32[128,64]{1,0} %a, f32[64,128]{1,0} %b)
+    }
+    """)
+
+    def test_bytes_by_kind(self):
+        got = roofline.collective_bytes(self.HLO)
+        assert got["all-gather"] == 16 * 4096 * 4
+        assert got["all-reduce"] == 256 * 128 * 2
+        assert got["reduce-scatter"] == 2 * 64 * 4
+        assert got["collective-permute"] == 2 * 8 * 8 * 4
+        assert got["all-to-all"] == 0
+
+    def test_roofline_terms(self):
+        # flops are per-device (see roofline.roofline_terms docstring)
+        t = roofline.roofline_terms(
+            flops=197e12, hbm_bytes=0, coll_bytes=0, n_chips=256
+        )
+        assert t["compute_s"] == pytest.approx(1.0)
+        assert t["bottleneck"] == "compute"
+
+
+MINI_DRYRUN = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, json
+from repro.configs import registry
+from repro.distributed import sharding as shd
+from repro.models import Model
+from repro.training import optim, train as training
+from repro.training.optim import OptConfig
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = registry.smoke_config("ARCH").with_(d_model=256, vocab=512)
+model = Model(cfg)
+step = training.make_train_step(model, OptConfig())
+p_shard = shd.param_shardings(model, mesh)
+opt_shard = optim.OptState(step=shd.replicated(mesh), mu=p_shard, nu=p_shard)
+bsh = shd.batch_sharding(mesh)
+params = model.abstract_params()
+opt = optim.OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=params, nu=params)
+batch = {k: jax.ShapeDtypeStruct((4, 64), jnp.int32) for k in ("tokens", "labels")}
+extras = model.extras_specs(4)
+with jax.set_mesh(mesh):
+    lowered = jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, {k: bsh for k in batch},
+                      {k: bsh for k in extras} or None),
+    ).lower(params, opt, batch, extras or None)
+    compiled = lowered.compile()
+cost = compiled.cost_analysis()
+print(json.dumps({"flops": float(cost.get("flops", 0))}))
+"""
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mixtral-8x22b", "mamba2-370m"])
+def test_mini_dryrun_8_devices(arch):
+    """Real lower+compile of a smoke train step on a (2, 4) mesh."""
+    code = MINI_DRYRUN.replace("ARCH", arch)
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)), timeout=420,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["flops"] > 0

@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests.
+All kernels run in interpret mode on CPU (TPU is the compile target)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import verification
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(7)
+
+
+def _dirichlet(key, shape, v):
+    return jax.random.dirichlet(key, jnp.ones(v), shape)
+
+
+class TestVerifyResiduals:
+    @pytest.mark.parametrize("b,k,v", [
+        (1, 1, 128), (4, 9, 1000), (2, 5, 4096), (3, 3, 300), (1, 9, 8192),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, k, v, dtype):
+        k1, k2, k3 = jax.random.split(KEY, 3)
+        ps = jax.random.uniform(k1, (b, k))
+        p = _dirichlet(k2, (b, k), v).astype(dtype)
+        q = _dirichlet(k3, (b, k), v).astype(dtype)
+        got = ops.verify_residual_sums(ps, p, q)
+        want = ref.verify_residual_sums(ps, p, q)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        assert float(jnp.max(jnp.abs(got - want))) < tol
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 4), k=st.integers(1, 6),
+        v=st.sampled_from([130, 512, 1000]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_random_shapes(self, b, k, v, seed):
+        k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+        ps = jax.random.uniform(k1, (b, k), minval=0.0, maxval=1.5)
+        p = _dirichlet(k2, (b, k), v)
+        q = _dirichlet(k3, (b, k), v)
+        got = ops.verify_residual_sums(ps, p, q)
+        want = ref.verify_residual_sums(ps, p, q)
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+        # residual mass is within [max(ps-1, 0), ps] (distributions sum to 1)
+        assert bool(jnp.all(got <= ps + 1e-5))
+        assert bool(jnp.all(got >= jnp.maximum(ps - 1.0, 0.0) - 1e-5))
+
+    def test_fused_block_verify_same_distribution(self):
+        """The fused kernel path produces the same VerifyResult as the pure
+        jnp path for identical rng keys."""
+        b, g, v = 8, 5, 1000
+        k1, k2, k3, kk = jax.random.split(KEY, 4)
+        q = _dirichlet(k1, (b, g), v)
+        p = _dirichlet(k2, (b, g + 1), v)
+        toks = jax.random.randint(k3, (b, g), 0, v)
+        r1 = verification.block_verify(kk, toks, q, p)
+        r2 = ops.block_verify_fused(kk, toks, q, p)
+        assert bool(jnp.all(r1.num_accepted == r2.num_accepted))
+        assert bool(jnp.all(r1.tokens == r2.tokens))
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("b,h,kh,hd,c,window,cap", [
+        (2, 8, 2, 64, 700, -1, 0.0),
+        (1, 4, 4, 32, 1500, 100, 50.0),
+        (3, 6, 3, 128, 512, -1, 30.0),
+        (1, 16, 2, 64, 513, 64, 0.0),
+    ])
+    def test_matches_ref(self, b, h, kh, hd, c, window, cap):
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (b, h, hd))
+        k = jax.random.normal(ks[1], (b, c, kh, hd))
+        v = jax.random.normal(ks[2], (b, c, kh, hd))
+        qpos = jax.random.randint(ks[3], (b,), c // 2, c)
+        kpos = jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+        got = ops.flash_decode(q, k, v, qpos, kpos, window=window, softcap=cap)
+        want = ref.flash_decode(q, k, v, qpos, kpos, window=window, softcap=cap)
+        assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+    def test_ring_invalid_slots_masked(self):
+        """Negative key positions (unwritten ring slots) contribute nothing."""
+        b, h, kh, hd, c = 1, 4, 2, 64, 600
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, h, hd))
+        k = jax.random.normal(ks[1], (b, c, kh, hd))
+        v = jax.random.normal(ks[2], (b, c, kh, hd))
+        qpos = jnp.array([c - 1])
+        kpos = jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+        kpos_holes = jnp.where(kpos % 3 == 0, -1, kpos)
+        got = ops.flash_decode(q, k, v, qpos, kpos_holes)
+        want = ref.flash_decode(q, k, v, qpos, kpos_holes)
+        assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        b, h, kh, hd, c = 2, 4, 2, 64, 512
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, h, hd)).astype(dtype)
+        k = jax.random.normal(ks[1], (b, c, kh, hd)).astype(dtype)
+        v = jax.random.normal(ks[2], (b, c, kh, hd)).astype(dtype)
+        qpos = jnp.full((b,), c - 1)
+        kpos = jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+        got = ops.flash_decode(q, k, v, qpos, kpos)
+        want = ref.flash_decode(q, k, v, qpos, kpos)
+        tol = 2e-5 if dtype == jnp.float32 else 3e-2
+        assert float(jnp.max(jnp.abs(got.astype(jnp.float32) - want))) < tol
+
+
+class TestFlashPrefill:
+    @pytest.mark.parametrize("b,s,h,kh,hd,window,cap", [
+        (2, 300, 4, 2, 64, -1, 0.0),
+        (1, 512, 8, 8, 32, 64, 0.0),
+        (2, 200, 6, 3, 128, -1, 50.0),
+        (1, 257, 4, 1, 64, 128, 30.0),
+    ])
+    def test_matches_ref(self, b, s, h, kh, hd, window, cap):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd))
+        k = jax.random.normal(ks[1], (b, s, kh, hd))
+        v = jax.random.normal(ks[2], (b, s, kh, hd))
+        got = ops.flash_prefill(q, k, v, window=window, softcap=cap)
+        want = ref.flash_prefill(q, k, v, window=window, softcap=cap)
+        assert float(jnp.max(jnp.abs(got - want))) < 2e-5

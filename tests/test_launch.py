@@ -1,0 +1,67 @@
+"""Launch-layer structural tests (no 512-device init needed)."""
+
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.launch import roofline, shapes
+
+
+def test_pairs_cover_assignment():
+    pairs = shapes.pairs()
+    archs = {a for a, _ in pairs}
+    assert archs == set(registry.ASSIGNED)
+    # every arch has the three universal shapes
+    for arch in registry.ASSIGNED:
+        got = {s for a, s in pairs if a == arch}
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= got
+    # long_500k only for sub-quadratic-context archs
+    long_archs = {a for a, s in pairs if s == "long_500k"}
+    assert long_archs == shapes.LONG_OK
+    assert len(pairs) == 35
+
+
+def test_shape_configs_match_assignment():
+    s = shapes.SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_variants_known():
+    assert "base" in shapes.VARIANTS
+    for v in ["gather-moe", "ragged-moe", "pure-dp-serve", "expert-parallel"]:
+        assert v in shapes.VARIANTS
+
+
+def test_analytic_costs_sane():
+    for arch in registry.ASSIGNED:
+        cfg = registry.get_config(arch)
+        for name, shape in shapes.SHAPES.items():
+            if name == "long_500k" and arch not in shapes.LONG_OK:
+                continue
+            a = roofline.analytic_costs(cfg, shape, 256)
+            assert a["analytic_compute_s"] > 0
+            assert a["analytic_memory_s"] > 0
+            assert jnp.isfinite(a["analytic_compute_s"])
+    # training must cost more flops than serving for the same arch
+    cfg = registry.get_config("olmo-1b")
+    tr = roofline.analytic_costs(cfg, shapes.SHAPES["train_4k"], 256)
+    de = roofline.analytic_costs(cfg, shapes.SHAPES["decode_32k"], 256)
+    assert tr["analytic_compute_s"] > de["analytic_compute_s"]
+
+
+def test_ragged_moe_reduces_decode_compute():
+    cfg = registry.get_config("mixtral-8x22b")
+    shape = shapes.SHAPES["decode_32k"]
+    base = roofline.analytic_costs(cfg, shape, 256)
+    ragged = roofline.analytic_costs(cfg, shape, 256, ragged_moe=True)
+    assert ragged["analytic_compute_s"] < 0.5 * base["analytic_compute_s"]
+
+
+def test_model_flops_moe_active_only():
+    cfg = registry.get_config("mixtral-8x22b")
+    n_act = roofline.active_param_count(cfg)
+    from repro.models.model import Model
+    n_tot = Model(cfg).param_count()
+    assert n_act < 0.45 * n_tot  # top-2 of 8 experts

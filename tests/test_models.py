@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (reduced configs) and cache-consistency
+properties: prefill/verify/decode paths must reproduce full-context
+logits, and speculative rollback (partial accept) must be exact."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import Model
+
+KEY = jax.random.key(1)
+ARCHS = list(registry.ASSIGNED)
+
+
+def _setup(name, cap_exact=True):
+    cfg = registry.smoke_config(name)
+    if cfg.n_experts and cap_exact:
+        # lift MoE capacity so the dispatch path has zero drops and the
+        # train path is exactly comparable with the exact verify path.
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    m = Model(cfg)
+    return cfg, m, m.init(KEY)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward_and_shapes(name):
+    cfg, m, params = _setup(name, cap_exact=False)
+    toks = jax.random.randint(jax.random.key(2), (2, 32), 0, cfg.vocab)
+    logits, _, aux = m.apply(params, toks, extras=m.make_extras(2), mode="train")
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab])))
+    assert bool(jnp.isfinite(aux))
+    # padded vocab columns are masked out
+    if cfg.padded_vocab > cfg.vocab:
+        assert float(jnp.max(logits[..., cfg.vocab :])) < -1e20
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_train_step(name):
+    """One gradient step on the reduced config: finite loss and grads."""
+    from repro.training import train as training
+
+    cfg, m, params = _setup(name, cap_exact=False)
+    toks = jax.random.randint(jax.random.key(4), (2, 33), 0, cfg.vocab)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    loss, grads = jax.value_and_grad(
+        lambda p: training.loss_fn(m, p, batch, m.make_extras(2))[0]
+    )(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_incremental_matches_full(name):
+    cfg, m, params = _setup(name)
+    b, s, pre, ch = 2, 40, 24, 8
+    toks = jax.random.randint(jax.random.key(2), (b, s), 0, cfg.vocab)
+    extras = m.make_extras(b)
+    full, _, _ = m.apply(params, toks, extras=extras, mode="train")
+
+    cache = m.init_cache(b, max_len=64, chunk_slack=ch)
+    lg, cache, _ = m.apply(
+        params, toks[:, :pre], cache=cache, extras=extras, mode="prefill"
+    )
+    assert float(jnp.max(jnp.abs(lg - full[:, :pre]))) < 2e-3
+    lens = jnp.full((b,), pre, jnp.int32)
+    pos = pre
+    while pos < s:
+        chunk = toks[:, pos : pos + ch]
+        lg, vcache, _ = m.apply(
+            params, chunk, cache=cache, lens=lens, extras=extras, mode="verify"
+        )
+        err = float(jnp.max(jnp.abs(lg - full[:, pos : pos + chunk.shape[1]])))
+        assert err < 2e-3, (pos, err)
+        cache = m.commit_cache(
+            vcache, jnp.full((b,), chunk.shape[1] - 1, jnp.int32)
+        )
+        lens = lens + chunk.shape[1]
+        pos += ch
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_speculative_rollback(name):
+    """Committing tau < chunk-1 then continuing == fresh run on the
+    accepted prefix (KV ring staleness + SSM state checkpoint)."""
+    cfg, m, params = _setup(name)
+    b, pre, ch, tau = 2, 24, 6, 2
+    toks = jax.random.randint(jax.random.key(3), (b, pre + ch), 0, cfg.vocab)
+    extras = m.make_extras(b)
+
+    cache = m.init_cache(b, max_len=64, chunk_slack=8)
+    _, cache, _ = m.apply(
+        params, toks[:, :pre], cache=cache, extras=extras, mode="prefill"
+    )
+    lens = jnp.full((b,), pre, jnp.int32)
+    _, vcache, _ = m.apply(
+        params, toks[:, pre : pre + ch], cache=cache, lens=lens,
+        extras=extras, mode="verify",
+    )
+    cache = m.commit_cache(vcache, jnp.full((b,), tau, jnp.int32))
+    lens = lens + tau + 1
+    chunk2 = jax.random.randint(jax.random.key(9), (b, ch), 0, cfg.vocab)
+    lg_a, _, _ = m.apply(
+        params, chunk2, cache=cache, lens=lens, extras=extras, mode="verify"
+    )
+
+    seq = jnp.concatenate([toks[:, : pre + tau + 1], chunk2], axis=1)
+    full, _, _ = m.apply(params, seq, extras=extras, mode="train")
+    err = float(jnp.max(jnp.abs(lg_a - full[:, pre + tau + 1 :])))
+    assert err < 2e-3, err
+
+
+def test_drafter_configs_valid():
+    from repro.models.common import drafter_of
+
+    for name in ARCHS:
+        cfg = registry.get_config(name)
+        d = drafter_of(cfg)
+        assert d.n_layers < cfg.n_layers
+        if d.n_heads:
+            assert d.n_heads % d.n_kv == 0
+        assert d.vocab == cfg.vocab
+
+
+def test_full_config_values_match_assignment():
+    """The exact assigned numbers (spot-check each arch)."""
+    c = registry.get_config("mixtral-8x22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        56, 6144, 48, 8, 16384, 32768) and (c.n_experts, c.top_k) == (8, 2)
+    c = registry.get_config("zamba2-1.2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab,
+            c.ssm_state) == (38, 2048, 32, 32, 8192, 32000, 64)
+    c = registry.get_config("olmo-1b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        16, 2048, 16, 16, 8192, 50304) and c.norm == "np_layernorm"
+    c = registry.get_config("mistral-large-123b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        88, 12288, 96, 8, 28672, 32768)
+    c = registry.get_config("gemma2-9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        42, 3584, 16, 8, 14336, 256000)
+    c = registry.get_config("smollm-135m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        30, 576, 9, 3, 1536, 49152)
+    c = registry.get_config("llama4-scout-17b-a16e")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        48, 5120, 40, 8, 8192, 202048) and (c.n_experts, c.top_k) == (16, 1)
+    c = registry.get_config("whisper-tiny")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        4, 384, 6, 6, 1536, 51865)
+    c = registry.get_config("llama-3.2-vision-11b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (
+        40, 4096, 32, 8, 14336, 128256)
+    c = registry.get_config("mamba2-370m")
+    assert (c.n_layers, c.d_model, c.vocab, c.ssm_state) == (
+        48, 1024, 50280, 128) and c.d_ff == 0

@@ -1,0 +1,85 @@
+"""Losslessness (Theorem 1 / Lemma 6) and block-efficiency ordering tests
+via the oracle simulator."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import oracle, simulate
+
+N_SAMPLES = 150_000
+
+
+def _pair(seed=42, vocab=3, order=1, alpha=0.7, concentration=0.7):
+    kt, kd = jax.random.split(jax.random.key(seed))
+    target = oracle.random_lm(kt, vocab, order, concentration)
+    drafter = oracle.perturbed_drafter(kd, target, alpha)
+    return target, drafter
+
+
+class TestLossless:
+    """Theorem 1: SpecDec output ~ M_b^* for every verifier (greedy via the
+    Algorithm 5/6 distribution modification)."""
+
+    @pytest.mark.parametrize("name", ["token", "block", "greedy_block"])
+    def test_output_distribution_matches_target(self, name):
+        target, drafter = _pair()
+        length = 3
+        exact = oracle.target_joint_distribution(target, length)
+        emp = oracle.exact_output_distribution(
+            target, drafter, gamma=3, length=length, verifier=name,
+            n_samples=N_SAMPLES, key=jax.random.key(7),
+        )
+        tv = 0.5 * np.abs(emp - exact).sum()
+        noise = 1.5 * np.sqrt(len(exact) / N_SAMPLES)
+        assert tv < noise, f"{name}: TV={tv:.4f} > {noise:.4f}"
+
+    def test_greedy_lossless_with_adversarial_models(self):
+        """Section-2 style anti-correlated models stress the modification."""
+        target, drafter = oracle.section2_models()
+        length = 3
+        exact = oracle.target_joint_distribution(target, length)
+        emp = oracle.exact_output_distribution(
+            target, drafter, gamma=2, length=length, verifier="greedy_block",
+            n_samples=N_SAMPLES, key=jax.random.key(13),
+        )
+        tv = 0.5 * np.abs(emp - exact).sum()
+        assert tv < 1.5 * np.sqrt(len(exact) / N_SAMPLES)
+
+
+class TestBlockEfficiency:
+    def test_ordering_token_le_block(self):
+        """Theorem 2 end-to-end: BE(block) >= BE(token) on random models."""
+        key = jax.random.key(0)
+        for seed in [1, 2, 3]:
+            target, drafter = _pair(seed=seed, vocab=16, order=2, alpha=0.4)
+            be_tok = float(simulate.block_efficiency(
+                key, target, drafter, 8, "token", batch=1024, n_iters=48))
+            be_blk = float(simulate.block_efficiency(
+                key, target, drafter, 8, "block", batch=1024, n_iters=48))
+            assert be_blk >= be_tok - 0.03, (seed, be_tok, be_blk)
+
+    def test_improvement_grows_with_gamma(self):
+        """Paper Figure 4: relative improvement increases with gamma."""
+        key = jax.random.key(1)
+        target, drafter = _pair(seed=5, vocab=16, order=2, alpha=0.5)
+        rel = []
+        for gamma in [2, 8]:
+            be_tok = float(simulate.block_efficiency(
+                key, target, drafter, gamma, "token", batch=2048, n_iters=48))
+            be_blk = float(simulate.block_efficiency(
+                key, target, drafter, gamma, "block", batch=2048, n_iters=48))
+            rel.append(be_blk / be_tok - 1.0)
+        assert rel[1] > rel[0] - 0.005
+
+    def test_greedy_between_token_and_block(self):
+        """Paper Table 3 ordering (on non-adversarial random models)."""
+        key = jax.random.key(2)
+        target, drafter = _pair(seed=9, vocab=16, order=2, alpha=0.4)
+        bes = {
+            name: float(simulate.block_efficiency(
+                key, target, drafter, 8, name, batch=2048, n_iters=48))
+            for name in ["token", "block", "greedy_block"]
+        }
+        assert bes["block"] >= bes["greedy_block"] - 0.05
+        assert bes["greedy_block"] >= bes["token"] - 0.05
