@@ -11,7 +11,6 @@ from __future__ import annotations
 import os
 
 import jax
-import numpy as np
 
 from repro.configs import registry
 from repro.data import pipeline
@@ -92,10 +91,8 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
         eng.submit(prompts[0], max_new_tokens=2)
         eng.run()
         wall = acc = iters = tokens = 0.0
-        import jax as _jax
         for seed in seeds:
-            eng.reset()
-            eng.key = _jax.random.key(seed)
+            eng.reset(seed=seed)
             for p in prompts:
                 eng.submit(p)
             out = eng.run()

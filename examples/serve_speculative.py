@@ -61,6 +61,13 @@ def main():
         be = sum(r.accepted_total + r.iterations for r in out.values()) / iters
         print(f"   {total/wall:8.1f} tokens/s  "
               f"(speedup {total/wall/base_tps:.2f}x, block efficiency {be:.2f})")
+        metrics = eng.request_metrics()
+        mean_ttft = sum(m["ttft_s"] for m in metrics) / len(metrics)
+        mean_acc = sum(m["acceptance_rate"] for m in metrics) / len(metrics)
+        print(f"   mean TTFT {mean_ttft*1e3:.1f} ms, "
+              f"mean acceptance rate {mean_acc:.2f}, "
+              f"{eng.last_stats['prefill_steps']} prefill chunks / "
+              f"{eng.last_stats['iterations']} iterations")
         print("   sample:", repr(tok.decode(out[rids[0]].output)[:60]))
 
 

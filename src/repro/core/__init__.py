@@ -1,9 +1,15 @@
 """Core: the paper's contribution (verification algorithms) + harnesses."""
 
 from repro.core.verification import (  # noqa: F401
+    VerifyContext,
     VerifyResult,
     block_verify,
+    get_ctx_verifier,
     get_verifier,
     greedy_block_verify,
+    make_context,
+    register_residual_backend,
+    residual_backends,
+    resolve_residual_sums,
     token_verify,
 )

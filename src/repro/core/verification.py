@@ -23,10 +23,23 @@ Shapes (``B`` = batch, ``G`` = gamma = draft length, ``V`` = vocab):
 All three return a :class:`VerifyResult` whose ``tokens[:, :num_tokens]``
 are the decoded tokens for this iteration: ``tau`` accepted draft tokens
 followed by one bonus/corrected token. Functions are pure and jit-safe.
+
+Structure
+---------
+The inputs every algorithm needs — the gathered per-draft-token target /
+drafter probabilities and their ratios — are computed once into a
+:class:`VerifyContext` and shared. The heavy vocab reduction
+``S = sum_v max(p_scale * P - Q, 0)`` (Eq. 3/4) is pluggable through the
+**residual-sums backend registry**: ``"jnp"`` is the pure-XLA reference,
+``"pallas"`` (registered by :mod:`repro.kernels.ops` on import) streams
+the distributions through the fused TPU kernel. ``resolve_residual_sums``
+picks the backend; the serving engine defaults to ``"auto"`` which routes
+through the Pallas entry point whenever the kernels package is present.
 """
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
@@ -36,6 +49,9 @@ from repro.core import sampling
 
 _EPS = 1e-30
 
+# (p_scale (B, K), p_rows (B, K, V), q_rows (B, K, V)) -> (B, K)
+ResidualSums = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
 
 class VerifyResult(NamedTuple):
     tokens: jax.Array        # (B, G+1) int32; valid prefix of length num_tokens
@@ -44,6 +60,23 @@ class VerifyResult(NamedTuple):
     mod_remaining: jax.Array  # (B,) int32 — greedy only: positions whose target
     #                           distribution must be modified (Algorithm 5);
     #                           zero for token/block verification.
+
+
+class VerifyContext(NamedTuple):
+    """Inputs shared by all three verification algorithms, computed once:
+    float32 distributions plus the gathered per-draft-token probabilities
+    and their M_b/M_s ratios."""
+
+    draft_tokens: jax.Array  # (B, G) int32
+    q_probs: jax.Array       # (B, G, V) float32
+    p_probs: jax.Array       # (B, G+1, V) float32
+    p_tok: jax.Array         # (B, G) — M_b at the draft tokens
+    q_tok: jax.Array         # (B, G) — M_s at the draft tokens
+    ratio: jax.Array         # (B, G) — M_b/M_s (0 where q_tok == 0)
+
+    @property
+    def gamma(self) -> int:
+        return self.draft_tokens.shape[1]
 
 
 def _gather(probs: jax.Array, tokens: jax.Array) -> jax.Array:
@@ -80,29 +113,106 @@ def _ratios(p_tok: jax.Array, q_tok: jax.Array) -> jax.Array:
     return jnp.where(q_tok > 0, p_tok / jnp.maximum(q_tok, _EPS), 0.0)
 
 
-def token_verify(
-    key: jax.Array,
-    draft_tokens: jax.Array,
-    q_probs: jax.Array,
-    p_probs: jax.Array,
-) -> VerifyResult:
-    """Algorithm 1: accept X_i independently w.p. min(1, p/q); stop at the
-    first rejection; bonus token from the token residual (Eq. 2)."""
-    b, g = draft_tokens.shape
+def make_context(
+    draft_tokens: jax.Array, q_probs: jax.Array, p_probs: jax.Array
+) -> VerifyContext:
+    """Build the shared verification context (one gather per model)."""
+    g = draft_tokens.shape[1]
     q_probs = q_probs.astype(jnp.float32)
     p_probs = p_probs.astype(jnp.float32)
+    p_tok = _gather(p_probs[:, :g], draft_tokens)
+    q_tok = _gather(q_probs, draft_tokens)
+    return VerifyContext(
+        draft_tokens=draft_tokens,
+        q_probs=q_probs,
+        p_probs=p_probs,
+        p_tok=p_tok,
+        q_tok=q_tok,
+        ratio=_ratios(p_tok, q_tok),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Residual-sums backend registry
+# ---------------------------------------------------------------------------
+
+
+def default_residual_sums(
+    p_scale: jax.Array, p_rows: jax.Array, q_rows: jax.Array
+) -> jax.Array:
+    """Pure-jnp reference: ``sum_v max(p_scale * P - Q, 0)`` -> (B, K)."""
+    return jnp.sum(
+        jnp.maximum(p_scale[..., None] * p_rows - q_rows, 0.0), axis=-1
+    )
+
+
+_RESIDUAL_BACKENDS: dict[str, ResidualSums] = {"jnp": default_residual_sums}
+
+
+def register_residual_backend(name: str, fn: ResidualSums) -> None:
+    """Register a fused implementation of the Eq. 3/4 vocab reduction.
+    ``repro.kernels.ops`` registers ``"pallas"`` (and its explicit
+    interpret/compiled variants) on import."""
+    _RESIDUAL_BACKENDS[name] = fn
+
+
+def residual_backends() -> list[str]:
+    return sorted(_RESIDUAL_BACKENDS)
+
+
+def resolve_residual_sums(name: str = "auto") -> ResidualSums:
+    """Resolve a backend name to a residual-sums callable.
+
+    ``"auto"`` prefers the Pallas entry point in ``repro.kernels.ops``
+    — which itself picks compiled-on-TPU vs XLA-reference-elsewhere —
+    and falls back to ``"jnp"`` if the kernels package cannot be
+    imported. ``None`` is deliberately NOT accepted here: in
+    ``get_verifier``/``EngineConfig`` it means "plain jnp default",
+    and silently auto-resolving it would invert that meaning.
+    """
+    if name is None:
+        raise ValueError(
+            "residual backend None means 'plain jnp default' at the "
+            "verifier level; pass 'auto' (or an explicit backend) here"
+        )
+    if name == "auto":
+        try:
+            import repro.kernels.ops  # noqa: F401  (registers "pallas")
+        except ImportError:
+            return _RESIDUAL_BACKENDS["jnp"]
+        return _RESIDUAL_BACKENDS.get("pallas", _RESIDUAL_BACKENDS["jnp"])
+    if name not in _RESIDUAL_BACKENDS:
+        # Late registration: the kernels module may simply not be imported.
+        try:
+            import repro.kernels.ops  # noqa: F401
+        except ImportError:
+            pass
+    if name not in _RESIDUAL_BACKENDS:
+        raise ValueError(
+            f"unknown residual backend {name!r}; "
+            f"choose from {residual_backends()} or 'auto'"
+        )
+    return _RESIDUAL_BACKENDS[name]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — token verification
+# ---------------------------------------------------------------------------
+
+
+def token_verify_ctx(key: jax.Array, ctx: VerifyContext) -> VerifyResult:
+    """Algorithm 1: accept X_i independently w.p. min(1, p/q); stop at the
+    first rejection; bonus token from the token residual (Eq. 2)."""
+    b, g = ctx.draft_tokens.shape
     key_u, key_y = jax.random.split(key)
     u = jax.random.uniform(key_u, (b, g))
 
-    p_tok = _gather(p_probs[:, :g], draft_tokens)
-    q_tok = _gather(q_probs, draft_tokens)
-    ratio = _ratios(p_tok, q_tok)
-    accept = u <= jnp.minimum(ratio, 1.0)
+    accept = u <= jnp.minimum(ctx.ratio, 1.0)
     # tau = number of leading accepts.
     tau = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
 
-    p_tau = _row_at(p_probs, tau)  # (B, V): M_b(.|c, X^tau)
-    q_tau = _row_at(q_probs, jnp.minimum(tau, g - 1))
+    p_tau = _row_at(ctx.p_probs, tau)  # (B, V): M_b(.|c, X^tau)
+    q_tau = _row_at(ctx.q_probs, jnp.minimum(tau, g - 1))
     residual = sampling.normalize(
         jnp.maximum(p_tau - q_tau, 0.0), fallback=p_tau
     )
@@ -110,11 +220,25 @@ def token_verify(
     bonus = sampling.categorical(key_y, bonus_dist)
 
     return VerifyResult(
-        tokens=_assemble(draft_tokens, bonus, tau),
+        tokens=_assemble(ctx.draft_tokens, bonus, tau),
         num_accepted=tau,
         num_tokens=tau + 1,
         mod_remaining=jnp.zeros((b,), jnp.int32),
     )
+
+
+def token_verify(
+    key: jax.Array,
+    draft_tokens: jax.Array,
+    q_probs: jax.Array,
+    p_probs: jax.Array,
+) -> VerifyResult:
+    return token_verify_ctx(key, make_context(draft_tokens, q_probs, p_probs))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — block verification (the paper's contribution)
+# ---------------------------------------------------------------------------
 
 
 def _block_ps(ratio: jax.Array) -> jax.Array:
@@ -129,43 +253,28 @@ def _block_ps(ratio: jax.Array) -> jax.Array:
     return ps.T  # (B, G): p_1 .. p_G
 
 
-def block_verify(
+def block_verify_ctx(
     key: jax.Array,
-    draft_tokens: jax.Array,
-    q_probs: jax.Array,
-    p_probs: jax.Array,
-    residual_sums: Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
-    | None = None,
+    ctx: VerifyContext,
+    residual_sums: ResidualSums | None = None,
 ) -> VerifyResult:
-    """Algorithm 2 (the paper's contribution): block verification.
+    """Algorithm 2: block verification over a shared context.
 
-    ``residual_sums(p_scale, p_rows, q_rows) -> (B, K)`` optionally
-    overrides the vocab reductions ``sum_x max(p_scale*P - Q, 0)`` with a
-    fused implementation (the Pallas kernel in repro.kernels); the default
-    is the pure-jnp expression.
+    ``residual_sums(p_scale, p_rows, q_rows) -> (B, K)`` overrides the
+    vocab reductions ``sum_x max(p_scale*P - Q, 0)`` (e.g. with the fused
+    Pallas kernel via the backend registry); default is the jnp reference.
     """
-    b, g = draft_tokens.shape
-    q_probs = q_probs.astype(jnp.float32)
-    p_probs = p_probs.astype(jnp.float32)
+    b, g = ctx.draft_tokens.shape
     key_u, key_y = jax.random.split(key)
     u = jax.random.uniform(key_u, (b, g))
 
-    p_tok = _gather(p_probs[:, :g], draft_tokens)
-    q_tok = _gather(q_probs, draft_tokens)
-    ratio = _ratios(p_tok, q_tok)
-
-    ps = _block_ps(ratio)                     # (B, G): p_1..p_G
+    ps = _block_ps(ctx.ratio)                 # (B, G): p_1..p_G
     p_full = jnp.concatenate([jnp.ones((b, 1), jnp.float32), ps], axis=1)
 
-    def _default_sums(p_scale, p_rows, q_rows):
-        return jnp.sum(
-            jnp.maximum(p_scale[..., None] * p_rows - q_rows, 0.0), axis=-1
-        )
-
-    sums = residual_sums or _default_sums
+    sums = residual_sums or default_residual_sums
     # S_i for i = 0..G-1 : conditioning on X^i uses row i of p_probs/q_probs,
     # scaled by p_i (Eq. 4). Row G has no drafter distribution (no residual).
-    s_all = sums(p_full[:, :g], p_probs[:, :g], q_probs)  # (B, G)
+    s_all = sums(p_full[:, :g], ctx.p_probs[:, :g], ctx.q_probs)  # (B, G)
 
     # Acceptance probabilities h_i for i = 1..G (Eq. 4; h_G = p_G).
     p_i = ps[:, : g - 1]                      # p_1..p_{G-1}
@@ -181,8 +290,8 @@ def block_verify(
 
     # Bonus token: from M_b(.|X^G) when tau == G, else block residual (Eq. 3).
     p_tau_scale = jnp.take_along_axis(p_full, tau[:, None], axis=1)[:, 0]
-    p_row = _row_at(p_probs, tau)
-    q_row = _row_at(q_probs, jnp.minimum(tau, g - 1))
+    p_row = _row_at(ctx.p_probs, tau)
+    q_row = _row_at(ctx.q_probs, jnp.minimum(tau, g - 1))
     residual = sampling.normalize(
         jnp.maximum(p_tau_scale[:, None] * p_row - q_row, 0.0), fallback=p_row
     )
@@ -190,18 +299,35 @@ def block_verify(
     bonus = sampling.categorical(key_y, bonus_dist)
 
     return VerifyResult(
-        tokens=_assemble(draft_tokens, bonus, tau),
+        tokens=_assemble(ctx.draft_tokens, bonus, tau),
         num_accepted=tau,
         num_tokens=tau + 1,
         mod_remaining=jnp.zeros((b,), jnp.int32),
     )
 
 
-def greedy_block_verify(
+def block_verify(
     key: jax.Array,
     draft_tokens: jax.Array,
     q_probs: jax.Array,
     p_probs: jax.Array,
+    residual_sums: ResidualSums | None = None,
+) -> VerifyResult:
+    return block_verify_ctx(
+        key, make_context(draft_tokens, q_probs, p_probs),
+        residual_sums=residual_sums,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4 — greedy block verification
+# ---------------------------------------------------------------------------
+
+
+def greedy_block_verify_ctx(
+    key: jax.Array,
+    ctx: VerifyContext,
+    residual_sums: ResidualSums | None = None,
 ) -> VerifyResult:
     """Algorithm 4 (Appendix C): greedy block verification.
 
@@ -209,28 +335,28 @@ def greedy_block_verify(
     iteration (Thm 3) but is only lossless when the caller modifies the
     target distribution for the next ``mod_remaining`` positions according
     to Algorithm 5 (see ``modified_target_row``).
+
+    The h_i denominator ``sum_v max(Q - s*P, 0)`` is derived from the
+    numerator through the exact identity
+    ``sum max(Q - sP, 0) = sum max(sP - Q, 0) - (s - 1)`` (both P and Q
+    sum to one), so one residual reduction — routable through the fused
+    backend — serves both.
     """
-    b, g = draft_tokens.shape
-    q_probs = q_probs.astype(jnp.float32)
-    p_probs = p_probs.astype(jnp.float32)
+    b, g = ctx.draft_tokens.shape
     key_u, key_y = jax.random.split(key)
     u = jax.random.uniform(key_u, (b, g))
 
-    p_tok = _gather(p_probs[:, :g], draft_tokens)
-    q_tok = _gather(q_probs, draft_tokens)
-    ratio = _ratios(p_tok, q_tok)
     # ptilde_i = prod_{j<=i} r_j, no clipping (Appendix C).
-    ptilde = jnp.cumprod(ratio, axis=1)                      # (B, G): i=1..G
+    ptilde = jnp.cumprod(ctx.ratio, axis=1)                  # (B, G): i=1..G
     ptilde_full = jnp.concatenate(
         [jnp.ones((b, 1), jnp.float32), ptilde], axis=1
     )
 
     # h_i for i = 1..G-1 (Algorithm 4 line 5).
-    scale = ptilde[:, : g - 1, None]                         # ptilde_1..G-1
-    p_rows = p_probs[:, 1:g]
-    q_rows = q_probs[:, 1:g]
-    num = jnp.sum(jnp.maximum(scale * p_rows - q_rows, 0.0), axis=-1)
-    den = jnp.sum(jnp.maximum(q_rows - scale * p_rows, 0.0), axis=-1)
+    sums = residual_sums or default_residual_sums
+    scale = ptilde[:, : g - 1]                               # ptilde_1..G-1
+    num = sums(scale, ctx.p_probs[:, 1:g], ctx.q_probs[:, 1:g])
+    den = jnp.maximum(num - scale + 1.0, 0.0)
     h_mid = jnp.where(den > _EPS, num / jnp.maximum(den, _EPS), jnp.inf)
     h_last = jnp.minimum(ptilde[:, g - 1 :], 1.0)            # accept X^G step
     h = jnp.concatenate([h_mid, h_last], axis=1)
@@ -240,8 +366,8 @@ def greedy_block_verify(
     tau = jnp.max(jnp.where(accept, idx, 0), axis=1)
 
     pt_tau = jnp.take_along_axis(ptilde_full, tau[:, None], axis=1)[:, 0]
-    p_row = _row_at(p_probs, tau)
-    q_row = _row_at(q_probs, jnp.minimum(tau, g - 1))
+    p_row = _row_at(ctx.p_probs, tau)
+    q_row = _row_at(ctx.q_probs, jnp.minimum(tau, g - 1))
     residual = sampling.normalize(
         jnp.maximum(pt_tau[:, None] * p_row - q_row, 0.0), fallback=p_row
     )
@@ -250,10 +376,23 @@ def greedy_block_verify(
 
     mod_remaining = jnp.where(tau == g, 0, g - tau - 1).astype(jnp.int32)
     return VerifyResult(
-        tokens=_assemble(draft_tokens, bonus, tau),
+        tokens=_assemble(ctx.draft_tokens, bonus, tau),
         num_accepted=tau,
         num_tokens=tau + 1,
         mod_remaining=jnp.maximum(mod_remaining, 0),
+    )
+
+
+def greedy_block_verify(
+    key: jax.Array,
+    draft_tokens: jax.Array,
+    q_probs: jax.Array,
+    p_probs: jax.Array,
+    residual_sums: ResidualSums | None = None,
+) -> VerifyResult:
+    return greedy_block_verify_ctx(
+        key, make_context(draft_tokens, q_probs, p_probs),
+        residual_sums=residual_sums,
     )
 
 
@@ -266,16 +405,48 @@ def modified_target_row(
     return sampling.normalize(jnp.maximum(p_row - q_row, 0.0), fallback=p_row)
 
 
+# ---------------------------------------------------------------------------
+# Verifier lookup
+# ---------------------------------------------------------------------------
+
 _VERIFIERS = {
     "token": token_verify,
     "block": block_verify,
     "greedy_block": greedy_block_verify,
 }
 
+_CTX_VERIFIERS = {
+    "token": token_verify_ctx,
+    "block": block_verify_ctx,
+    "greedy_block": greedy_block_verify_ctx,
+}
 
-def get_verifier(name: str):
+
+def get_verifier(name: str, residual_backend: str | None = None):
+    """Return ``verify(key, draft_tokens, q_probs, p_probs)``.
+
+    With ``residual_backend`` set (e.g. ``"auto"``, ``"pallas"``, ``"jnp"``)
+    the block/greedy vocab reductions are bound to that backend; ``None``
+    keeps the plain jnp default (back-compat).
+    """
     if name not in _VERIFIERS:
         raise ValueError(
             f"unknown verifier {name!r}; choose from {sorted(_VERIFIERS)}"
         )
-    return _VERIFIERS[name]
+    fn = _VERIFIERS[name]
+    if residual_backend is not None and name in ("block", "greedy_block"):
+        fn = partial(fn, residual_sums=resolve_residual_sums(residual_backend))
+    return fn
+
+
+def get_ctx_verifier(name: str, residual_backend: str | None = None):
+    """Context-based variant: ``verify(key, ctx)`` for callers that build a
+    :class:`VerifyContext` themselves (the serving runner)."""
+    if name not in _CTX_VERIFIERS:
+        raise ValueError(
+            f"unknown verifier {name!r}; choose from {sorted(_CTX_VERIFIERS)}"
+        )
+    fn = _CTX_VERIFIERS[name]
+    if residual_backend is not None and name in ("block", "greedy_block"):
+        fn = partial(fn, residual_sums=resolve_residual_sums(residual_backend))
+    return fn

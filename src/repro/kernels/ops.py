@@ -5,8 +5,17 @@ they run in ``interpret=True`` mode, which executes the kernel body in
 Python per grid step — bitwise-faithful to the lowering semantics, used
 by the allclose tests against ``repro.kernels.ref``.
 
-``block_verify_fused`` plugs the fused residual-sum kernel into the
-paper's block-verification algorithm (the ``residual_sums`` hook in
+Importing this module registers the fused residual-sum kernel in the
+verification backend registry (``repro.core.verification``):
+
+* ``"pallas"``           — backend auto-detect (compiled kernel on TPU,
+                           XLA reference elsewhere); the serving engine's
+                           default via ``residual_backend="auto"``.
+* ``"pallas_interpret"`` — force the emulated kernel (fidelity tests).
+* ``"pallas_compiled"``  — force compiled lowering (TPU only).
+
+``block_verify_fused`` plugs the fused kernel into the paper's block
+verification directly (the ``residual_sums`` hook of
 ``repro.core.verification.block_verify``).
 """
 
@@ -19,6 +28,7 @@ import jax
 from repro.core import verification
 from repro.kernels import flash_decode as _fd
 from repro.kernels import flash_prefill as _fp
+from repro.kernels import ref as _ref
 from repro.kernels import verify_residuals as _vr
 
 
@@ -26,9 +36,17 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def verify_residual_sums(p_scale, p_rows, q_rows):
+def verify_residual_sums(p_scale, p_rows, q_rows, interpret=None):
+    """Fused ``sum_v max(p_scale*P - Q, 0)`` — the engine's default hot
+    path. On TPU this is the compiled Pallas kernel; elsewhere (with
+    ``interpret`` unset) it falls back to the XLA reference, because
+    interpret-mode emulation executes the grid step-by-step and is meant
+    for kernel-fidelity tests, not serving throughput. Pass
+    ``interpret=True`` to force the emulated kernel."""
+    if interpret is None and not _on_tpu():
+        return _ref.verify_residual_sums(p_scale, p_rows, q_rows)
     return _vr.verify_residual_sums(
-        p_scale, p_rows, q_rows, interpret=not _on_tpu()
+        p_scale, p_rows, q_rows, interpret=interpret
     )
 
 
@@ -48,8 +66,20 @@ def flash_prefill(q, k, v, window=-1, softcap=0.0):
 @functools.partial(jax.jit, static_argnames=())
 def block_verify_fused(key, draft_tokens, q_probs, p_probs):
     """Block verification (Algorithm 2) with the vocab reductions running
-    through the fused Pallas kernel."""
+    through the fused Pallas kernel (compiled on TPU, emulated elsewhere
+    — this entry point always exercises the kernel lowering)."""
     return verification.block_verify(
         key, draft_tokens, q_probs, p_probs,
-        residual_sums=verify_residual_sums,
+        residual_sums=_vr.verify_residual_sums,
     )
+
+
+verification.register_residual_backend("pallas", verify_residual_sums)
+verification.register_residual_backend(
+    "pallas_interpret",
+    functools.partial(verify_residual_sums, interpret=True),
+)
+verification.register_residual_backend(
+    "pallas_compiled",
+    functools.partial(verify_residual_sums, interpret=False),
+)

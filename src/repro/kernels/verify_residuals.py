@@ -44,9 +44,18 @@ def verify_residual_sums(
     p_scale: jax.Array,  # (B, K)
     p_rows: jax.Array,   # (B, K, V)
     q_rows: jax.Array,   # (B, K, V)
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        # Compiled on TPU; interpret (XLA-lowered emulation of the grid
+        # program) everywhere else. Explicit True/False overrides, exposed
+        # through the verification backend registry in repro.kernels.ops.
+        interpret = jax.default_backend() != "tpu"
     b, k, v = p_rows.shape
+    if b * k == 0 or v == 0:
+        # Degenerate grid (e.g. greedy-block at gamma=1 has K = 0 middle
+        # positions): the reduction over an empty axis is exactly zeros.
+        return jnp.zeros((b, k), jnp.float32)
     rows = b * k
     scale = p_scale.reshape(rows, 1)
     p2 = p_rows.reshape(rows, v)

@@ -38,7 +38,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     fn, args, in_shardings, out_shardings = shapes.build(
         model, mesh, shape_name, variant
     )
-    with jax.set_mesh(mesh):
+    # jax >= 0.5 spells this jax.set_mesh; the Mesh context manager is the
+    # 0.4.x equivalent.
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
         lowered = jax.jit(
             fn, in_shardings=in_shardings, out_shardings=out_shardings
         ).lower(*args)
@@ -48,6 +51,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        cost = cost[0]
     hlo = compiled.as_text()
     coll = roofline.collective_bytes(hlo)
     coll_total = sum(coll.values())

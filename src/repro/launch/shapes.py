@@ -14,11 +14,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import verification
 from repro.distributed import sharding as shd
 from repro.models import drafter_of
 from repro.models.model import Model
-from repro.serving import engine as serving_engine
+from repro.serving import runner as serving_runner
+from repro.serving.batch import BatchState
 from repro.serving.engine import EngineConfig
+from repro.serving.runner import StepOutputs
 from repro.training import optim
 from repro.training import train as training
 from repro.training.optim import OptConfig
@@ -208,19 +211,23 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
     )
     b = shape.global_batch
     max_len = _max_len_for(cfg, shape)
+    # residual_backend="jnp": the dry-run lowers for XLA cost/collective
+    # analysis on host platforms; the fused Pallas path is exercised by the
+    # serving engine and the kernels benches.
     e_cfg = EngineConfig(
         gamma=GAMMA, verifier="block", max_slots=b, max_len=max_len,
-        temperature=1.0,
+        temperature=1.0, residual_backend="jnp",
+    )
+    verify = verification.get_ctx_verifier(
+        e_cfg.verifier, residual_backend=e_cfg.residual_backend
     )
     shard_seq = b == 1  # long_500k: sequence-sharded caches
 
-    def serve_step(t_params, d_params, t_cache, d_cache,
-                   seq_buf, lens, d_lens, active, key):
+    def serve_step(t_params, d_params, t_cache, d_cache, batch, key):
         key = jax.random.wrap_key_data(key)
-        return serving_engine._iteration(
-            model, drafter, e_cfg,
-            t_params, d_params, t_cache, d_cache,
-            seq_buf, lens, d_lens, active, key,
+        return serving_runner.decode_body(
+            model, drafter, e_cfg, verify,
+            t_params, d_params, t_cache, d_cache, batch, key,
         )
 
     t_cache = jax.eval_shape(
@@ -248,17 +255,28 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
     rep = shd.replicated(mesh)
     b_or_rep = bsh if b > 1 else rep
 
+    slot_i32 = jax.ShapeDtypeStruct((b,), jnp.int32)
+    slot_bool = jax.ShapeDtypeStruct((b,), jnp.bool_)
+    batch_specs = BatchState(
+        seq_buf=jax.ShapeDtypeStruct((b, max_len), jnp.int32),
+        lens=slot_i32, d_lens=slot_i32, t_pref=slot_i32,
+        active=slot_bool, ready=slot_bool,
+        out_start=slot_i32, max_new=slot_i32,
+    )
+    batch_shard = BatchState(
+        seq_buf=b_or_rep, lens=rep, d_lens=rep, t_pref=rep,
+        active=rep, ready=rep, out_start=rep, max_new=rep,
+    )
     args = (
         _bf16_params(model), _bf16_params(drafter),
-        t_cache, d_cache,
-        jax.ShapeDtypeStruct((b, max_len), jnp.int32),   # seq_buf
-        jax.ShapeDtypeStruct((b,), jnp.int32),           # lens
-        jax.ShapeDtypeStruct((b,), jnp.int32),           # d_lens
-        jax.ShapeDtypeStruct((b,), jnp.bool_),           # active
+        t_cache, d_cache, batch_specs,
         jax.ShapeDtypeStruct((2,), jnp.uint32),          # key (raw)
     )
-    shardings = (t_p, d_p, t_c, d_c, b_or_rep, rep, rep, rep, rep)
-    out_shardings = (t_c, d_c, b_or_rep, rep, rep, b_or_rep, rep)
+    shardings = (t_p, d_p, t_c, d_c, batch_shard, rep)
+    out_shardings = (
+        t_c, d_c, batch_shard,
+        StepOutputs(tokens=b_or_rep, n_keep=rep, num_tokens=rep, done=rep),
+    )
     return serve_step, args, shardings, out_shardings
 
 

@@ -1,0 +1,10 @@
+"""Serving: scheduler → batch-state → runner → verification → kernels.
+
+Public surface: :class:`SpecEngine` (facade preserving ``submit()`` /
+``run()``), its :class:`EngineConfig`, and the layer classes for callers
+that compose them directly (the launch dry-run uses the runner bodies)."""
+
+from repro.serving.batch import BatchState, init_batch  # noqa: F401
+from repro.serving.engine import EngineConfig, SpecEngine  # noqa: F401
+from repro.serving.runner import Runner, StepOutputs  # noqa: F401
+from repro.serving.scheduler import RequestState, Scheduler  # noqa: F401

@@ -1,0 +1,96 @@
+"""Device-resident batch bookkeeping for the serving engine.
+
+:class:`BatchState` is a pytree (NamedTuple of arrays) holding every
+per-slot quantity the jitted runner bodies need — including the ``active``
+mask and the stop-condition inputs (``out_start``, ``max_new``) — so one
+speculative iteration syncs only its small output tuple back to the host,
+never the bookkeeping itself.
+
+Slot-lifecycle invariants (see ``repro.serving.runner`` for how the jitted
+bodies consume them):
+
+* ``seq_buf[s, : lens[s]]`` holds all committed tokens of slot ``s``;
+* the *target* model has consumed ``t_pref[s]`` prompt tokens while the
+  slot is prefilling; once ``ready[s]`` the target has consumed
+  ``lens[s] - 1`` tokens (the last committed token is consumed at the
+  start of the next verify chunk);
+* the *drafter* has consumed ``d_lens[s]`` tokens and catches up to
+  ``lens[s]`` inside each decode iteration;
+* ``out_start[s]`` is the prompt length — everything past it is output;
+* ``max_new[s]`` is the per-request budget used by the in-step stop check.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BatchState(NamedTuple):
+    seq_buf: jax.Array    # (B, max_len) int32 — committed tokens per slot
+    lens: jax.Array       # (B,) int32 — committed token counts
+    d_lens: jax.Array     # (B,) int32 — drafter-consumed token counts
+    t_pref: jax.Array     # (B,) int32 — prompt tokens consumed by prefill
+    active: jax.Array     # (B,) bool — slot holds a live request
+    ready: jax.Array      # (B,) bool — prefill complete, slot decodable
+    out_start: jax.Array  # (B,) int32 — prompt length (output begins here)
+    max_new: jax.Array    # (B,) int32 — per-request new-token budget
+
+    @property
+    def num_slots(self) -> int:
+        return self.seq_buf.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.seq_buf.shape[1]
+
+
+def init_batch(num_slots: int, max_len: int) -> BatchState:
+    z = jnp.zeros((num_slots,), jnp.int32)
+    f = jnp.zeros((num_slots,), bool)
+    return BatchState(
+        seq_buf=jnp.zeros((num_slots, max_len), jnp.int32),
+        lens=z, d_lens=z, t_pref=z, active=f, ready=f,
+        out_start=z, max_new=z,
+    )
+
+
+def admit_slot(
+    state: BatchState, slot: int, prompt_ids: list[int], max_new: int
+) -> BatchState:
+    """Stage a request into a free slot. The models have consumed nothing
+    yet (``t_pref = 0``); the runner's chunked prefill advances both
+    through ``plen - 1`` tokens, after which the slot turns ``ready``."""
+    plen = len(prompt_ids)
+    assert 1 <= plen < state.max_len, (plen, state.max_len)
+    row = jnp.zeros((state.max_len,), jnp.int32)
+    row = row.at[:plen].set(jnp.asarray(prompt_ids, jnp.int32))
+    return state._replace(
+        seq_buf=state.seq_buf.at[slot].set(row),
+        lens=state.lens.at[slot].set(plen),
+        d_lens=state.d_lens.at[slot].set(plen - 1),
+        t_pref=state.t_pref.at[slot].set(0),
+        active=state.active.at[slot].set(True),
+        ready=state.ready.at[slot].set(plen <= 1),
+        out_start=state.out_start.at[slot].set(plen),
+        max_new=state.max_new.at[slot].set(max_new),
+    )
+
+
+def release_slot(state: BatchState, slot: int) -> BatchState:
+    """Deactivate a retired slot (its buffers are reset at readmission)."""
+    return state._replace(
+        active=state.active.at[slot].set(False),
+        ready=state.ready.at[slot].set(False),
+    )
+
+
+def clear_slot_cache(cache, slot: int):
+    """Zero one slot's rows across a model cache pytree (all stacked cache
+    entries carry batch at axis 1). Required at admission: chunked prefill
+    resumes SSM recurrences from the cached state, so a reused slot must
+    start from the zero state; KV rows are zeroed for hygiene (they would
+    be masked/overwritten anyway)."""
+    return jax.tree.map(lambda x: x.at[:, slot].set(0), cache)

@@ -1,56 +1,42 @@
-"""Speculative-decoding serving engine with continuous batching.
+"""Speculative-decoding serving engine: the thin facade.
 
-Design (mirrors production spec-dec servers, adapted to JAX/TPU):
+Layering (one concern per module):
 
-* **Slots**: a fixed-size batch of sequence slots; requests are admitted
-  into free slots (prefill one, decode many) and retired on EOS/limit.
-* **Bookkeeping invariants** (per slot):
-  - ``seq_buf[: len]`` holds all committed tokens;
-  - the *target* has consumed ``seq_buf[: len-1]`` — the last committed
-    token is consumed at the start of the next verify chunk;
-  - the *drafter* has consumed ``seq_buf[: d_len]`` and catches up to
-    ``len`` at the start of each iteration (a small re-process chunk;
-    cheap because the drafter is small, and it makes SSM-state rollback
-    trivial: the drafter never commits state past ``len``).
-* **One iteration** (fully jitted, fixed shapes):
-  1. drafter catch-up chunk (verify mode, committed at the valid length),
-  2. gamma-1 drafter decode steps (SSM entries are scratch — restored to
-     the committed catch-up state afterwards; KV ring writes past ``len``
-     are safe: they are either overwritten by the true tokens at those
-     positions or masked by causality),
-  3. target verify chunk ``[last_token, X_1..X_gamma]``,
-  4. draft verification (token / block / greedy — the paper's algorithms),
-  5. commit: roll SSM states back to the accepted position, extend
-     ``seq_buf``/lengths.
+* ``scheduler.py`` — host-side request lifecycle: queue, admission,
+  retirement, per-request metrics (TTFT, tokens/s, acceptance rate).
+* ``batch.py``     — :class:`BatchState`, the device-resident per-slot
+  bookkeeping pytree (seq_buf / lens / d_lens / active / ready / budgets).
+* ``runner.py``    — the two jitted fixed-shape programs: chunked prefill
+  and the speculative iteration (draft → verify → commit → stop check).
+* this module      — :class:`SpecEngine`, which wires them into a
+  **double-buffered async serve loop**: iteration N+1 is dispatched
+  before iteration N's outputs are materialized, so host bookkeeping
+  (token extraction, retirement, metrics) overlaps device compute. Each
+  step syncs only the small ``StepOutputs`` tuple; EOS/length stops are
+  detected on device.
 
-The verification step is where this paper lives; everything else is the
-substrate it needs.
-
-Note on verifiers: ``token`` and ``block`` are lossless end-to-end (the
-greedy-equality tests check token-identical outputs at temperature 0).
-``greedy_block`` is served WITHOUT the Algorithm-5 distribution
-modification (the paper presents it as a theoretical device and
-recommends block verification); its faithful lossless form — including
-nested modification — lives in ``repro.core.simulate`` where Table 3 is
-reproduced.
+A slot retired while an iteration was already in flight simply wastes
+that slot's lane for one step (its outputs are dropped); the slot's
+buffers and cache rows are reset at readmission. Verification routes the
+block residual sums through the backend registry — with the default
+``residual_backend="auto"`` the fused Pallas kernel entry point
+(``repro.kernels.ops``) is used.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any
+from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sampling, verification
 from repro.models.model import Model
-from repro.models.ssm import SSMEntry
+from repro.serving import batch as batch_mod
+from repro.serving.runner import Runner, StepOutputs
+from repro.serving.scheduler import RequestState, Scheduler  # noqa: F401
 
-PREFILL_BUCKET = 16
+PREFILL_CHUNK = 16
 
 
 @dataclass(frozen=True)
@@ -62,31 +48,8 @@ class EngineConfig:
     temperature: float = 1.0
     eos_id: int = -1                # -1: never stop on EOS
     max_new_tokens: int = 128
-
-
-@dataclass
-class RequestState:
-    rid: int
-    prompt: list[int]
-    max_new_tokens: int
-    output: list[int] = field(default_factory=list)
-    iterations: int = 0
-    accepted_total: int = 0
-
-
-def _restore_ssm(drafted_cache, committed_cache):
-    """Keep post-draft KV entries (stale-safe) but restore SSM entries to
-    the committed catch-up state (SSM state cannot be rolled back)."""
-
-    def pick(a, b):
-        if isinstance(a, SSMEntry):
-            return b
-        return a
-
-    return jax.tree.map(
-        pick, drafted_cache, committed_cache,
-        is_leaf=lambda x: isinstance(x, SSMEntry),
-    )
+    prefill_chunk: int = PREFILL_CHUNK
+    residual_backend: str | None = "auto"  # auto | pallas* | jnp | None
 
 
 class SpecEngine:
@@ -104,96 +67,46 @@ class SpecEngine:
         self.target, self.drafter = target, drafter
         self.t_params, self.d_params = t_params, d_params
         self.cfg = cfg
-        self._iter_fn = jax.jit(
-            partial(_iteration, target, drafter, cfg),
-        )
-        self._prefill_fns: dict[int, Any] = {}
+        self.runner = Runner(target, drafter, cfg)
         self.reset()
 
     # ------------------------------------------------------------------
     # state
     # ------------------------------------------------------------------
 
-    def reset(self):
+    def reset(self, seed: int = 0):
         cfg = self.cfg
-        b = cfg.max_slots
-        slack = max(cfg.gamma + 1, PREFILL_BUCKET)
-        self.t_cache = self.target.init_cache(b, cfg.max_len, chunk_slack=slack)
-        self.d_cache = self.drafter.init_cache(b, cfg.max_len, chunk_slack=slack)
-        self.seq_buf = jnp.zeros((b, cfg.max_len), jnp.int32)
-        self.lens = jnp.zeros((b,), jnp.int32)     # committed tokens
-        self.d_lens = jnp.zeros((b,), jnp.int32)   # drafter-consumed tokens
-        self.active = np.zeros((b,), bool)
-        self.slot_req: list[RequestState | None] = [None] * b
-        self.key = jax.random.key(0)
-        self._queue: list[RequestState] = []
-        self._done: dict[int, RequestState] = {}
-        self._next_rid = 0
+        self.t_cache, self.d_cache = self.runner.init_caches()
+        self.batch = batch_mod.init_batch(cfg.max_slots, cfg.max_len)
+        self.scheduler = Scheduler(
+            cfg.max_slots, cfg.max_new_tokens, cfg.prefill_chunk
+        )
+        self.key = jax.random.key(seed)
+        self.last_stats: dict = {}
 
     # ------------------------------------------------------------------
     # request lifecycle
     # ------------------------------------------------------------------
 
     def submit(self, prompt_ids: list[int], max_new_tokens: int | None = None) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(
-            RequestState(
-                rid=rid,
-                prompt=list(prompt_ids),
-                max_new_tokens=max_new_tokens or self.cfg.max_new_tokens,
+        if not 1 <= len(prompt_ids) < self.cfg.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt_ids)} must be in "
+                f"[1, max_len={self.cfg.max_len})"
             )
-        )
-        return rid
+        if max_new_tokens is not None and max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        return self.scheduler.submit(prompt_ids, max_new_tokens)
 
-    def _prefill_one(self, slot: int, req: RequestState):
-        plen = len(req.prompt)
-        bucket = max(
-            PREFILL_BUCKET,
-            (plen + PREFILL_BUCKET - 1) // PREFILL_BUCKET * PREFILL_BUCKET,
+    def _admit(self, slot: int, req: RequestState):
+        """Stage an admitted request: zero the slot's cache rows (chunked
+        prefill resumes SSM recurrences from cached state) and write the
+        prompt + budgets into the batch pytree."""
+        self.t_cache = batch_mod.clear_slot_cache(self.t_cache, slot)
+        self.d_cache = batch_mod.clear_slot_cache(self.d_cache, slot)
+        self.batch = batch_mod.admit_slot(
+            self.batch, slot, req.prompt, req.max_new_tokens
         )
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt
-        if bucket not in self._prefill_fns:
-            self._prefill_fns[bucket] = jax.jit(
-                partial(_prefill, self.target, self.drafter, self.cfg)
-            )
-        t_c, d_c = self._prefill_fns[bucket](
-            self.t_params, self.d_params,
-            jnp.asarray(toks), jnp.asarray([plen], jnp.int32),
-        )
-        # scatter the single-sequence caches into this slot (batch axis=1
-        # for stacked cache entries).
-        self.t_cache = jax.tree.map(
-            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1
-            ),
-            self.t_cache, t_c,
-        )
-        self.d_cache = jax.tree.map(
-            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1
-            ),
-            self.d_cache, d_c,
-        )
-        row = jnp.zeros((self.cfg.max_len,), jnp.int32)
-        row = row.at[:plen].set(jnp.asarray(req.prompt, jnp.int32))
-        self.seq_buf = self.seq_buf.at[slot].set(row)
-        self.lens = self.lens.at[slot].set(plen)
-        self.d_lens = self.d_lens.at[slot].set(plen - 1)
-        self.active[slot] = True
-        self.slot_req[slot] = req
-
-    def _admit(self):
-        for slot in range(self.cfg.max_slots):
-            if not self.active[slot] and self._queue:
-                self._prefill_one(slot, self._queue.pop(0))
-
-    def _retire(self, slot: int):
-        req = self.slot_req[slot]
-        self._done[req.rid] = req
-        self.slot_req[slot] = None
-        self.active[slot] = False
 
     # ------------------------------------------------------------------
     # main loop
@@ -201,176 +114,99 @@ class SpecEngine:
 
     def run(self) -> dict[int, RequestState]:
         """Serve until queue + slots drain. Returns rid -> RequestState."""
-        stats = {"iterations": 0, "tokens": 0, "wall_s": 0.0}
-        t0 = time.time()
-        while self._queue or self.active.any():
-            self._admit()
-            if not self.active.any():
+        sched = self.scheduler
+        stats = {
+            "iterations": 0, "prefill_steps": 0, "tokens": 0, "wall_s": 0.0,
+        }
+        t0 = time.perf_counter()
+        # (snapshot of live-at-dispatch slots, in-flight StepOutputs)
+        pending: tuple[dict[int, RequestState], StepOutputs] | None = None
+        while True:
+            for slot, req in sched.admit():
+                self._admit(slot, req)
+            if sched.prefill_pending():
+                self.t_cache, self.d_cache, self.batch = (
+                    self.runner.prefill_step(
+                        self.t_params, self.d_params,
+                        self.t_cache, self.d_cache, self.batch,
+                    )
+                )
+                sched.note_prefill_dispatch()
+                stats["prefill_steps"] += 1
+            outs = None
+            snapshot = sched.ready_slots()
+            if snapshot:
+                self.key, sub = jax.random.split(self.key)
+                self.t_cache, self.d_cache, self.batch, outs = (
+                    self.runner.decode_step(
+                        self.t_params, self.d_params,
+                        self.t_cache, self.d_cache, self.batch, sub,
+                    )
+                )
+                stats["iterations"] += 1
+            # Materialize the PREVIOUS step's outputs while the device runs
+            # the one just dispatched (double buffering).
+            if pending is not None:
+                self._process(*pending, stats)
+            pending = (snapshot, outs) if outs is not None else None
+            if (
+                pending is None
+                and not sched.prefill_pending()
+                and not sched.has_work()
+            ):
                 break
-            self.key, sub = jax.random.split(self.key)
-            active = jnp.asarray(self.active)
-            (
-                self.t_cache, self.d_cache, self.seq_buf,
-                self.lens, self.d_lens, out_tokens, num_tokens,
-            ) = self._iter_fn(
-                self.t_params, self.d_params,
-                self.t_cache, self.d_cache,
-                self.seq_buf, self.lens, self.d_lens, active, sub,
-            )
-            stats["iterations"] += 1
-            nt = np.asarray(num_tokens)
-            ot = np.asarray(out_tokens)
-            for slot in range(self.cfg.max_slots):
-                if not self.active[slot]:
-                    continue
-                req = self.slot_req[slot]
-                new = ot[slot, : nt[slot]].tolist()
-                req.iterations += 1
-                req.accepted_total += int(nt[slot]) - 1
-                done = False
-                for tok in new:
-                    req.output.append(tok)
-                    if tok == self.cfg.eos_id or (
-                        len(req.output) >= req.max_new_tokens
-                    ):
-                        done = True
-                        break
-                stats["tokens"] += len(req.output) if done else 0
-                if done or int(self.lens[slot]) + self.cfg.gamma + 2 >= self.cfg.max_len:
-                    self._retire(slot)
-        stats["wall_s"] = time.time() - t0
+        stats["wall_s"] = time.perf_counter() - t0
         self.last_stats = stats
-        return dict(self._done)
+        return dict(sched.done)
 
+    def _process(
+        self,
+        snapshot: dict[int, RequestState],
+        outs: StepOutputs,
+        stats: dict,
+    ):
+        """Host bookkeeping for one materialized iteration: append emitted
+        tokens, update acceptance accounting, retire finished slots."""
+        ot = np.asarray(outs.tokens)
+        nk = np.asarray(outs.n_keep)
+        nt = np.asarray(outs.num_tokens)
+        dn = np.asarray(outs.done)
+        now = time.perf_counter()
+        for slot, req in snapshot.items():
+            if req.finished:
+                # Retired after this step was dispatched: the lane ran one
+                # wasted iteration whose outputs are dropped.
+                continue
+            req.iterations += 1
+            req.accepted_total += max(int(nt[slot]) - 1, 0)
+            k = int(nk[slot])
+            if k > 0:
+                if not req.output:
+                    req.first_token_t = now
+                req.output.extend(int(t) for t in ot[slot, :k])
+            if bool(dn[slot]):
+                self.scheduler.retire(slot, self._finish_reason(req))
+                # Count EVERY retired request's output — including requests
+                # cut off by the max_len guard, which earlier versions
+                # silently dropped from throughput accounting.
+                stats["tokens"] += len(req.output)
+                self.batch = batch_mod.release_slot(self.batch, slot)
 
-# ---------------------------------------------------------------------------
-# jitted bodies
-# ---------------------------------------------------------------------------
+    def _finish_reason(self, req: RequestState) -> str:
+        if (
+            self.cfg.eos_id >= 0
+            and req.output
+            and req.output[-1] == self.cfg.eos_id
+        ):
+            return "eos"
+        if len(req.output) >= req.max_new_tokens:
+            return "length"
+        return "max_len_guard"
 
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
 
-def _prefill(target: Model, drafter: Model, cfg: EngineConfig,
-             t_params, d_params, tokens, valid_len):
-    """Prefill both models through ``valid_len - 1`` tokens: the engine
-    invariant is that the last committed token is consumed by the next
-    chunk (verify chunk for the target, catch-up chunk for the drafter)."""
-    slack = max(cfg.gamma + 1, PREFILL_BUCKET)
-    t_cache = target.init_cache(1, cfg.max_len, chunk_slack=slack)
-    d_cache = drafter.init_cache(1, cfg.max_len, chunk_slack=slack)
-    _, t_cache, _ = target.apply(
-        t_params, tokens, cache=t_cache, extras=target.make_extras(1),
-        mode="prefill", valid_len=valid_len - 1,
-    )
-    _, d_cache, _ = drafter.apply(
-        d_params, tokens, cache=d_cache, extras=drafter.make_extras(1),
-        mode="prefill", valid_len=valid_len - 1,
-    )
-    return t_cache, d_cache
-
-
-def _iteration(
-    target: Model, drafter: Model, cfg: EngineConfig,
-    t_params, d_params, t_cache, d_cache,
-    seq_buf, lens, d_lens, active, key,
-):
-    """One speculative iteration over all slots. Returns updated state plus
-    (out_tokens (B, gamma+1), num_tokens (B,)) with num_tokens=0 for
-    inactive slots."""
-    b = seq_buf.shape[0]
-    g = cfg.gamma
-    vocab = target.cfg.vocab
-    key_d, key_v = jax.random.split(key)
-
-    # ---- 1. drafter catch-up: chunk of up to g+1 tokens from d_lens. ----
-    k_catch = g + 1
-    idx = d_lens[:, None] + jnp.arange(k_catch)[None]
-    catch_toks = jnp.take_along_axis(
-        seq_buf, jnp.minimum(idx, seq_buf.shape[1] - 1), axis=1
-    )
-    n_valid = lens - d_lens  # in [1, g+1]
-    d_logits, d_vcache, _ = drafter.apply(
-        d_params, catch_toks, cache=d_cache, lens=d_lens,
-        mode="verify", valid_len=n_valid,
-    )
-    d_cache_committed = drafter.commit_cache(d_vcache, n_valid - 1)
-    # q(. | committed prefix): logits at index n_valid-1.
-    last_q_logits = jnp.take_along_axis(
-        d_logits, (n_valid - 1)[:, None, None], axis=1
-    )[:, 0]
-
-    # ---- 2. draft gamma tokens. ----
-    def probs_of(logits):
-        return sampling.logits_to_probs(
-            logits[..., :vocab], temperature=cfg.temperature
-        )
-
-    q0 = probs_of(last_q_logits)                      # (B, V)
-    key_d, sub = jax.random.split(key_d)
-    x1 = sampling.categorical(sub, q0)
-
-    def draft_step(carry, i):
-        cache, tok, key_i = carry
-        key_i, sub = jax.random.split(key_i)
-        pos_len = lens + i  # drafter consumed lens+i tokens so far
-        logits, cache, _ = drafter.apply(
-            d_params, tok[:, None], cache=cache, lens=pos_len, mode="decode"
-        )
-        q = probs_of(logits[:, 0])
-        nxt = sampling.categorical(sub, q)
-        return (cache, nxt, key_i), (tok, q)
-
-    (d_cache_drafted, _, _), (draft_toks, q_scan) = jax.lax.scan(
-        draft_step, (d_cache_committed, x1, key_d), jnp.arange(g)
-    )
-    draft_toks = draft_toks.T                          # (B, G): X_1..X_G
-    # q_scan[i] = q(. | prefix, X_1..X_{i+1}); verification needs
-    # [q0, q(.|X_1), ..., q(.|X^{G-1})].
-    q_rows = jnp.concatenate(
-        [q0[:, None], jnp.swapaxes(q_scan, 0, 1)[:, : g - 1]], axis=1
-    )                                                  # (B, G, V)
-    d_cache_next = _restore_ssm(d_cache_drafted, d_cache_committed)
-
-    # ---- 3. target verify chunk [last_token, X_1..X_gamma]. ----
-    last_tok = jnp.take_along_axis(seq_buf, (lens - 1)[:, None], axis=1)
-    chunk = jnp.concatenate([last_tok, draft_toks], axis=1)  # (B, G+1)
-    t_logits, t_vcache, _ = target.apply(
-        t_params, chunk, cache=t_cache, lens=lens - 1, mode="verify"
-    )
-    p_rows = probs_of(t_logits)                         # (B, G+1, V)
-
-    # ---- 4. verification (the paper's algorithms). ----
-    verify = verification.get_verifier(cfg.verifier)
-    res = verify(key_v, draft_toks, q_rows, p_rows)
-    tau = res.num_accepted
-    num_tokens = jnp.where(active, res.num_tokens, 0)
-
-    # ---- 5. commit. ----
-    t_cache_next = target.commit_cache(t_vcache, tau)
-    # inactive slots: freeze everything.
-    t_cache_next = jax.tree.map(
-        lambda new, old: _mask_batch(new, old, active, axis=1),
-        t_cache_next, t_cache,
-    )
-    d_cache_next = jax.tree.map(
-        lambda new, old: _mask_batch(new, old, active, axis=1),
-        d_cache_next, d_cache,
-    )
-    pos = jnp.arange(g + 1)[None]
-    write_idx = lens[:, None] + pos
-    valid = (pos < num_tokens[:, None]) & active[:, None]
-    write_idx = jnp.where(valid, write_idx, seq_buf.shape[1] - 1)
-    b_idx = jnp.broadcast_to(jnp.arange(b)[:, None], write_idx.shape)
-    seq_buf = seq_buf.at[b_idx, write_idx].set(
-        jnp.where(valid, res.tokens, seq_buf[b_idx, write_idx])
-    )
-    new_lens = jnp.where(active, lens + num_tokens, lens)
-    new_d_lens = jnp.where(active, lens, d_lens)
-    return (
-        t_cache_next, d_cache_next, seq_buf,
-        new_lens, new_d_lens, res.tokens, num_tokens,
-    )
-
-
-def _mask_batch(new, old, active, axis):
-    shape = [1] * new.ndim
-    shape[axis] = active.shape[0]
-    return jnp.where(active.reshape(shape), new, old)
+    def request_metrics(self) -> list[dict]:
+        """Per-request serving metrics (TTFT, tokens/s, acceptance rate)."""
+        return self.scheduler.request_metrics(self.cfg.gamma)

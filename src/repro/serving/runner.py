@@ -1,0 +1,288 @@
+"""Jitted model-execution bodies for the serving engine.
+
+Two fixed-shape programs cover the whole request lifecycle:
+
+* :func:`prefill_body` — **chunked prefill**: every admitted slot advances
+  through up to ``cfg.prefill_chunk`` prompt tokens per call (both target
+  and drafter, ``mode="verify"`` with per-row valid lengths), so prompt
+  ingestion is ONE compiled program regardless of prompt length and runs
+  concurrently with decode for the already-ready slots — no per-bucket
+  jit cache, no blocking the decode loop on admission.
+
+* :func:`decode_body` — one speculative iteration over all ready slots
+  (the old engine ``_iteration``): drafter catch-up chunk, gamma-1 draft
+  steps, target verify chunk, draft verification (token / block / greedy
+  — the paper's algorithms), commit. EOS / max-new-tokens / max-len stop
+  detection runs *inside* the program, so the host loop syncs only the
+  small :class:`StepOutputs` tuple per step and the bookkeeping arrays
+  stay device-resident (see ``repro.serving.batch``).
+
+Bookkeeping invariants (per slot): ``seq_buf[: len]`` holds all committed
+tokens; the *target* has consumed ``seq_buf[: len-1]`` — the last
+committed token is consumed at the start of the next verify chunk; the
+*drafter* has consumed ``seq_buf[: d_len]`` and catches up to ``len`` at
+the start of each iteration (a small re-process chunk; cheap because the
+drafter is small, and it makes SSM-state rollback trivial: the drafter
+never commits state past ``len``). KV ring writes past ``len`` are safe:
+they are either overwritten by the true tokens at those positions or
+masked by causality — provided the cache ``chunk_slack`` covers the
+longest in-flight chunk (``max(gamma + 1, prefill_chunk)``).
+
+Note on verifiers: ``token`` and ``block`` are lossless end-to-end (the
+greedy-equality tests check token-identical outputs at temperature 0).
+``greedy_block`` is served WITHOUT the Algorithm-5 distribution
+modification (the paper presents it as a theoretical device and
+recommends block verification); its faithful lossless form — including
+nested modification — lives in ``repro.core.simulate``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling, verification
+from repro.models.model import Model
+from repro.models.ssm import SSMEntry
+from repro.serving.batch import BatchState
+
+
+class StepOutputs(NamedTuple):
+    """The only per-iteration device→host traffic (all shapes O(B·gamma)):
+    everything else — seq_buf, lens, masks, caches — stays on device."""
+
+    tokens: jax.Array      # (B, G+1) int32 — this iteration's decoded tokens
+    n_keep: jax.Array      # (B,) int32 — tokens to emit (0 past EOS/budget)
+    num_tokens: jax.Array  # (B,) int32 — tau + 1 (acceptance accounting)
+    done: jax.Array        # (B,) bool — slot finished, retire it
+
+
+def _restore_ssm(drafted_cache, committed_cache):
+    """Keep post-draft KV entries (stale-safe) but restore SSM entries to
+    the committed catch-up state (SSM state cannot be rolled back)."""
+
+    def pick(a, b):
+        if isinstance(a, SSMEntry):
+            return b
+        return a
+
+    return jax.tree.map(
+        pick, drafted_cache, committed_cache,
+        is_leaf=lambda x: isinstance(x, SSMEntry),
+    )
+
+
+def _mask_batch(new, old, mask, axis):
+    shape = [1] * new.ndim
+    shape[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shape), new, old)
+
+
+def _mask_cache(new_cache, old_cache, mask):
+    """Per-slot cache select: stacked cache entries carry batch at axis 1."""
+    return jax.tree.map(
+        lambda new, old: _mask_batch(new, old, mask, axis=1),
+        new_cache, old_cache,
+    )
+
+
+def prefill_body(
+    target: Model, drafter: Model, cfg,
+    t_params, d_params, t_cache, d_cache, batch: BatchState,
+):
+    """Advance every prefilling slot by one fixed-size prompt chunk.
+
+    Both models consume up to ``cfg.prefill_chunk`` tokens per slot from
+    ``seq_buf[t_pref:]`` (stopping at ``lens - 1``: the engine invariant
+    is that the last committed token is consumed by the next chunk —
+    verify chunk for the target, catch-up chunk for the drafter). Slots
+    that are ready, inactive, or mid-decode are restored untouched.
+    """
+    c = cfg.prefill_chunk
+    rem = batch.lens - 1 - batch.t_pref
+    pending = batch.active & ~batch.ready
+    n = jnp.where(pending, jnp.clip(rem, 0, c), 0)   # tokens this chunk
+    nn = jnp.maximum(n, 1)                           # safe valid_len
+    touched = n > 0
+
+    idx = batch.t_pref[:, None] + jnp.arange(c)[None]
+    toks = jnp.take_along_axis(
+        batch.seq_buf, jnp.minimum(idx, batch.max_len - 1), axis=1
+    )
+
+    def advance(model, params, cache):
+        _, vcache, _ = model.apply(
+            params, toks, cache=cache, lens=batch.t_pref,
+            mode="verify", valid_len=nn, last_logits_only=True,
+        )
+        # commit_cache(c, k) commits k+1 consumed tokens.
+        return _mask_cache(model.commit_cache(vcache, nn - 1), cache, touched)
+
+    t_cache = advance(target, t_params, t_cache)
+    d_cache = advance(drafter, d_params, d_cache)
+
+    t_pref = batch.t_pref + n
+    ready = batch.ready | (batch.active & (t_pref >= batch.lens - 1))
+    return t_cache, d_cache, batch._replace(t_pref=t_pref, ready=ready)
+
+
+def decode_body(
+    target: Model, drafter: Model, cfg, verify,
+    t_params, d_params, t_cache, d_cache, batch: BatchState, key,
+):
+    """One speculative iteration over all ready slots. Returns the updated
+    caches and batch plus :class:`StepOutputs`; ``num_tokens``/``n_keep``
+    are 0 and ``done`` False for slots that did not run."""
+    seq_buf, lens, d_lens = batch.seq_buf, batch.lens, batch.d_lens
+    b = seq_buf.shape[0]
+    g = cfg.gamma
+    vocab = target.cfg.vocab
+    run = batch.active & batch.ready
+    key_d, key_v = jax.random.split(key)
+
+    # ---- 1. drafter catch-up: chunk of up to g+1 tokens from d_lens. ----
+    k_catch = g + 1
+    idx = d_lens[:, None] + jnp.arange(k_catch)[None]
+    catch_toks = jnp.take_along_axis(
+        seq_buf, jnp.minimum(idx, seq_buf.shape[1] - 1), axis=1
+    )
+    n_valid = jnp.clip(lens - d_lens, 1, k_catch)  # in [1, g+1]
+    d_logits, d_vcache, _ = drafter.apply(
+        d_params, catch_toks, cache=d_cache, lens=d_lens,
+        mode="verify", valid_len=n_valid,
+    )
+    d_cache_committed = drafter.commit_cache(d_vcache, n_valid - 1)
+    # q(. | committed prefix): logits at index n_valid-1.
+    last_q_logits = jnp.take_along_axis(
+        d_logits, (n_valid - 1)[:, None, None], axis=1
+    )[:, 0]
+
+    # ---- 2. draft gamma tokens. ----
+    def probs_of(logits):
+        return sampling.logits_to_probs(
+            logits[..., :vocab], temperature=cfg.temperature
+        )
+
+    q0 = probs_of(last_q_logits)                      # (B, V)
+    key_d, sub = jax.random.split(key_d)
+    x1 = sampling.categorical(sub, q0)
+
+    def draft_step(carry, i):
+        cache, tok, key_i = carry
+        key_i, sub = jax.random.split(key_i)
+        pos_len = lens + i  # drafter consumed lens+i tokens so far
+        logits, cache, _ = drafter.apply(
+            d_params, tok[:, None], cache=cache, lens=pos_len, mode="decode"
+        )
+        q = probs_of(logits[:, 0])
+        nxt = sampling.categorical(sub, q)
+        return (cache, nxt, key_i), (tok, q)
+
+    (d_cache_drafted, _, _), (draft_toks, q_scan) = jax.lax.scan(
+        draft_step, (d_cache_committed, x1, key_d), jnp.arange(g)
+    )
+    draft_toks = draft_toks.T                          # (B, G): X_1..X_G
+    # q_scan[i] = q(. | prefix, X_1..X_{i+1}); verification needs
+    # [q0, q(.|X_1), ..., q(.|X^{G-1})].
+    q_rows = jnp.concatenate(
+        [q0[:, None], jnp.swapaxes(q_scan, 0, 1)[:, : g - 1]], axis=1
+    )                                                  # (B, G, V)
+    d_cache_next = _restore_ssm(d_cache_drafted, d_cache_committed)
+
+    # ---- 3. target verify chunk [last_token, X_1..X_gamma]. ----
+    last_tok = jnp.take_along_axis(seq_buf, (lens - 1)[:, None], axis=1)
+    chunk = jnp.concatenate([last_tok, draft_toks], axis=1)  # (B, G+1)
+    t_logits, t_vcache, _ = target.apply(
+        t_params, chunk, cache=t_cache, lens=lens - 1, mode="verify"
+    )
+    p_rows = probs_of(t_logits)                         # (B, G+1, V)
+
+    # ---- 4. verification (the paper's algorithms). ----
+    res = verify(key_v, verification.make_context(draft_toks, q_rows, p_rows))
+    tau = res.num_accepted
+    num_tokens = jnp.where(run, res.num_tokens, 0)
+
+    # ---- 5. commit. ----
+    t_cache_next = _mask_cache(target.commit_cache(t_vcache, tau), t_cache, run)
+    d_cache_next = _mask_cache(d_cache_next, d_cache, run)
+    pos = jnp.arange(g + 1)[None]
+    write_idx = lens[:, None] + pos
+    valid = (pos < num_tokens[:, None]) & run[:, None]
+    write_idx = jnp.where(valid, write_idx, seq_buf.shape[1] - 1)
+    b_idx = jnp.broadcast_to(jnp.arange(b)[:, None], write_idx.shape)
+    seq_buf = seq_buf.at[b_idx, write_idx].set(
+        jnp.where(valid, res.tokens, seq_buf[b_idx, write_idx])
+    )
+    new_lens = jnp.where(run, lens + num_tokens, lens)
+    new_d_lens = jnp.where(run, lens, d_lens)
+
+    # ---- 6. stop detection (device-side). ----
+    emitted_before = lens - batch.out_start  # output tokens so far
+    cum_out = emitted_before[:, None] + pos + 1
+    in_block = pos < num_tokens[:, None]
+    hit = in_block & (cum_out >= batch.max_new[:, None])
+    if cfg.eos_id >= 0:
+        hit = hit | (in_block & (res.tokens == cfg.eos_id))
+    first_stop = jnp.min(jnp.where(hit, pos, g + 1), axis=1)
+    n_keep = jnp.where(run, jnp.minimum(num_tokens, first_stop + 1), 0)
+    done = run & (
+        (first_stop <= g) | (new_lens + g + 2 >= cfg.max_len)
+    )
+
+    # Deactivate finished slots on device immediately: with the engine's
+    # double-buffered loop the next iteration is dispatched before the host
+    # sees `done`, and this mask keeps that in-flight step from wasting
+    # work on (or corrupting state of) a finished slot.
+    new_batch = batch._replace(
+        seq_buf=seq_buf, lens=new_lens, d_lens=new_d_lens,
+        active=batch.active & ~done, ready=batch.ready & ~done,
+    )
+    outs = StepOutputs(
+        tokens=res.tokens, n_keep=n_keep, num_tokens=num_tokens, done=done
+    )
+    return t_cache_next, d_cache_next, new_batch, outs
+
+
+class Runner:
+    """Owns the compiled programs for one (target, drafter) pair. Exactly
+    two executables cover the whole lifecycle — chunked prefill and the
+    speculative iteration — both fixed-shape, so no shape-keyed jit
+    caches and no recompiles at serve time."""
+
+    def __init__(self, target: Model, drafter: Model, cfg):
+        assert target.cfg.vocab == drafter.cfg.vocab
+        self.target, self.drafter, self.cfg = target, drafter, cfg
+        self.verify = verification.get_ctx_verifier(
+            cfg.verifier, residual_backend=cfg.residual_backend
+        )
+        self._prefill_fn = jax.jit(partial(prefill_body, target, drafter, cfg))
+        self._decode_fn = jax.jit(
+            partial(decode_body, target, drafter, cfg, self.verify)
+        )
+
+    @property
+    def chunk_slack(self) -> int:
+        """Longest in-flight chunk either program writes past a committed
+        length — the ring-capacity slack the caches must reserve."""
+        return max(self.cfg.gamma + 1, self.cfg.prefill_chunk)
+
+    def init_caches(self, dtype=jnp.float32):
+        cfg = self.cfg
+        t_cache = self.target.init_cache(
+            cfg.max_slots, cfg.max_len, dtype, chunk_slack=self.chunk_slack
+        )
+        d_cache = self.drafter.init_cache(
+            cfg.max_slots, cfg.max_len, dtype, chunk_slack=self.chunk_slack
+        )
+        return t_cache, d_cache
+
+    def prefill_step(self, t_params, d_params, t_cache, d_cache, batch):
+        return self._prefill_fn(t_params, d_params, t_cache, d_cache, batch)
+
+    def decode_step(self, t_params, d_params, t_cache, d_cache, batch, key):
+        return self._decode_fn(
+            t_params, d_params, t_cache, d_cache, batch, key
+        )

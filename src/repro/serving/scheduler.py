@@ -1,0 +1,177 @@
+"""Host-side request lifecycle for the serving engine.
+
+The :class:`Scheduler` owns everything that is *about requests* rather
+than about tensors: the FIFO admission queue, the slot→request mapping,
+retirement, and per-request metrics (TTFT, tokens/s, acceptance rate).
+It holds a host mirror of the device-resident prefill progress — chunk
+counts are deterministic, so the mirror needs no device sync: after each
+dispatched prefill step every prefilling slot has consumed exactly
+``min(chunk, remaining)`` more prompt tokens.
+
+It never touches device arrays; the engine translates admissions and
+retirements into :mod:`repro.serving.batch` updates.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class RequestState:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    output: list[int] = field(default_factory=list)
+    iterations: int = 0
+    accepted_total: int = 0
+    # lifecycle timestamps (engine clock; None until reached)
+    submit_t: float = 0.0
+    admit_t: float | None = None
+    first_token_t: float | None = None
+    finish_t: float | None = None
+    finish_reason: str | None = None
+    finished: bool = False
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Time to first token, including queue wait."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def tokens_per_s(self) -> float | None:
+        if self.finish_t is None or not self.output:
+            return None
+        dur = self.finish_t - self.submit_t
+        return len(self.output) / dur if dur > 0 else None
+
+    def acceptance_rate(self, gamma: int) -> float:
+        """Fraction of drafted tokens accepted (block efficiency - 1 is a
+        related but distinct quantity: BE counts the bonus token)."""
+        drafted = self.iterations * gamma
+        return self.accepted_total / drafted if drafted else 0.0
+
+
+class Scheduler:
+    """FIFO queue + slot bookkeeping + per-request metrics."""
+
+    def __init__(
+        self,
+        num_slots: int,
+        default_max_new: int,
+        prefill_chunk: int,
+        clock=time.perf_counter,
+    ):
+        self.num_slots = num_slots
+        self.default_max_new = default_max_new
+        self.prefill_chunk = prefill_chunk
+        self.clock = clock
+        self.queue: deque[RequestState] = deque()
+        self.slot_req: list[RequestState | None] = [None] * num_slots
+        self._prefill_left = [0] * num_slots
+        self.done: dict[int, RequestState] = {}
+        self._next_rid = 0
+
+    # -- submission / admission --------------------------------------------
+
+    def submit(
+        self, prompt_ids: list[int], max_new_tokens: int | None = None
+    ) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(
+            RequestState(
+                rid=rid,
+                prompt=list(prompt_ids),
+                max_new_tokens=(
+                    self.default_max_new
+                    if max_new_tokens is None else max_new_tokens
+                ),
+                submit_t=self.clock(),
+            )
+        )
+        return rid
+
+    def admit(self) -> list[tuple[int, RequestState]]:
+        """Fill free slots from the queue (FIFO). Returns the new
+        (slot, request) pairs; the engine stages them on device."""
+        admitted = []
+        now = self.clock()
+        for slot in range(self.num_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                req.admit_t = now
+                self.slot_req[slot] = req
+                # Both models must consume plen - 1 prompt tokens.
+                self._prefill_left[slot] = max(len(req.prompt) - 1, 0)
+                admitted.append((slot, req))
+        return admitted
+
+    # -- prefill mirror ----------------------------------------------------
+
+    def prefill_pending(self) -> bool:
+        return any(
+            left > 0 and self.slot_req[slot] is not None
+            for slot, left in enumerate(self._prefill_left)
+        )
+
+    def note_prefill_dispatch(self) -> None:
+        """Account one dispatched chunked-prefill step: every prefilling
+        slot advanced by ``min(chunk, remaining)`` tokens."""
+        for slot in range(self.num_slots):
+            if self.slot_req[slot] is not None:
+                left = self._prefill_left[slot]
+                self._prefill_left[slot] = max(left - self.prefill_chunk, 0)
+
+    def ready_slots(self) -> dict[int, RequestState]:
+        """Live slots whose prefill has fully dispatched (decodable)."""
+        return {
+            slot: req
+            for slot, req in enumerate(self.slot_req)
+            if req is not None and self._prefill_left[slot] == 0
+        }
+
+    # -- retirement --------------------------------------------------------
+
+    def retire(self, slot: int, reason: str) -> RequestState:
+        req = self.slot_req[slot]
+        assert req is not None, slot
+        req.finished = True
+        req.finish_t = self.clock()
+        req.finish_reason = reason
+        self.done[req.rid] = req
+        self.slot_req[slot] = None
+        self._prefill_left[slot] = 0
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            r is not None for r in self.slot_req
+        )
+
+    # -- metrics -----------------------------------------------------------
+
+    def request_metrics(self, gamma: int) -> list[dict]:
+        out = []
+        for req in sorted(self.done.values(), key=lambda r: r.rid):
+            out.append(
+                {
+                    "rid": req.rid,
+                    "prompt_len": len(req.prompt),
+                    "output_len": len(req.output),
+                    "iterations": req.iterations,
+                    "ttft_s": req.ttft_s,
+                    "tokens_per_s": req.tokens_per_s,
+                    "acceptance_rate": req.acceptance_rate(gamma),
+                    "block_efficiency": (
+                        (req.accepted_total + req.iterations) / req.iterations
+                        if req.iterations else 0.0
+                    ),
+                    "finish_reason": req.finish_reason,
+                }
+            )
+        return out

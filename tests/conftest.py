@@ -16,3 +16,30 @@ def _clear_jax_caches():
     yield
     jax.clear_caches()
     gc.collect()
+
+
+def hypothesis_stub():
+    """Drop-in (given, settings, st) for environments without hypothesis:
+    property-based cases are skipped with a clear reason, deterministic
+    cases in the same module keep running."""
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            def _strategy(*_a, **_k):
+                return None
+
+            return _strategy
+
+    return given, settings, _Strategies()

@@ -17,8 +17,8 @@ from repro.distributed import sharding as shd
 from repro.launch import roofline
 from repro.models import Model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH_MP = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 class TestParamSpecs:
@@ -117,7 +117,8 @@ params = model.abstract_params()
 opt = optim.OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=params, nu=params)
 batch = {k: jax.ShapeDtypeStruct((4, 64), jnp.int32) for k in ("tokens", "labels")}
 extras = model.extras_specs(4)
-with jax.set_mesh(mesh):
+mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+with mesh_ctx:
     lowered = jax.jit(
         step,
         in_shardings=(p_shard, opt_shard, {k: bsh for k in batch},
@@ -125,6 +126,8 @@ with jax.set_mesh(mesh):
     ).lower(params, opt, batch, extras or None)
     compiled = lowered.compile()
 cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+    cost = cost[0]
 print(json.dumps({"flops": float(cost.get("flops", 0))}))
 """
 

@@ -99,3 +99,115 @@ def test_sampled_spec_decoding_runs_all_verifiers():
         out = eng.run()
         assert len(out[rid].output) == 12
         assert all(0 <= t < tgt.cfg.vocab for t in out[rid].output)
+
+
+def test_chunked_prefill_long_prompt_matches_reference():
+    """Prompts longer than prefill_chunk run through multiple chunked
+    prefill steps; committed output must still be token-identical."""
+    tgt, drf, tp, dp = _models("smollm-135m")
+    cfg = EngineConfig(
+        gamma=3, verifier="block", max_slots=2, max_len=128,
+        temperature=0.0, max_new_tokens=8, prefill_chunk=8,
+    )
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    prompts = [[(i * 7 + 3) % tgt.cfg.vocab for i in range(21)],
+               [(i * 5 + 1) % tgt.cfg.vocab for i in range(4)]]
+    rids = [eng.submit(p) for p in prompts]
+    out = eng.run()
+    for rid, p in zip(rids, prompts):
+        assert out[rid].output[:8] == _greedy_reference(tgt, tp, p, 8), rid
+    # 21-token prompt needs ceil(20/8) = 3 chunks; interleaved with the
+    # short prompt's single chunk, all inside the same compiled program.
+    assert eng.last_stats["prefill_steps"] >= 3
+
+
+def test_token_and_block_commit_identical_greedy_sequences():
+    """At temperature 0 with the same PRNG key, the token and block
+    verifiers must commit identical sequences (both lossless)."""
+    tgt, drf, tp, dp = _models("smollm-135m")
+    outs = {}
+    for verifier in ["token", "block"]:
+        cfg = EngineConfig(
+            gamma=4, verifier=verifier, max_slots=2, max_len=128,
+            temperature=0.0, max_new_tokens=16,
+        )
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        rids = [eng.submit(p) for p in ([3, 1, 4, 1, 5], [2, 7, 1, 8])]
+        res = eng.run()
+        outs[verifier] = [res[r].output for r in rids]
+    assert outs["token"] == outs["block"]
+
+
+def test_residual_backend_pallas_matches_jnp_in_engine():
+    """The Pallas residual-sums kernel (forced via pallas_interpret on
+    CPU) must produce the same committed sequences as the pure-jnp
+    backend, at a sampled temperature with identical PRNG keys."""
+    tgt, drf, tp, dp = _models("smollm-135m", seed=5)
+    outs = {}
+    for backend in ["jnp", "pallas_interpret"]:
+        cfg = EngineConfig(
+            gamma=4, verifier="block", max_slots=2, max_len=128,
+            temperature=0.8, max_new_tokens=20, residual_backend=backend,
+        )
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        rids = [eng.submit(p) for p in ([5, 3, 8], [1, 2, 3, 4])]
+        res = eng.run()
+        outs[backend] = [res[r].output for r in rids]
+    assert outs["jnp"] == outs["pallas_interpret"]
+
+
+def test_engine_routes_block_residuals_through_kernel_entry_point():
+    from repro.core import verification
+    from repro.kernels import ops
+
+    tgt, drf, tp, dp = _models("smollm-135m")
+    cfg = EngineConfig(gamma=2, verifier="block", max_slots=1, max_len=64)
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    assert cfg.residual_backend == "auto"
+    assert (
+        verification.resolve_residual_sums("auto")
+        is ops.verify_residual_sums
+    )
+    # and the runner's bound verifier carries exactly that backend
+    assert eng.runner.verify.keywords["residual_sums"] is (
+        ops.verify_residual_sums
+    )
+
+
+def test_stats_count_max_len_guard_retirements():
+    """Requests cut off by the max_len guard must still contribute their
+    emitted tokens to throughput stats (regression: they were dropped)."""
+    tgt, drf, tp, dp = _models("smollm-135m")
+    cfg = EngineConfig(
+        gamma=4, verifier="block", max_slots=2, max_len=48,
+        temperature=0.0, max_new_tokens=500,
+    )
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    rids = [eng.submit([1, 2, 3, 4, 5]) for _ in range(2)]
+    out = eng.run()
+    assert sorted(out) == sorted(rids)
+    total = sum(len(out[r].output) for r in rids)
+    assert total > 0
+    assert eng.last_stats["tokens"] == total
+    for r in rids:
+        assert out[r].finish_reason == "max_len_guard"
+
+
+def test_request_metrics_reported():
+    tgt, drf, tp, dp = _models("smollm-135m")
+    cfg = EngineConfig(
+        gamma=3, verifier="block", max_slots=2, max_len=96,
+        temperature=0.0, max_new_tokens=8,
+    )
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    rids = [eng.submit([4, 2, 7]) for _ in range(3)]  # 3 reqs, 2 slots
+    eng.run()
+    metrics = eng.request_metrics()
+    assert sorted(m["rid"] for m in metrics) == sorted(rids)
+    for m in metrics:
+        assert m["output_len"] == 8
+        assert m["ttft_s"] is not None and m["ttft_s"] >= 0
+        assert m["tokens_per_s"] is not None and m["tokens_per_s"] > 0
+        assert 0.0 <= m["acceptance_rate"] <= 1.0
+        assert 1.0 <= m["block_efficiency"] <= cfg.gamma + 1
+        assert m["finish_reason"] == "length"

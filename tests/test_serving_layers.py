@@ -1,0 +1,207 @@
+"""Unit tests for the serving layers: scheduler bookkeeping (no models or
+compiles involved), the device-resident BatchState transitions, and the
+verification residual-sums backend registry."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import verification
+from repro.kernels import ops, ref
+from repro.serving import batch as batch_mod
+from repro.serving.scheduler import Scheduler
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+class TestScheduler:
+    def _sched(self, slots=2, chunk=16):
+        return Scheduler(slots, default_max_new=8, prefill_chunk=chunk,
+                         clock=_FakeClock())
+
+    def test_fifo_admission_and_slot_reuse(self):
+        s = self._sched(slots=2)
+        rids = [s.submit([1] * 5) for _ in range(3)]
+        admitted = s.admit()
+        assert [req.rid for _, req in admitted] == rids[:2]
+        assert s.admit() == []  # no free slot
+        slot0 = admitted[0][0]
+        s.retire(slot0, "length")
+        again = s.admit()
+        assert len(again) == 1 and again[0][1].rid == rids[2]
+        assert again[0][0] == slot0
+
+    def test_prefill_mirror_counts_chunks(self):
+        s = self._sched(slots=1, chunk=4)
+        s.submit(list(range(10)))  # plen 10 -> 9 tokens to prefill
+        s.admit()
+        steps = 0
+        while s.prefill_pending():
+            s.note_prefill_dispatch()
+            steps += 1
+        assert steps == 3  # ceil(9 / 4)
+        assert list(s.ready_slots()) == [0]
+
+    def test_single_token_prompt_ready_immediately(self):
+        s = self._sched(slots=1)
+        s.submit([7])
+        s.admit()
+        assert not s.prefill_pending()
+        assert list(s.ready_slots()) == [0]
+
+    def test_retire_records_metrics(self):
+        s = self._sched(slots=1)
+        rid = s.submit([1, 2, 3])
+        ((slot, req),) = s.admit()
+        req.output.extend([4, 5])
+        req.first_token_t = s.clock()
+        req.iterations, req.accepted_total = 2, 3
+        s.retire(slot, "eos")
+        assert not s.has_work()
+        (m,) = s.request_metrics(gamma=4)
+        assert m["rid"] == rid
+        assert m["finish_reason"] == "eos"
+        assert m["ttft_s"] > 0
+        assert m["tokens_per_s"] > 0
+        assert m["acceptance_rate"] == pytest.approx(3 / 8)
+        assert m["block_efficiency"] == pytest.approx(5 / 2)
+
+
+class TestBatchState:
+    def test_admit_sets_invariants(self):
+        st = batch_mod.init_batch(2, 32)
+        st = batch_mod.admit_slot(st, 1, [5, 6, 7], max_new=4)
+        assert int(st.lens[1]) == 3
+        assert int(st.d_lens[1]) == 2
+        assert int(st.t_pref[1]) == 0
+        assert bool(st.active[1]) and not bool(st.ready[1])
+        assert int(st.out_start[1]) == 3 and int(st.max_new[1]) == 4
+        assert st.seq_buf[1, :3].tolist() == [5, 6, 7]
+        assert not bool(st.active[0])  # untouched
+
+    def test_single_token_prompt_is_ready(self):
+        st = batch_mod.init_batch(1, 16)
+        st = batch_mod.admit_slot(st, 0, [9], max_new=2)
+        assert bool(st.ready[0])
+
+    def test_release_slot(self):
+        st = batch_mod.init_batch(1, 16)
+        st = batch_mod.admit_slot(st, 0, [1, 2], max_new=2)
+        st = batch_mod.release_slot(st, 0)
+        assert not bool(st.active[0]) and not bool(st.ready[0])
+
+    def test_clear_slot_cache_zeroes_one_batch_row(self):
+        cache = {"kv": jnp.ones((3, 2, 5, 4))}  # (groups, batch, ...)
+        out = batch_mod.clear_slot_cache(cache, 1)
+        assert float(jnp.sum(out["kv"][:, 1])) == 0.0
+        assert float(jnp.min(out["kv"][:, 0])) == 1.0
+
+
+class TestResidualBackendRegistry:
+    def test_registry_names(self):
+        names = verification.residual_backends()
+        assert "jnp" in names
+        assert "pallas" in names  # registered by repro.kernels.ops import
+
+    def test_auto_resolves_to_kernel_entry_point(self):
+        assert (
+            verification.resolve_residual_sums("auto")
+            is ops.verify_residual_sums
+        )
+        assert (
+            verification.resolve_residual_sums("jnp")
+            is verification.default_residual_sums
+        )
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError):
+            verification.resolve_residual_sums("nope")
+        # None means "plain jnp default" at the verifier level, not auto.
+        with pytest.raises(ValueError):
+            verification.resolve_residual_sums(None)
+
+    def test_pallas_backed_block_verify_matches_jnp(self):
+        """Pallas-kernel residual_sums inside block_verify reproduces the
+        jnp default bit-for-bit at these shapes (same key -> same result).
+        pallas_interpret forces the kernel lowering on CPU."""
+        b, g, v = 4, 4, 640
+        k1, k2, k3, kk = jax.random.split(jax.random.key(11), 4)
+        q = jax.random.dirichlet(k1, jnp.ones(v), (b, g))
+        p = jax.random.dirichlet(k2, jnp.ones(v), (b, g + 1))
+        toks = jax.random.randint(k3, (b, g), 0, v)
+        r_jnp = verification.block_verify(
+            kk, toks, q, p,
+            residual_sums=verification.resolve_residual_sums("jnp"),
+        )
+        r_pal = verification.block_verify(
+            kk, toks, q, p,
+            residual_sums=verification.resolve_residual_sums(
+                "pallas_interpret"
+            ),
+        )
+        assert bool(jnp.all(r_jnp.num_accepted == r_pal.num_accepted))
+        assert bool(jnp.all(r_jnp.tokens == r_pal.tokens))
+
+    def test_kernel_matches_ref_oracle(self):
+        b, k, v = 2, 3, 500
+        k1, k2, k3 = jax.random.split(jax.random.key(5), 3)
+        ps = jax.random.uniform(k1, (b, k))
+        p = jax.random.dirichlet(k2, jnp.ones(v), (b, k))
+        q = jax.random.dirichlet(k3, jnp.ones(v), (b, k))
+        got = verification.resolve_residual_sums("pallas_interpret")(ps, p, q)
+        want = ref.verify_residual_sums(ps, p, q)
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+    def test_kernel_empty_rows_returns_zeros(self):
+        """K = 0 (greedy-block at gamma=1 has no middle positions) must
+        not crash the kernel wrapper."""
+        ps = jnp.zeros((2, 0))
+        p = jnp.zeros((2, 0, 64))
+        q = jnp.zeros((2, 0, 64))
+        for backend in ["pallas", "pallas_interpret", "jnp"]:
+            got = verification.resolve_residual_sums(backend)(ps, p, q)
+            assert got.shape == (2, 0)
+
+    def test_greedy_block_gamma1_runs_on_pallas_backend(self):
+        """Regression: gamma=1 greedy-block routes a K=0 reduction through
+        the kernel backend; it must produce a valid result, identical to
+        the jnp path."""
+        b, v = 3, 64
+        k1, k2, k3, kk = jax.random.split(jax.random.key(3), 4)
+        q = jax.random.dirichlet(k1, jnp.ones(v), (b, 1))
+        p = jax.random.dirichlet(k2, jnp.ones(v), (b, 2))
+        toks = jax.random.randint(k3, (b, 1), 0, v)
+        r_jnp = verification.greedy_block_verify(kk, toks, q, p)
+        for backend in ["pallas", "pallas_interpret"]:
+            r_pal = verification.greedy_block_verify(
+                kk, toks, q, p,
+                residual_sums=verification.resolve_residual_sums(backend),
+            )
+            assert bool(jnp.all(r_jnp.tokens == r_pal.tokens)), backend
+
+
+class TestGreedyDenIdentity:
+    def test_greedy_block_residual_hook_consistent(self):
+        """greedy_block with the fused backend matches the jnp default
+        (the derived-denominator identity holds for both)."""
+        b, g, v = 3, 4, 320
+        k1, k2, k3, kk = jax.random.split(jax.random.key(21), 4)
+        q = jax.random.dirichlet(k1, jnp.ones(v), (b, g))
+        p = jax.random.dirichlet(k2, jnp.ones(v), (b, g + 1))
+        toks = jax.random.randint(k3, (b, g), 0, v)
+        r_jnp = verification.greedy_block_verify(kk, toks, q, p)
+        r_pal = verification.greedy_block_verify(
+            kk, toks, q, p,
+            residual_sums=verification.resolve_residual_sums(
+                "pallas_interpret"
+            ),
+        )
+        assert bool(jnp.all(r_jnp.num_accepted == r_pal.num_accepted))
+        assert bool(jnp.all(r_jnp.tokens == r_pal.tokens))
