@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.attention import KVCache
+from repro.models.attention import KVCache, PagedKV
 from repro.models.model import Model
 from repro.models.ssm import SSMEntry, SSMVerify
 from repro.models.transformer import CrossKV
@@ -145,6 +145,15 @@ def cache_shardings(model: Model, mesh: Mesh, cache, shard_seq: bool = False,
     the batch dim only (pure data-parallel serving)."""
 
     def one(entry):
+        if isinstance(entry, PagedKV):
+            # (G, P, page, K, hd): the *page-pool* dim takes the data
+            # axes the way per-slot caches shard their batch dim — pages
+            # are slot-agnostic, so pool shards stay balanced regardless
+            # of which slots are long; KV heads shard over "model".
+            return PagedKV(
+                k=NamedSharding(mesh, _entry_spec(entry.k.shape, 1, None, 3, mesh, False)),
+                v=NamedSharding(mesh, _entry_spec(entry.v.shape, 1, None, 3, mesh, False)),
+            )
         if isinstance(entry, KVCache):
             # (G, B, C, K, hd)
             return KVCache(
@@ -176,7 +185,9 @@ def cache_shardings(model: Model, mesh: Mesh, cache, shard_seq: bool = False,
 
     return jax.tree.map(
         one if tp else one_dp, cache,
-        is_leaf=lambda x: isinstance(x, (KVCache, SSMEntry, CrossKV)),
+        is_leaf=lambda x: isinstance(
+            x, (KVCache, PagedKV, SSMEntry, CrossKV)
+        ),
     )
 
 

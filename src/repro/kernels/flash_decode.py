@@ -7,6 +7,15 @@ heads of one KV head processed together — an (G, hd) x (hd, Ck) MXU
 matmul per tile), sliding windows, gemma-style logit softcap, and ring
 validity via key positions.
 
+:func:`flash_decode_paged` is the paged-KV variant: K/V live in a global
+page pool ``(P, page, Kh, hd)`` shared by all sequences, and the KV tile
+for grid step ``(b, j, pj)`` is resolved *in the grid* through the
+scalar-prefetched page table — ``page_table[b, pj]`` feeds the BlockSpec
+index map, so each sequence DMAs exactly its own pages and the pool
+never materializes densely. Tile validity comes from logical positions
+(``pj * page + offset``) against the per-sequence total, not from a
+stored position array.
+
 This is the target-model hot spot of speculative decoding at decode time:
 arithmetic intensity ~ O(G) FLOPs/byte, i.e. HBM-bandwidth-bound; the
 kernel exists to reach that bound in one pass rather than XLA's
@@ -131,4 +140,126 @@ def flash_decode(
         ],
         interpret=interpret,
     )(qg, kt, vt, k_pos, q_pos.reshape(b, 1))
+    return out.reshape(b, h, hd)
+
+
+def _paged_kernel(
+    pt_ref,      # (B, maxp) scalar-prefetch page table
+    qpos_ref,    # (B,) scalar-prefetch query positions
+    total_ref,   # (B,) scalar-prefetch tokens written per sequence
+    q_ref,       # (G, hd)
+    k_ref,       # (page, hd) — one pool page of this KV head
+    v_ref,       # (page, hd)
+    out_ref,     # (G, hd)
+    m_ref, l_ref, acc_ref,
+    *, window: int, softcap: float, scale: float, page: int,
+):
+    b = pl.program_id(0)
+    pj = pl.program_id(2)
+
+    @pl.when(pj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _INIT_M)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    s = jax.lax.dot_general(
+        q, k_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # (G, page)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = pj * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    qpos = qpos_ref[b]
+    mask = (
+        (kpos < total_ref[b]) & (kpos <= qpos) & (pt_ref[b, pj] >= 0)
+    )
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, _MASK)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(pj == pl.num_programs(2) - 1)
+    def _done():
+        out_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret")
+)
+def flash_decode_paged(
+    q: jax.Array,           # (B, H, hd)
+    k_pool: jax.Array,      # (P, page, Kh, hd) — global page pool
+    v_pool: jax.Array,      # (P, page, Kh, hd)
+    page_table: jax.Array,  # (B, maxp) int32; -1 = unmapped
+    q_pos: jax.Array,       # (B,) position of the query token
+    total: jax.Array,       # (B,) tokens written (valid keys: pos < total)
+    window: int = -1,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, hd = q.shape
+    page, kh = k_pool.shape[1], k_pool.shape[2]
+    g = h // kh
+    maxp = page_table.shape[1]
+    qg = q.reshape(b, kh, g, hd)
+
+    kernel = functools.partial(
+        _paged_kernel, window=window, softcap=softcap,
+        scale=1.0 / (hd ** 0.5), page=page,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kh, maxp),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, g, hd),
+                lambda i, j, pj, pt, qp, tt: (i, j, 0, 0),
+            ),
+            # KV tile resolved through the page table: unmapped (-1)
+            # pages clamp to page 0 and are masked out in the kernel.
+            pl.BlockSpec(
+                (None, page, None, hd),
+                lambda i, j, pj, pt, qp, tt: (
+                    jnp.maximum(pt[i, pj], 0), 0, j, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (None, page, None, hd),
+                lambda i, j, pj, pt, qp, tt: (
+                    jnp.maximum(pt[i, pj], 0), 0, j, 0
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, g, hd), lambda i, j, pj, pt, qp, tt: (i, j, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(
+        page_table.astype(jnp.int32), q_pos.astype(jnp.int32),
+        total.astype(jnp.int32), qg, k_pool, v_pool,
+    )
     return out.reshape(b, h, hd)

@@ -5,6 +5,16 @@ Standard flash-attention-2 style online softmax over KV tiles, with GQA
 sliding windows and logit softcap. Query tiles are MXU-aligned; the
 (m, l, acc) running state lives in VMEM scratch across the innermost KV
 grid dimension.
+
+:func:`flash_prefill_paged` is the paged-KV variant used by the serving
+engine's chunked prefill and verify chunks: a chunk of ``S`` queries
+starting at per-sequence position ``q_start`` attends K/V gathered from
+a global page pool, with the pool page for each KV tile resolved in the
+grid via the scalar-prefetched page table (see ``flash_decode`` for the
+decode-step sibling). All ``G`` query heads of one KV head and all ``S``
+chunk positions are folded into one ``(G*S, hd)`` MXU operand; the
+per-row query position (``q_start + row % S``) drives causal/window
+masking.
 """
 
 from __future__ import annotations
@@ -129,3 +139,130 @@ def flash_prefill(
         interpret=interpret,
     )(qt, kt, vt)
     return jnp.moveaxis(out[:, :, :s], 1, 2)
+
+
+def _paged_kernel(
+    pt_ref,      # (B, maxp) scalar-prefetch page table
+    qstart_ref,  # (B,) scalar-prefetch chunk start positions
+    total_ref,   # (B,) scalar-prefetch tokens written per sequence
+    q_ref,       # (G*S, hd) — all query heads x chunk positions
+    k_ref,       # (page, hd)
+    v_ref,       # (page, hd)
+    out_ref,     # (G*S, hd)
+    m_ref, l_ref, acc_ref,
+    *, window: int, softcap: float, scale: float, page: int, s_chunk: int,
+):
+    b = pl.program_id(0)
+    pj = pl.program_id(2)
+
+    @pl.when(pj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _INIT_M)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    gs = q_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * scale
+    s = jax.lax.dot_general(
+        q, k_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # (G*S, page)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    row = jax.lax.broadcasted_iota(jnp.int32, (gs, 1), 0)
+    qpos = qstart_ref[b] + row % s_chunk                 # (G*S, 1)
+    kpos = pj * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    mask = (
+        (kpos < total_ref[b]) & (kpos <= qpos) & (pt_ref[b, pj] >= 0)
+    )
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, _MASK)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(pj == pl.num_programs(2) - 1)
+    def _done():
+        out_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret")
+)
+def flash_prefill_paged(
+    q: jax.Array,           # (B, S, H, hd) — one chunk of queries
+    k_pool: jax.Array,      # (P, page, Kh, hd) — global page pool
+    v_pool: jax.Array,      # (P, page, Kh, hd)
+    page_table: jax.Array,  # (B, maxp) int32; -1 = unmapped
+    q_start: jax.Array,     # (B,) position of the chunk's first query
+    total: jax.Array,       # (B,) tokens written (valid keys: pos < total)
+    window: int = -1,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    page, kh = k_pool.shape[1], k_pool.shape[2]
+    g = h // kh
+    maxp = page_table.shape[1]
+    # (B, S, H, hd) -> (B, Kh, G*S, hd): head-major rows so one KV head's
+    # queries are contiguous for the (G*S, hd) x (hd, page) MXU matmul.
+    qg = jnp.moveaxis(q.reshape(b, s, kh, g, hd), 1, 3)  # (B, Kh, G, S, hd)
+    qg = qg.reshape(b, kh, g * s, hd)
+
+    kernel = functools.partial(
+        _paged_kernel, window=window, softcap=softcap,
+        scale=1.0 / (hd ** 0.5), page=page, s_chunk=s,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kh, maxp),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, g * s, hd),
+                lambda i, j, pj, pt, qs, tt: (i, j, 0, 0),
+            ),
+            pl.BlockSpec(
+                (None, page, None, hd),
+                lambda i, j, pj, pt, qs, tt: (
+                    jnp.maximum(pt[i, pj], 0), 0, j, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (None, page, None, hd),
+                lambda i, j, pj, pt, qs, tt: (
+                    jnp.maximum(pt[i, pj], 0), 0, j, 0
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, g * s, hd),
+            lambda i, j, pj, pt, qs, tt: (i, j, 0, 0),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g * s, 1), jnp.float32),
+            pltpu.VMEM((g * s, 1), jnp.float32),
+            pltpu.VMEM((g * s, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g * s, hd), q.dtype),
+        interpret=interpret,
+    )(
+        page_table.astype(jnp.int32), q_start.astype(jnp.int32),
+        total.astype(jnp.int32), qg, k_pool, v_pool,
+    )
+    out = out.reshape(b, kh, g, s, hd)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, hd)

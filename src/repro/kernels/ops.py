@@ -63,6 +63,63 @@ def flash_prefill(q, k, v, window=-1, softcap=0.0):
     )
 
 
+def flash_decode_paged(
+    q, k_pool, v_pool, page_table, q_pos, total,
+    window=-1, softcap=0.0, interpret=None,
+):
+    """Paged decode attention. On TPU: the Pallas kernel resolving pool
+    pages via the scalar-prefetched page table. Elsewhere (``interpret``
+    unset): the XLA gather reference — interpret-mode emulation is for
+    kernel-fidelity tests, not serving throughput."""
+    if interpret is None and not _on_tpu():
+        return _ref.flash_decode_paged(
+            q, k_pool, v_pool, page_table, q_pos, total,
+            window=window, softcap=softcap,
+        )
+    return _fd.flash_decode_paged(
+        q, k_pool, v_pool, page_table, q_pos, total,
+        window=window, softcap=softcap,
+        interpret=bool(interpret) if interpret is not None else False,
+    )
+
+
+def flash_prefill_paged(
+    q, k_pool, v_pool, page_table, q_start, total,
+    window=-1, softcap=0.0, interpret=None,
+):
+    """Paged chunked-prefill/verify attention (see flash_decode_paged)."""
+    if interpret is None and not _on_tpu():
+        return _ref.flash_prefill_paged(
+            q, k_pool, v_pool, page_table, q_start, total,
+            window=window, softcap=softcap,
+        )
+    return _fp.flash_prefill_paged(
+        q, k_pool, v_pool, page_table, q_start, total,
+        window=window, softcap=softcap,
+        interpret=bool(interpret) if interpret is not None else False,
+    )
+
+
+def attend_paged(
+    q, k_pool, v_pool, page_table, positions, total,
+    window=-1, softcap=0.0,
+):
+    """The serving path's paged-attention entry point (called from
+    ``repro.models.attention`` when running on TPU): routes single-token
+    chunks to the decode kernel and multi-token verify/prefill chunks to
+    the chunked kernel. ``q`` is (B, S, H, hd); returns the same shape."""
+    if q.shape[1] == 1:
+        out = flash_decode_paged(
+            q[:, 0], k_pool, v_pool, page_table, positions[:, 0], total,
+            window=window, softcap=softcap,
+        )
+        return out[:, None]
+    return flash_prefill_paged(
+        q, k_pool, v_pool, page_table, positions[:, 0], total,
+        window=window, softcap=softcap,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=())
 def block_verify_fused(key, draft_tokens, q_probs, p_probs):
     """Block verification (Algorithm 2) with the vocab reductions running

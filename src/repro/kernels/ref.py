@@ -78,3 +78,77 @@ def flash_prefill(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgsc,bckd->bskgd", probs, v.astype(jnp.float32))
     return out.reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV oracles: XLA gather through the page table, then dense attention.
+# ---------------------------------------------------------------------------
+
+
+def paged_gather(
+    k_pool: jax.Array,      # (P, page, Kh, hd)
+    v_pool: jax.Array,      # (P, page, Kh, hd)
+    page_table: jax.Array,  # (B, maxp) int32; -1 = unmapped
+    total: jax.Array,       # (B,) tokens written per sequence
+):
+    """Materialize each sequence's pages in position order: returns
+    ``(k, v, k_pos)`` with shapes (B, maxp*page, Kh, hd) and (B,
+    maxp*page); ``k_pos`` is -1 at unwritten/unmapped positions."""
+    b, maxp = page_table.shape
+    page = k_pool.shape[1]
+    mapped = page_table >= 0
+    phys = jnp.clip(page_table, 0, k_pool.shape[0] - 1)
+    kd = k_pool[phys].reshape(b, maxp * page, *k_pool.shape[2:])
+    vd = v_pool[phys].reshape(b, maxp * page, *v_pool.shape[2:])
+    pos = jnp.arange(maxp * page)[None]
+    valid = (pos < total[:, None]) & jnp.repeat(mapped, page, axis=1)
+    return kd, vd, jnp.where(valid, pos, -1)
+
+
+def flash_decode_paged(
+    q: jax.Array,           # (B, H, hd)
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    q_pos: jax.Array,       # (B,)
+    total: jax.Array,       # (B,)
+    window: int = -1,
+    softcap: float = 0.0,
+) -> jax.Array:
+    kd, vd, k_pos = paged_gather(k_pool, v_pool, page_table, total)
+    return flash_decode(
+        q, kd, vd, q_pos, k_pos, window=window, softcap=softcap
+    )
+
+
+def flash_prefill_paged(
+    q: jax.Array,           # (B, S, H, hd) — chunk of queries
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    q_start: jax.Array,     # (B,) chunk start positions
+    total: jax.Array,       # (B,)
+    window: int = -1,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Chunked-prefill/verify attention over the paged pool: S queries at
+    positions ``q_start + [0, S)`` attend all written positions."""
+    b, s, h, hd = q.shape
+    kh = k_pool.shape[2]
+    g = h // kh
+    kd, vd, k_pos = paged_gather(k_pool, v_pool, page_table, total)
+    qf = q.reshape(b, s, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,bckd->bkgsc", qf, kd.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = q_start[:, None] + jnp.arange(s)[None]       # (B, S)
+    mask = (k_pos[:, None, :] >= 0) & (
+        k_pos[:, None, :] <= q_pos[:, :, None]
+    )
+    if window > 0:
+        mask &= q_pos[:, :, None] - k_pos[:, None, :] < window
+    scores = jnp.where(mask[:, None, None], scores, _MASK)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsc,bckd->bskgd", probs, vd.astype(jnp.float32))
+    return out.reshape(b, s, h, hd)

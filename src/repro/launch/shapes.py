@@ -214,9 +214,12 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
     # residual_backend="jnp": the dry-run lowers for XLA cost/collective
     # analysis on host platforms; the fused Pallas path is exercised by the
     # serving engine and the kernels benches.
+    # paged=False: the dry-run lowers the dense-cache serve step (the
+    # paged pool's gather/scatter lowering is covered by the kernel
+    # identity tests; its sharding by test_distributed).
     e_cfg = EngineConfig(
         gamma=GAMMA, verifier="block", max_slots=b, max_len=max_len,
-        temperature=1.0, residual_backend="jnp",
+        temperature=1.0, residual_backend="jnp", paged=False,
     )
     verify = verification.get_ctx_verifier(
         e_cfg.verifier, residual_backend=e_cfg.residual_backend

@@ -1,15 +1,28 @@
 """Grouped-query attention with unified train / prefill / verify / decode
-semantics, sliding-window ring-buffer KV caches and gemma-style softcaps.
+semantics, sliding-window ring-buffer KV caches, paged KV pools and
+gemma-style softcaps.
 
 One code path serves every mode:
 
 * ``kv_cache is None``  — training: self-attention among the ``S`` new
   tokens only (causal + window mask).
-* ``kv_cache`` present — the new tokens' K/V are scattered into the cache
-  (ring-buffered when the cache is shorter than the sequence, i.e. for
-  sliding-window layers), then queries attend over the whole cache. This
-  covers prefill (S = prompt), speculative verification (S = gamma + 1)
-  and decode (S = 1) uniformly.
+* ``kv_cache`` is a :class:`KVCache` — dense per-slot cache: the new
+  tokens' K/V are scattered into the cache (ring-buffered when the cache
+  is shorter than the sequence, i.e. for sliding-window layers), then
+  queries attend over the whole cache. This covers prefill (S = prompt),
+  speculative verification (S = gamma + 1) and decode (S = 1) uniformly.
+* ``kv_cache`` is a :class:`PagedKV` — the serving path for
+  global-attention layers: K/V rows live in a **global page pool** shared
+  by all slots; a per-slot ``page_table`` (managed by
+  ``repro.serving.paging``) maps logical pages (position // page_size)
+  to physical pool pages. Writes scatter through the table (positions
+  masked by ``write_mask``/unmapped pages are dropped — a shared pool
+  cannot be un-written per slot afterwards, unlike the dense cache's
+  select-restore); reads gather the slot's pages back into position
+  order. On TPU the gather+attend runs as the paged Pallas kernels
+  (``repro.kernels.ops``); elsewhere it is an XLA gather feeding the
+  *same* ``_sdpa`` as the dense path, which keeps paged and dense
+  serving bitwise identical.
 
 The pure-jnp path below is the reference; ``repro.kernels`` provides
 Pallas TPU implementations that are swapped in via ``repro.kernels.ops``.
@@ -22,6 +35,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ref import paged_gather
 from repro.models import common
 from repro.models.common import ModelConfig, Spec
 
@@ -44,6 +58,24 @@ def init_kv_cache(
         k=jnp.zeros((batch, capacity, n_kv, hd), dtype),
         v=jnp.zeros((batch, capacity, n_kv, hd), dtype),
     )
+
+
+class PagedKV(NamedTuple):
+    """Global K/V page pool for one layer (stacked over layer groups with
+    a leading group dim at rest). Slot ownership lives outside, in the
+    page table threaded through ``forward``."""
+
+    k: jax.Array  # (P, page_size, n_kv, hd)
+    v: jax.Array  # (P, page_size, n_kv, hd)
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
 
 
 def attn_param_specs(
@@ -76,6 +108,30 @@ def _scatter_ring(cache: jax.Array, new: jax.Array, positions: jax.Array):
         jnp.arange(cache.shape[0])[:, None], slots.shape
     )
     return cache.at[b_idx, slots].set(new.astype(cache.dtype))
+
+
+def _scatter_pages(
+    pool: jax.Array,        # (P, page, K, hd)
+    new: jax.Array,         # (B, S, K, hd)
+    positions: jax.Array,   # (B, S); negative = suppressed write
+    page_table: jax.Array,  # (B, max_pages) int32; -1 = unmapped
+) -> jax.Array:
+    """Scatter new K/V rows into the pool at the physical page resolved
+    through the slot's page table. Writes at negative positions, past the
+    table, or into unmapped pages are dropped — in the serving engine
+    every *committed* position is backed by an allocated page (the runner
+    allocates before it writes), so drops only ever hit positions beyond
+    a slot's valid frontier, which are rewritten before they are read."""
+    ps = pool.shape[1]
+    logical = positions // ps
+    off = positions % ps  # floor-mod: >= 0 even for suppressed writes
+    valid = (positions >= 0) & (logical < page_table.shape[1])
+    phys = jnp.take_along_axis(
+        page_table, jnp.clip(logical, 0, page_table.shape[1] - 1), axis=1
+    )
+    valid &= phys >= 0
+    phys = jnp.where(valid, phys, pool.shape[0])  # OOB sentinel -> drop
+    return pool.at[phys, off].set(new.astype(pool.dtype), mode="drop")
 
 
 def _ring_key_positions(cap: int, total: jax.Array) -> jax.Array:
@@ -167,6 +223,8 @@ def attention(
     causal: bool = True,
     use_rope: bool | None = None,
     mode: str = "train",
+    page_table: jax.Array | None = None,
+    write_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, KVCache | None]:
     use_rope = cfg.use_rope if use_rope is None else use_rope
     q = _project(x, p["wq"])
@@ -182,6 +240,35 @@ def attention(
             window, cfg.attn_softcap, causal,
         )
         new_cache = None
+    elif isinstance(kv_cache, PagedKV):
+        # Serving path through the page pool (any cached mode): scatter
+        # the chunk through the page table, then attend over the slot's
+        # gathered pages. `write_mask=False` slots must not touch the
+        # shared pool (there is no per-slot restore for pooled storage).
+        assert page_table is not None, "paged cache needs a page table"
+        w_pos = positions
+        if write_mask is not None:
+            w_pos = jnp.where(write_mask[:, None], positions, -1)
+        k_pool = _scatter_pages(kv_cache.k, k, w_pos, page_table)
+        v_pool = _scatter_pages(kv_cache.v, v, w_pos, page_table)
+        new_cache = PagedKV(k=k_pool, v=v_pool)
+        total = positions[:, -1] + 1
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops
+
+            out = ops.attend_paged(
+                q, k_pool, v_pool, page_table, positions, total,
+                window=window, softcap=cfg.attn_softcap,
+            )
+        else:
+            # paged_gather (the kernels' XLA reference oracle — one
+            # shared implementation) + the dense path's own _sdpa keeps
+            # paged serving bitwise identical to dense serving off-TPU.
+            kd, vd, k_pos = paged_gather(k_pool, v_pool, page_table, total)
+            out = _sdpa(
+                q, kd, vd, positions, k_pos,
+                window, cfg.attn_softcap, causal,
+            )
     elif mode == "prefill":
         # Prefill always starts at position 0: every needed key is inside
         # this chunk, so attention runs chunk-internal (ring caches shorter

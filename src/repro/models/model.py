@@ -29,20 +29,23 @@ class Model:
 
     def init_cache(
         self, batch: int, max_len: int, dtype=jnp.float32,
-        chunk_slack: int = 16,
+        chunk_slack: int = 16, page_pool: tuple[int, int] | None = None,
     ):
         return transformer.init_cache(
-            self.cfg, batch, max_len, dtype, chunk_slack
+            self.cfg, batch, max_len, dtype, chunk_slack,
+            page_pool=page_pool,
         )
 
     def apply(
         self, params, tokens, *, cache=None, lens=None, extras=None,
         mode="train", valid_len=None, last_logits_only=False,
+        page_table=None, kv_write_mask=None,
     ):
         return transformer.forward(
             self.cfg, params, tokens,
             cache=cache, lens=lens, extras=extras, mode=mode,
             valid_len=valid_len, last_logits_only=last_logits_only,
+            page_table=page_table, kv_write_mask=kv_write_mask,
         )
 
     def commit_cache(self, cache, tau):

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention, common, mlp, ssm
-from repro.models.attention import KVCache
+from repro.models.attention import KVCache, PagedKV
 from repro.models.common import ModelConfig, Spec
 from repro.models.ssm import SSMEntry, SSMVerify
 
@@ -196,6 +196,13 @@ def _stacked_kv(cfg, n_groups, batch, capacity, dtype):
     )
 
 
+def _stacked_paged_kv(cfg, n_groups, num_pages, page_size, dtype):
+    return PagedKV(
+        k=jnp.zeros((n_groups, num_pages, page_size, cfg.n_kv, cfg.hd), dtype),
+        v=jnp.zeros((n_groups, num_pages, page_size, cfg.n_kv, cfg.hd), dtype),
+    )
+
+
 def _cap_of(window: int, max_len: int, chunk_slack: int) -> int:
     """Ring capacity for a windowed layer: the window itself plus room for
     one in-flight chunk (whose writes must not evict keys its own earliest
@@ -212,18 +219,32 @@ def _cap_of(window: int, max_len: int, chunk_slack: int) -> int:
 def init_cache(
     cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
     chunk_slack: int = 16,
+    page_pool: tuple[int, int] | None = None,
 ):
     """Committed-form cache for the whole stack (stacked over groups).
-    ``chunk_slack`` must be >= the longest verify/decode chunk (gamma+1)."""
+    ``chunk_slack`` must be >= the longest verify/decode chunk (gamma+1).
+
+    ``page_pool=(num_pages, page_size)`` switches every *global*
+    (window <= 0) attention layer from a dense per-slot reservation to a
+    shared :class:`PagedKV` pool addressed through the page table that
+    ``forward`` receives per call. Sliding-window layers keep their dense
+    ring buffers: a ring of ``window + slack`` rows is already the
+    compressed representation, so paging them buys nothing."""
+
+    def kv_entry(g, window):
+        if page_pool is not None and window <= 0:
+            return _stacked_paged_kv(cfg, g, page_pool[0], page_pool[1], dtype)
+        return _stacked_kv(
+            cfg, g, batch, _cap_of(window, max_len, chunk_slack), dtype
+        )
+
     segs = []
     for seg in build_plan(cfg):
         entries = []
         for ldef in seg.layers:
             g = seg.n_groups
             if ldef.kind in ("dense", "moe", "shared_attn"):
-                entries.append(
-                    _stacked_kv(cfg, g, batch, _cap_of(ldef.window, max_len, chunk_slack), dtype)
-                )
+                entries.append(kv_entry(g, ldef.window))
             elif ldef.kind == "mamba":
                 base = ssm.init_ssm_cache(cfg, batch, dtype)
                 entries.append(
@@ -244,9 +265,7 @@ def init_cache(
                 t = cfg.n_audio_frames
                 entries.append(
                     {
-                        "self": _stacked_kv(
-                            cfg, g, batch, _cap_of(ldef.window, max_len, chunk_slack), dtype
-                        ),
+                        "self": kv_entry(g, ldef.window),
                         "cross": CrossKV(
                             k=jnp.zeros((g, batch, t, cfg.n_kv, cfg.hd), dtype),
                             v=jnp.zeros((g, batch, t, cfg.n_kv, cfg.hd), dtype),
@@ -298,6 +317,8 @@ def _apply_layer(
     shared: dict | None,
     extras: dict | None,
     valid_len: jax.Array | None = None,
+    page_table: jax.Array | None = None,
+    kv_write_mask: jax.Array | None = None,
 ):
     """One layer. Returns (x, new_entry, aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -312,6 +333,7 @@ def _apply_layer(
         h, entry = attention.attention(
             cfg, pp["attn"], nrmp("ln1", x), positions, entry,
             window=ldef.window, mode=mode,
+            page_table=page_table, write_mask=kv_write_mask,
         )
         if cfg.post_norms:
             h = nrmp("ln1p", h)
@@ -349,6 +371,7 @@ def _apply_layer(
         h, self_entry = attention.attention(
             cfg, p["self_attn"], nrm("ln1", x), positions, self_entry,
             window=ldef.window, mode=mode,
+            page_table=page_table, write_mask=kv_write_mask,
         )
         x = x + h
         cross_entry = entry["cross"] if entry is not None else None
@@ -407,6 +430,10 @@ def forward(
     valid_len: jax.Array | None = None,  # (B,) chunk-valid lengths (SSM
     #                                       dt-masking for padded chunks)
     last_logits_only: bool = False,      # skip the (B, S, V) projection
+    page_table: jax.Array | None = None,  # (B, max_pages) for PagedKV
+    #                                        cache entries (serving path)
+    kv_write_mask: jax.Array | None = None,  # (B,) False = suppress this
+    #                                           slot's paged-KV writes
 ):
     """Returns (logits (B, S, Vp), new_cache, aux)."""
     assert mode in MODES
@@ -440,6 +467,7 @@ def forward(
                 h, e, a = _apply_layer(
                     cfg, ldef, lp[j], lc[j] if lc is not None else None,
                     h, positions, mode, shared, extras, valid_len,
+                    page_table, kv_write_mask,
                 )
                 new_entries.append(e)
                 aux = aux + a

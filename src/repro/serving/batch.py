@@ -27,6 +27,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.attention import PagedKV
+from repro.serving import paging
+
 
 class BatchState(NamedTuple):
     seq_buf: jax.Array    # (B, max_len) int32 — committed tokens per slot
@@ -37,6 +40,13 @@ class BatchState(NamedTuple):
     ready: jax.Array      # (B,) bool — prefill complete, slot decodable
     out_start: jax.Array  # (B,) int32 — prompt length (output begins here)
     max_new: jax.Array    # (B,) int32 — per-request new-token budget
+    # Paged-KV bookkeeping (None when the engine serves dense caches):
+    # the page table maps each slot's logical pages to physical pool
+    # pages; the pool is the shared device free-list. One table serves
+    # both models — target and drafter pools share the page-id space.
+    page_table: jax.Array | None = None   # (B, max_pages) int32, -1 empty
+    pages_used: jax.Array | None = None   # (B,) int32 — allocated pages
+    pool: paging.PagePool | None = None   # shared free-list
 
     @property
     def num_slots(self) -> int:
@@ -47,13 +57,20 @@ class BatchState(NamedTuple):
         return self.seq_buf.shape[1]
 
 
-def init_batch(num_slots: int, max_len: int) -> BatchState:
+def init_batch(
+    num_slots: int, max_len: int, page_spec: paging.PageSpec | None = None
+) -> BatchState:
     z = jnp.zeros((num_slots,), jnp.int32)
     f = jnp.zeros((num_slots,), bool)
+    table, used, pool = None, None, None
+    if page_spec is not None:
+        table, used = paging.init_tables(page_spec, num_slots)
+        pool = paging.init_pool(page_spec)
     return BatchState(
         seq_buf=jnp.zeros((num_slots, max_len), jnp.int32),
         lens=z, d_lens=z, t_pref=z, active=f, ready=f,
         out_start=z, max_new=z,
+        page_table=table, pages_used=used, pool=pool,
     )
 
 
@@ -88,9 +105,18 @@ def release_slot(state: BatchState, slot: int) -> BatchState:
 
 
 def clear_slot_cache(cache, slot: int):
-    """Zero one slot's rows across a model cache pytree (all stacked cache
-    entries carry batch at axis 1). Required at admission: chunked prefill
-    resumes SSM recurrences from the cached state, so a reused slot must
-    start from the zero state; KV rows are zeroed for hygiene (they would
-    be masked/overwritten anyway)."""
-    return jax.tree.map(lambda x: x.at[:, slot].set(0), cache)
+    """Zero one slot's rows across a model cache pytree (all stacked
+    *per-slot* cache entries carry batch at axis 1). Required at
+    admission: chunked prefill resumes SSM recurrences from the cached
+    state, so a reused slot must start from the zero state; KV rows are
+    zeroed for hygiene (they would be masked/overwritten anyway).
+
+    :class:`PagedKV` pools pass through untouched — pooled storage has no
+    per-slot rows, and a freshly admitted slot's pages can only contain
+    stale data at positions its reads mask out (>= its token count) or
+    that its own chunks rewrite before reading."""
+    return jax.tree.map(
+        lambda x: x if isinstance(x, PagedKV) else x.at[:, slot].set(0),
+        cache,
+        is_leaf=lambda x: isinstance(x, PagedKV),
+    )

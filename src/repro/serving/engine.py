@@ -2,12 +2,17 @@
 
 Layering (one concern per module):
 
-* ``scheduler.py`` — host-side request lifecycle: queue, admission,
-  retirement, per-request metrics (TTFT, tokens/s, acceptance rate).
+* ``scheduler.py`` — host-side request lifecycle: queue, page-budget
+  admission, preemption, retirement, per-request metrics (TTFT,
+  tokens/s, acceptance rate).
 * ``batch.py``     — :class:`BatchState`, the device-resident per-slot
-  bookkeeping pytree (seq_buf / lens / d_lens / active / ready / budgets).
+  bookkeeping pytree (seq_buf / lens / d_lens / active / ready / budgets
+  / page tables + the shared page-pool free list).
+* ``paging.py``    — the page-pool allocator (device free-list ops used
+  inside the runner bodies; host-side conservative budget mirror).
 * ``runner.py``    — the two jitted fixed-shape programs: chunked prefill
-  and the speculative iteration (draft → verify → commit → stop check).
+  and the speculative iteration (allocate pages → draft → verify →
+  commit → stop check).
 * this module      — :class:`SpecEngine`, which wires them into a
   **double-buffered async serve loop**: iteration N+1 is dispatched
   before iteration N's outputs are materialized, so host bookkeeping
@@ -33,6 +38,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.serving import batch as batch_mod
+from repro.serving import paging
 from repro.serving.runner import Runner, StepOutputs
 from repro.serving.scheduler import RequestState, Scheduler  # noqa: F401
 
@@ -50,6 +56,16 @@ class EngineConfig:
     max_new_tokens: int = 128
     prefill_chunk: int = PREFILL_CHUNK
     residual_backend: str | None = "auto"  # auto | pallas* | jnp | None
+    # Paged KV cache (repro.serving.paging). ``paged=True`` pools the
+    # global-attention KV of both models into a shared page pool with
+    # per-slot page tables; ``num_pages=None`` fully provisions the pool
+    # (lossless, admission never blocks). A smaller ``num_pages``
+    # over-subscribes memory: admission goes by free-page budget and the
+    # engine preempts (recompute-on-resume) when decode outgrows the
+    # pool. ``paged=False`` keeps the dense per-slot reservation.
+    paged: bool = True
+    page_size: int = 16             # tokens per page
+    num_pages: int | None = None    # physical pages; None = max_slots quota
 
 
 class SpecEngine:
@@ -77,9 +93,14 @@ class SpecEngine:
     def reset(self, seed: int = 0):
         cfg = self.cfg
         self.t_cache, self.d_cache = self.runner.init_caches()
-        self.batch = batch_mod.init_batch(cfg.max_slots, cfg.max_len)
+        spec = self.runner.page_spec
+        self.batch = batch_mod.init_batch(cfg.max_slots, cfg.max_len, spec)
+        budget = (
+            paging.PageBudget(spec, cfg.gamma) if spec is not None else None
+        )
         self.scheduler = Scheduler(
-            cfg.max_slots, cfg.max_new_tokens, cfg.prefill_chunk
+            cfg.max_slots, cfg.max_new_tokens, cfg.prefill_chunk,
+            budget=budget,
         )
         self.key = jax.random.key(seed)
         self.last_stats: dict = {}
@@ -101,11 +122,12 @@ class SpecEngine:
     def _admit(self, slot: int, req: RequestState):
         """Stage an admitted request: zero the slot's cache rows (chunked
         prefill resumes SSM recurrences from cached state) and write the
-        prompt + budgets into the batch pytree."""
+        prompt + budgets into the batch pytree. A preempted request
+        resumes with ``prompt + output`` and its remaining budget."""
         self.t_cache = batch_mod.clear_slot_cache(self.t_cache, slot)
         self.d_cache = batch_mod.clear_slot_cache(self.d_cache, slot)
         self.batch = batch_mod.admit_slot(
-            self.batch, slot, req.prompt, req.max_new_tokens
+            self.batch, slot, req.serve_prompt(), req.serve_max_new()
         )
 
     # ------------------------------------------------------------------
@@ -116,12 +138,29 @@ class SpecEngine:
         """Serve until queue + slots drain. Returns rid -> RequestState."""
         sched = self.scheduler
         stats = {
-            "iterations": 0, "prefill_steps": 0, "tokens": 0, "wall_s": 0.0,
+            "iterations": 0, "prefill_steps": 0, "tokens": 0,
+            "preemptions": 0, "wall_s": 0.0,
         }
         t0 = time.perf_counter()
         # (snapshot of live-at-dispatch slots, in-flight StepOutputs)
         pending: tuple[dict[int, RequestState], StepOutputs] | None = None
         while True:
+            # Page pressure (over-subscribed pools only): when the live
+            # slots' conservative worst case outgrows the pool, sync the
+            # in-flight step so lengths are exact, then preempt newest
+            # slots until the next dispatch provably cannot exhaust the
+            # device free list.
+            if sched.needs_preemption():
+                if pending is not None:
+                    self._process(*pending, stats)
+                    pending = None
+                while sched.needs_preemption():
+                    victim = sched.pick_victim()
+                    if victim is None:
+                        break
+                    sched.preempt(victim)
+                    self.batch = self.runner.release_slot(self.batch, victim)
+                    stats["preemptions"] += 1
             for slot, req in sched.admit():
                 self._admit(slot, req)
             if sched.prefill_pending():
@@ -172,6 +211,7 @@ class SpecEngine:
         nt = np.asarray(outs.num_tokens)
         dn = np.asarray(outs.done)
         now = time.perf_counter()
+        budget = self.scheduler.budget
         for slot, req in snapshot.items():
             if req.finished:
                 # Retired after this step was dispatched: the lane ran one
@@ -179,6 +219,8 @@ class SpecEngine:
                 continue
             req.iterations += 1
             req.accepted_total += max(int(nt[slot]) - 1, 0)
+            if budget is not None:
+                budget.note_commit(slot, int(nt[slot]))
             k = int(nk[slot])
             if k > 0:
                 if not req.output:
@@ -190,7 +232,7 @@ class SpecEngine:
                 # cut off by the max_len guard, which earlier versions
                 # silently dropped from throughput accounting.
                 stats["tokens"] += len(req.output)
-                self.batch = batch_mod.release_slot(self.batch, slot)
+                self.batch = self.runner.release_slot(self.batch, slot)
 
     def _finish_reason(self, req: RequestState) -> str:
         if (

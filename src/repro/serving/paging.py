@@ -1,0 +1,205 @@
+"""Paged KV cache: page-pool allocator with a device-resident free list.
+
+Instead of reserving a dense ``(max_len, n_kv, hd)`` ring per slot up
+front, global-attention layers write K/V into a **global page pool**
+shared by all slots; each slot owns a small **page table** mapping its
+logical pages (position // page_size) to physical pool pages. Concurrency
+is then bounded by *actual* token usage, not worst-case length — the
+defining property of a production serving engine (vLLM-style
+PagedAttention), and the prerequisite for copy-on-write prefix sharing
+across multi-path draft candidates (see PAPERS.md).
+
+Three pieces live here:
+
+* :class:`PageSpec` — static geometry (page size, pool size, per-slot
+  table length). Derived from the engine config via :func:`spec_of`.
+* :class:`PagePool` + :func:`ensure` / :func:`release` — the device-side
+  allocator. ``free_stack[:free_count]`` holds the free physical page
+  ids; ``ensure`` pops pages (all-or-nothing per slot, slot-index order,
+  so allocation is deterministic) to cover a target length, ``release``
+  pushes a retired slot's pages back (LIFO). Both are pure jittable
+  functions over ``(page_table, pages_used, pool)`` and run *inside* the
+  runner's fixed-shape programs — allocation never syncs the host.
+* :class:`PageBudget` — the host-side conservative mirror the scheduler
+  admits/preempts by. The device allocates from exact lengths; the host
+  only sees lengths one double-buffered step late, so it budgets with
+  ``worst_pages(len + 2 * (gamma + 1))`` per slot — an upper bound on
+  what the device can allocate before the next budget check. As long as
+  ``sum(worst) <= num_pages`` before every dispatch, the device-side
+  ``ensure`` can never fail and slots never stall.
+
+The allocator is exercised by both models' caches with a *single* page
+table: target and drafter pools are indexed by the same physical page
+ids (their per-page byte sizes differ; the id space is shared).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagePool(NamedTuple):
+    """Device free-list: ``free_stack[:free_count]`` are free page ids."""
+
+    free_stack: jax.Array  # (num_pages,) int32
+    free_count: jax.Array  # () int32
+
+
+@dataclass(frozen=True)
+class PageSpec:
+    """Static pool geometry (baked into the compiled programs)."""
+
+    page_size: int   # tokens per page
+    num_pages: int   # physical pages in the pool
+    max_pages: int   # page-table length == pages covering max_len + slack
+
+    def pages_for(self, length: int) -> int:
+        """Host-side: pages needed to cover ``length`` tokens."""
+        return min(-(-length // self.page_size), self.max_pages)
+
+
+def chunk_slack_of(cfg) -> int:
+    """Longest in-flight chunk either runner body writes past a committed
+    length (mirrors ``Runner.chunk_slack``)."""
+    return max(cfg.gamma + 1, cfg.prefill_chunk)
+
+
+def spec_of(cfg) -> PageSpec | None:
+    """Derive the pool geometry from an engine config. ``num_pages=None``
+    fully provisions the pool (``max_slots * max_pages``: no
+    over-subscription, admission never blocks, preemption never fires)."""
+    if not getattr(cfg, "paged", False):
+        return None
+    ps = cfg.page_size
+    max_pages = -(-(cfg.max_len + chunk_slack_of(cfg)) // ps)
+    num_pages = cfg.num_pages
+    if num_pages is None:
+        num_pages = cfg.max_slots * max_pages
+    assert num_pages >= max_pages, (
+        f"pool of {num_pages} pages cannot hold one full-length slot "
+        f"({max_pages} pages); raise num_pages or shrink max_len"
+    )
+    return PageSpec(page_size=ps, num_pages=num_pages, max_pages=max_pages)
+
+
+def init_pool(spec: PageSpec) -> PagePool:
+    return PagePool(
+        free_stack=jnp.arange(spec.num_pages, dtype=jnp.int32),
+        free_count=jnp.asarray(spec.num_pages, jnp.int32),
+    )
+
+
+def init_tables(spec: PageSpec, num_slots: int):
+    """Empty per-slot page tables: (page_table, pages_used)."""
+    return (
+        jnp.full((num_slots, spec.max_pages), -1, jnp.int32),
+        jnp.zeros((num_slots,), jnp.int32),
+    )
+
+
+def ensure(
+    spec: PageSpec,
+    page_table: jax.Array,  # (B, max_pages) int32, -1 = unmapped
+    pages_used: jax.Array,  # (B,) int32
+    pool: PagePool,
+    need_len: jax.Array,    # (B,) int32 — cover positions [0, need_len)
+    mask: jax.Array,        # (B,) bool — slots requesting coverage
+):
+    """Grow each masked slot's page table to cover ``need_len`` tokens.
+
+    Pops pages off the free stack in slot-index order, all-or-nothing per
+    slot. Returns ``(page_table, pages_used, pool, ok)`` where ``ok[b]``
+    is False iff slot ``b`` asked for pages the pool could not supply
+    (the caller must then exclude the slot from the step — the host
+    budget guarantees this never happens in the serving engine)."""
+    ps = spec.page_size
+    need = jnp.clip((need_len + ps - 1) // ps, 0, spec.max_pages)
+    need = jnp.where(mask, need, pages_used)
+    deficit = jnp.maximum(need - pages_used, 0)
+    cum_excl = jnp.cumsum(deficit) - deficit
+    ok = cum_excl + deficit <= pool.free_count
+    granted = jnp.where(ok, deficit, 0)
+    goff = jnp.cumsum(granted) - granted
+
+    jj = jnp.arange(spec.max_pages)[None]           # (1, MAXP)
+    take = jj < granted[:, None]                    # (B, MAXP)
+    src = pool.free_count - 1 - (goff[:, None] + jj)
+    ids = pool.free_stack[jnp.clip(src, 0, spec.num_pages - 1)]
+    b_idx = jnp.broadcast_to(
+        jnp.arange(take.shape[0])[:, None], take.shape
+    )
+    dst_col = jnp.where(take, pages_used[:, None] + jj, spec.max_pages)
+    page_table = page_table.at[b_idx, dst_col].set(
+        jnp.where(take, ids, -1), mode="drop"
+    )
+    pages_used = pages_used + granted
+    pool = PagePool(pool.free_stack, pool.free_count - jnp.sum(granted))
+    return page_table, pages_used, pool, ok
+
+
+def release(
+    spec: PageSpec,
+    page_table: jax.Array,
+    pages_used: jax.Array,
+    pool: PagePool,
+    mask: jax.Array,  # (B,) bool — slots to free
+):
+    """Push every masked slot's pages back onto the free stack and clear
+    its table. Returns ``(page_table, pages_used, pool)``."""
+    give_n = jnp.where(mask, pages_used, 0)
+    off = jnp.cumsum(give_n) - give_n
+    jj = jnp.arange(spec.max_pages)[None]
+    give = mask[:, None] & (jj < pages_used[:, None])
+    dst = jnp.where(give, pool.free_count + off[:, None] + jj, spec.num_pages)
+    stack = pool.free_stack.at[dst].set(
+        jnp.where(give, page_table, 0), mode="drop"
+    )
+    page_table = jnp.where(mask[:, None], -1, page_table)
+    pages_used = jnp.where(mask, 0, pages_used)
+    return page_table, pages_used, PagePool(stack, pool.free_count + jnp.sum(give_n))
+
+
+@dataclass
+class PageBudget:
+    """Host-side conservative page accounting (no device syncs).
+
+    The device allocates from exact per-slot lengths; with the engine's
+    double-buffered loop the host only learns lengths one step late, so
+    each live slot is budgeted at ``worst_pages(len + 2 * (gamma + 1))``
+    — covering the unmaterialized in-flight step plus the step about to
+    be dispatched. Invariant enforced by the scheduler/engine: the sum
+    of worst-case pages over live slots never exceeds ``num_pages`` at
+    dispatch time, so the device-side ``ensure`` cannot fail."""
+
+    spec: PageSpec
+    gamma: int
+    slot_len: dict[int, int] = field(default_factory=dict)
+
+    def worst_pages(self, length: int) -> int:
+        return self.spec.pages_for(length + 2 * (self.gamma + 1))
+
+    def used_worst(self) -> int:
+        return sum(self.worst_pages(n) for n in self.slot_len.values())
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return (
+            self.used_worst() + self.worst_pages(prompt_len)
+            <= self.spec.num_pages
+        )
+
+    def needs_preemption(self) -> bool:
+        return self.used_worst() > self.spec.num_pages
+
+    def note_admit(self, slot: int, prompt_len: int) -> None:
+        self.slot_len[slot] = prompt_len
+
+    def note_commit(self, slot: int, num_tokens: int) -> None:
+        if slot in self.slot_len:
+            self.slot_len[slot] += num_tokens
+
+    def note_release(self, slot: int) -> None:
+        self.slot_len.pop(slot, None)

@@ -45,8 +45,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sampling, verification
+from repro.models.attention import PagedKV
 from repro.models.model import Model
 from repro.models.ssm import SSMEntry
+from repro.serving import paging
 from repro.serving.batch import BatchState
 
 
@@ -82,11 +84,34 @@ def _mask_batch(new, old, mask, axis):
 
 
 def _mask_cache(new_cache, old_cache, mask):
-    """Per-slot cache select: stacked cache entries carry batch at axis 1."""
+    """Per-slot cache select: stacked *per-slot* cache entries carry batch
+    at axis 1. :class:`PagedKV` pools pass through as-is — their per-slot
+    write suppression already happened at scatter time (``kv_write_mask``
+    in the model forward), because pooled storage has no batch axis to
+    select over after the fact."""
     return jax.tree.map(
-        lambda new, old: _mask_batch(new, old, mask, axis=1),
+        lambda new, old: (
+            new if isinstance(new, PagedKV)
+            else _mask_batch(new, old, mask, axis=1)
+        ),
         new_cache, old_cache,
+        is_leaf=lambda x: isinstance(x, PagedKV),
     )
+
+
+def _ensure_pages(cfg, batch: BatchState, need_len, mask):
+    """Grow masked slots' page tables to cover ``need_len`` tokens (no-op
+    for dense engines). Returns (batch, ok): ``ok=False`` slots got no
+    pages and must sit the step out — the scheduler's host-side budget
+    makes that unreachable in the engine, but the mask keeps an
+    over-subscribed pool from ever corrupting live slots."""
+    spec = paging.spec_of(cfg)
+    if spec is None:
+        return batch, jnp.ones_like(mask)
+    table, used, pool, ok = paging.ensure(
+        spec, batch.page_table, batch.pages_used, batch.pool, need_len, mask
+    )
+    return batch._replace(page_table=table, pages_used=used, pool=pool), ok
 
 
 def prefill_body(
@@ -105,6 +130,10 @@ def prefill_body(
     rem = batch.lens - 1 - batch.t_pref
     pending = batch.active & ~batch.ready
     n = jnp.where(pending, jnp.clip(rem, 0, c), 0)   # tokens this chunk
+    # Pages are allocated incrementally as the prompt streams in — a
+    # long-prompt slot only holds pages for what it has consumed so far.
+    batch, ok = _ensure_pages(cfg, batch, batch.t_pref + n, n > 0)
+    n = jnp.where(ok, n, 0)
     nn = jnp.maximum(n, 1)                           # safe valid_len
     touched = n > 0
 
@@ -117,6 +146,7 @@ def prefill_body(
         _, vcache, _ = model.apply(
             params, toks, cache=cache, lens=batch.t_pref,
             mode="verify", valid_len=nn, last_logits_only=True,
+            page_table=batch.page_table, kv_write_mask=touched,
         )
         # commit_cache(c, k) commits k+1 consumed tokens.
         return _mask_cache(model.commit_cache(vcache, nn - 1), cache, touched)
@@ -141,6 +171,11 @@ def decode_body(
     g = cfg.gamma
     vocab = target.cfg.vocab
     run = batch.active & batch.ready
+    # One iteration writes K/V through position lens + gamma (verify
+    # chunk [lens-1, lens+g-1] plus the drafter's catch-up reaching
+    # lens + g); grow the page tables to cover it before any scatter.
+    batch, ok = _ensure_pages(cfg, batch, lens + g + 1, run)
+    run = run & ok
     key_d, key_v = jax.random.split(key)
 
     # ---- 1. drafter catch-up: chunk of up to g+1 tokens from d_lens. ----
@@ -153,6 +188,7 @@ def decode_body(
     d_logits, d_vcache, _ = drafter.apply(
         d_params, catch_toks, cache=d_cache, lens=d_lens,
         mode="verify", valid_len=n_valid,
+        page_table=batch.page_table, kv_write_mask=run,
     )
     d_cache_committed = drafter.commit_cache(d_vcache, n_valid - 1)
     # q(. | committed prefix): logits at index n_valid-1.
@@ -175,7 +211,8 @@ def decode_body(
         key_i, sub = jax.random.split(key_i)
         pos_len = lens + i  # drafter consumed lens+i tokens so far
         logits, cache, _ = drafter.apply(
-            d_params, tok[:, None], cache=cache, lens=pos_len, mode="decode"
+            d_params, tok[:, None], cache=cache, lens=pos_len, mode="decode",
+            page_table=batch.page_table, kv_write_mask=run,
         )
         q = probs_of(logits[:, 0])
         nxt = sampling.categorical(sub, q)
@@ -196,7 +233,8 @@ def decode_body(
     last_tok = jnp.take_along_axis(seq_buf, (lens - 1)[:, None], axis=1)
     chunk = jnp.concatenate([last_tok, draft_toks], axis=1)  # (B, G+1)
     t_logits, t_vcache, _ = target.apply(
-        t_params, chunk, cache=t_cache, lens=lens - 1, mode="verify"
+        t_params, chunk, cache=t_cache, lens=lens - 1, mode="verify",
+        page_table=batch.page_table, kv_write_mask=run,
     )
     p_rows = probs_of(t_logits)                         # (B, G+1, V)
 
@@ -255,6 +293,7 @@ class Runner:
     def __init__(self, target: Model, drafter: Model, cfg):
         assert target.cfg.vocab == drafter.cfg.vocab
         self.target, self.drafter, self.cfg = target, drafter, cfg
+        self.page_spec = paging.spec_of(cfg)
         self.verify = verification.get_ctx_verifier(
             cfg.verifier, residual_backend=cfg.residual_backend
         )
@@ -262,6 +301,7 @@ class Runner:
         self._decode_fn = jax.jit(
             partial(decode_body, target, drafter, cfg, self.verify)
         )
+        self._release_fn = jax.jit(partial(_release_slot, self.page_spec))
 
     @property
     def chunk_slack(self) -> int:
@@ -271,11 +311,16 @@ class Runner:
 
     def init_caches(self, dtype=jnp.float32):
         cfg = self.cfg
+        pool = None
+        if self.page_spec is not None:
+            pool = (self.page_spec.num_pages, self.page_spec.page_size)
         t_cache = self.target.init_cache(
-            cfg.max_slots, cfg.max_len, dtype, chunk_slack=self.chunk_slack
+            cfg.max_slots, cfg.max_len, dtype, chunk_slack=self.chunk_slack,
+            page_pool=pool,
         )
         d_cache = self.drafter.init_cache(
-            cfg.max_slots, cfg.max_len, dtype, chunk_slack=self.chunk_slack
+            cfg.max_slots, cfg.max_len, dtype, chunk_slack=self.chunk_slack,
+            page_pool=pool,
         )
         return t_cache, d_cache
 
@@ -286,3 +331,21 @@ class Runner:
         return self._decode_fn(
             t_params, d_params, t_cache, d_cache, batch, key
         )
+
+    def release_slot(self, batch: BatchState, slot: int) -> BatchState:
+        """Deactivate a retired/preempted slot and (paged engines) push
+        its pages back onto the free stack."""
+        return self._release_fn(batch, jnp.asarray(slot, jnp.int32))
+
+
+def _release_slot(spec, batch: BatchState, slot):
+    mask = jnp.arange(batch.num_slots) == slot
+    batch = batch._replace(
+        active=batch.active & ~mask, ready=batch.ready & ~mask
+    )
+    if spec is None:
+        return batch
+    table, used, pool = paging.release(
+        spec, batch.page_table, batch.pages_used, batch.pool, mask
+    )
+    return batch._replace(page_table=table, pages_used=used, pool=pool)

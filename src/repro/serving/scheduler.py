@@ -2,11 +2,21 @@
 
 The :class:`Scheduler` owns everything that is *about requests* rather
 than about tensors: the FIFO admission queue, the slot→request mapping,
-retirement, and per-request metrics (TTFT, tokens/s, acceptance rate).
-It holds a host mirror of the device-resident prefill progress — chunk
-counts are deterministic, so the mirror needs no device sync: after each
-dispatched prefill step every prefilling slot has consumed exactly
-``min(chunk, remaining)`` more prompt tokens.
+retirement, preemption, and per-request metrics (TTFT, tokens/s,
+acceptance rate). It holds a host mirror of the device-resident prefill
+progress — chunk counts are deterministic, so the mirror needs no device
+sync: after each dispatched prefill step every prefilling slot has
+consumed exactly ``min(chunk, remaining)`` more prompt tokens.
+
+Paged engines hand the scheduler a :class:`repro.serving.paging.PageBudget`
+— admission then goes by *free-page budget* instead of blind slot-fill:
+a queued request is admitted only when the pool can cover every live
+slot's conservative worst case plus the newcomer's. When decoding grows
+live slots past the budget (over-subscribed pools), the engine preempts
+the most recently admitted slot: its pages are freed and the request
+requeues at the *front* with ``prompt + output`` as its resume prompt —
+recompute-on-resume, the classic trade of a little prefill compute for
+not reserving worst-case memory.
 
 It never touches device arrays; the engine translates admissions and
 retirements into :mod:`repro.serving.batch` updates.
@@ -17,6 +27,8 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
+
+from repro.serving.paging import PageBudget
 
 
 @dataclass
@@ -34,6 +46,16 @@ class RequestState:
     finish_t: float | None = None
     finish_reason: str | None = None
     finished: bool = False
+    preemptions: int = 0
+
+    def serve_prompt(self) -> list[int]:
+        """Tokens to prefill at (re)admission: the original prompt plus
+        everything already generated (recompute-on-resume)."""
+        return self.prompt + self.output
+
+    def serve_max_new(self) -> int:
+        """Remaining new-token budget at (re)admission."""
+        return self.max_new_tokens - len(self.output)
 
     @property
     def ttft_s(self) -> float | None:
@@ -65,11 +87,13 @@ class Scheduler:
         default_max_new: int,
         prefill_chunk: int,
         clock=time.perf_counter,
+        budget: PageBudget | None = None,
     ):
         self.num_slots = num_slots
         self.default_max_new = default_max_new
         self.prefill_chunk = prefill_chunk
         self.clock = clock
+        self.budget = budget
         self.queue: deque[RequestState] = deque()
         self.slot_req: list[RequestState | None] = [None] * num_slots
         self._prefill_left = [0] * num_slots
@@ -97,17 +121,25 @@ class Scheduler:
         return rid
 
     def admit(self) -> list[tuple[int, RequestState]]:
-        """Fill free slots from the queue (FIFO). Returns the new
-        (slot, request) pairs; the engine stages them on device."""
+        """Fill free slots from the queue (FIFO). With a page budget,
+        admission stops at the first request the pool cannot cover
+        (head-of-line order is preserved — no unfair overtaking by short
+        prompts). Returns the new (slot, request) pairs; the engine
+        stages them on device."""
         admitted = []
         now = self.clock()
         for slot in range(self.num_slots):
             if self.slot_req[slot] is None and self.queue:
+                plen = len(self.queue[0].serve_prompt())
+                if self.budget is not None and not self.budget.can_admit(plen):
+                    break
                 req = self.queue.popleft()
                 req.admit_t = now
                 self.slot_req[slot] = req
                 # Both models must consume plen - 1 prompt tokens.
-                self._prefill_left[slot] = max(len(req.prompt) - 1, 0)
+                self._prefill_left[slot] = max(plen - 1, 0)
+                if self.budget is not None:
+                    self.budget.note_admit(slot, plen)
                 admitted.append((slot, req))
         return admitted
 
@@ -146,6 +178,42 @@ class Scheduler:
         self.done[req.rid] = req
         self.slot_req[slot] = None
         self._prefill_left[slot] = 0
+        if self.budget is not None:
+            self.budget.note_release(slot)
+        return req
+
+    # -- preemption (paged engines) ----------------------------------------
+
+    def needs_preemption(self) -> bool:
+        return self.budget is not None and self.budget.needs_preemption()
+
+    def pick_victim(self) -> int | None:
+        """Slot to preempt when the pool runs dry: the most recently
+        admitted live slot (LIFO — protects the oldest requests' progress
+        and matches the resume queue's front-insertion order). Never
+        offers the last live slot: a lone slot always fits the pool
+        (``num_pages >= max_pages`` is asserted at spec construction)."""
+        live = [
+            (req.admit_t, slot)
+            for slot, req in enumerate(self.slot_req)
+            if req is not None
+        ]
+        if len(live) <= 1:
+            return None
+        return max(live)[1]
+
+    def preempt(self, slot: int) -> RequestState:
+        """Evict a live request: free its slot and requeue it at the
+        FRONT with its progress intact. Readmission re-prefills
+        ``prompt + output`` (recompute-on-resume)."""
+        req = self.slot_req[slot]
+        assert req is not None, slot
+        req.preemptions += 1
+        self.slot_req[slot] = None
+        self._prefill_left[slot] = 0
+        if self.budget is not None:
+            self.budget.note_release(slot)
+        self.queue.appendleft(req)
         return req
 
     def has_work(self) -> bool:

@@ -118,6 +118,122 @@ class TestFlashDecode:
         assert float(jnp.max(jnp.abs(got.astype(jnp.float32) - want))) < tol
 
 
+def _paged_setup(key, b, kh, hd, page, maxp, num_pages, lens):
+    """Random pool + per-sequence page tables covering ``lens`` tokens,
+    with physical pages assigned in a scrambled (non-identity) order."""
+    ks = jax.random.split(key, 3)
+    k_pool = jax.random.normal(ks[0], (num_pages, page, kh, hd))
+    v_pool = jax.random.normal(ks[1], (num_pages, page, kh, hd))
+    perm = jax.random.permutation(ks[2], num_pages)
+    table = jnp.full((b, maxp), -1, jnp.int32)
+    nxt = 0
+    for i, ln in enumerate(lens):
+        need = -(-ln // page)
+        table = table.at[i, :need].set(
+            perm[nxt : nxt + need].astype(jnp.int32)
+        )
+        nxt += need
+    return k_pool, v_pool, table
+
+
+class TestFlashDecodePaged:
+    @pytest.mark.parametrize("b,h,kh,hd,page,maxp,window,cap", [
+        (2, 8, 2, 64, 64, 8, -1, 0.0),
+        (3, 4, 4, 32, 16, 12, 100, 50.0),
+        (1, 6, 3, 128, 32, 5, -1, 30.0),
+    ])
+    def test_matches_gather_ref(self, b, h, kh, hd, page, maxp, window, cap):
+        ks = jax.random.split(KEY, 2)
+        lens = [(i * 37 + 19) % (maxp * page) + 1 for i in range(b)]
+        k_pool, v_pool, table = _paged_setup(
+            ks[0], b, kh, hd, page, maxp, b * maxp, lens
+        )
+        q = jax.random.normal(ks[1], (b, h, hd))
+        q_pos = jnp.asarray([ln - 1 for ln in lens])
+        total = jnp.asarray(lens)
+        got = ops.flash_decode_paged(
+            q, k_pool, v_pool, table, q_pos, total,
+            window=window, softcap=cap, interpret=True,
+        )
+        want = ref.flash_decode_paged(
+            q, k_pool, v_pool, table, q_pos, total,
+            window=window, softcap=cap,
+        )
+        assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+    def test_page_permutation_invariance(self):
+        """The same logical cache through two different physical page
+        assignments must attend identically (physical ids are opaque)."""
+        b, h, kh, hd, page, maxp = 2, 4, 2, 64, 16, 6
+        ks = jax.random.split(KEY, 3)
+        lens = [70, 33]
+        k_pool, v_pool, table = _paged_setup(
+            ks[0], b, kh, hd, page, maxp, 32, lens
+        )
+        q = jax.random.normal(ks[1], (b, h, hd))
+        q_pos = jnp.asarray([ln - 1 for ln in lens])
+        total = jnp.asarray(lens)
+        base = ops.flash_decode_paged(
+            q, k_pool, v_pool, table, q_pos, total, interpret=True
+        )
+        # swap two physical pages and patch the tables accordingly
+        perm = jnp.arange(32).at[3].set(11).at[11].set(3)
+        got = ops.flash_decode_paged(
+            q, k_pool[perm], v_pool[perm],
+            jnp.where(table == 3, 11, jnp.where(table == 11, 3, table)),
+            q_pos, total, interpret=True,
+        )
+        assert float(jnp.max(jnp.abs(got - base))) < 1e-6
+
+
+class TestFlashPrefillPaged:
+    @pytest.mark.parametrize("b,s,h,kh,hd,page,maxp,window,cap", [
+        (2, 5, 4, 2, 64, 16, 8, -1, 0.0),     # verify chunk (gamma+1)
+        (1, 16, 8, 4, 32, 32, 6, 64, 0.0),    # prefill chunk, windowed
+        (2, 8, 6, 3, 64, 16, 10, -1, 30.0),
+    ])
+    def test_matches_gather_ref(
+        self, b, s, h, kh, hd, page, maxp, window, cap
+    ):
+        ks = jax.random.split(KEY, 2)
+        lens = [(i * 53 + 29) % (maxp * page - s) + s for i in range(b)]
+        k_pool, v_pool, table = _paged_setup(
+            ks[0], b, kh, hd, page, maxp, b * maxp, lens
+        )
+        q = jax.random.normal(ks[1], (b, s, h, hd))
+        q_start = jnp.asarray([ln - s for ln in lens])
+        total = jnp.asarray(lens)
+        got = ops.flash_prefill_paged(
+            q, k_pool, v_pool, table, q_start, total,
+            window=window, softcap=cap, interpret=True,
+        )
+        want = ref.flash_prefill_paged(
+            q, k_pool, v_pool, table, q_start, total,
+            window=window, softcap=cap,
+        )
+        assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+    def test_decode_and_prefill_kernels_agree_at_s1(self):
+        """A 1-token chunk through the chunked kernel must equal the
+        decode kernel (the ops.attend_paged dispatch boundary)."""
+        b, h, kh, hd, page, maxp = 2, 4, 2, 64, 16, 4
+        ks = jax.random.split(KEY, 2)
+        lens = [30, 17]
+        k_pool, v_pool, table = _paged_setup(
+            ks[0], b, kh, hd, page, maxp, 16, lens
+        )
+        q = jax.random.normal(ks[1], (b, 1, h, hd))
+        q_pos = jnp.asarray([ln - 1 for ln in lens])
+        total = jnp.asarray(lens)
+        via_prefill = ops.flash_prefill_paged(
+            q, k_pool, v_pool, table, q_pos, total, interpret=True
+        )
+        via_decode = ops.flash_decode_paged(
+            q[:, 0], k_pool, v_pool, table, q_pos, total, interpret=True
+        )
+        assert float(jnp.max(jnp.abs(via_prefill[:, 0] - via_decode))) < 1e-6
+
+
 class TestFlashPrefill:
     @pytest.mark.parametrize("b,s,h,kh,hd,window,cap", [
         (2, 300, 4, 2, 64, -1, 0.0),

@@ -1,0 +1,240 @@
+"""Paged KV cache tests: allocator invariants, paged-vs-dense engine
+identity (greedy and sampled), over-subscription with preemption +
+recompute-on-resume, ring wraparound for sliding-window layers, and
+page-pool sharding specs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import registry
+from repro.models import Model
+from repro.serving import paging
+from repro.serving.engine import EngineConfig, SpecEngine
+
+SPEC = paging.PageSpec(page_size=4, num_pages=16, max_pages=6)
+
+
+def _mk(num_slots=3, spec=SPEC):
+    table, used = paging.init_tables(spec, num_slots)
+    return table, used, paging.init_pool(spec)
+
+
+class TestAllocator:
+    def test_ensure_grows_to_cover_length(self):
+        table, used, pool = _mk()
+        mask = jnp.array([True, False, True])
+        table, used, pool, ok = paging.ensure(
+            SPEC, table, used, pool, jnp.array([9, 99, 1]), mask
+        )
+        assert used.tolist() == [3, 0, 1]  # ceil(9/4), untouched, ceil(1/4)
+        assert bool(jnp.all(ok))
+        assert int(pool.free_count) == 16 - 4
+        # mapped prefix, -1 tail
+        assert int(jnp.sum(table[0] >= 0)) == 3
+        assert int(jnp.sum(table[1] >= 0)) == 0
+        # distinct physical pages across slots
+        pages = [int(p) for p in table[table >= 0]]
+        assert len(pages) == len(set(pages))
+
+    def test_ensure_is_monotone_and_idempotent(self):
+        table, used, pool = _mk()
+        mask = jnp.array([True, True, True])
+        table, used, pool, _ = paging.ensure(
+            SPEC, table, used, pool, jnp.array([8, 8, 8]), mask
+        )
+        before = table.copy()
+        table, used, pool, _ = paging.ensure(
+            SPEC, table, used, pool, jnp.array([5, 8, 2]), mask
+        )  # shrinking requests never free pages
+        assert used.tolist() == [2, 2, 2]
+        assert bool(jnp.all(table == before))
+
+    def test_all_or_nothing_when_pool_dry(self):
+        spec = paging.PageSpec(page_size=4, num_pages=3, max_pages=3)
+        table, used, pool = _mk(2, spec)
+        table, used, pool, ok = paging.ensure(
+            spec, table, used, pool, jnp.array([8, 8]),
+            jnp.array([True, True]),
+        )
+        # slot 0 gets its 2 pages; slot 1 (2 needed, 1 left) gets none
+        assert ok.tolist() == [True, False]
+        assert used.tolist() == [2, 0]
+        assert int(pool.free_count) == 1
+
+    def test_release_returns_pages_and_clears_table(self):
+        table, used, pool = _mk()
+        mask3 = jnp.array([True, True, True])
+        table, used, pool, _ = paging.ensure(
+            SPEC, table, used, pool, jnp.array([12, 8, 4]), mask3
+        )
+        table, used, pool = paging.release(
+            SPEC, table, used, pool, jnp.array([True, False, True])
+        )
+        assert int(pool.free_count) == 16 - 2  # only slot 1 keeps pages
+        assert used.tolist() == [0, 2, 0]
+        assert bool(jnp.all(table[0] == -1)) and bool(jnp.all(table[2] == -1))
+        # freed pages are allocatable again and never collide with slot 1
+        table, used, pool, ok = paging.ensure(
+            SPEC, table, used, pool, jnp.array([24, 8, 24]), mask3
+        )
+        assert bool(jnp.all(ok))
+        pages = [int(p) for p in table[table >= 0]]
+        assert len(pages) == len(set(pages))
+
+    def test_spec_of_geometry_and_budget(self):
+        cfg = EngineConfig(
+            gamma=3, max_slots=2, max_len=96, prefill_chunk=16,
+            paged=True, page_size=16,
+        )
+        spec = paging.spec_of(cfg)
+        assert spec.max_pages == -(-(96 + 16) // 16)  # slack = chunk = 16
+        assert spec.num_pages == 2 * spec.max_pages   # fully provisioned
+        budget = paging.PageBudget(spec, gamma=3)
+        budget.note_admit(0, 5)
+        budget.note_commit(0, 4)
+        assert budget.slot_len[0] == 9
+        assert not budget.needs_preemption()
+        budget.note_release(0)
+        assert budget.used_worst() == 0
+
+    def test_spec_of_rejects_pool_smaller_than_one_slot(self):
+        cfg = EngineConfig(
+            gamma=3, max_slots=2, max_len=96, paged=True, page_size=16,
+            num_pages=2,
+        )
+        with pytest.raises(AssertionError):
+            paging.spec_of(cfg)
+
+
+def _models(name="smollm-135m", seed=0):
+    cfg = registry.smoke_config(name)
+    if cfg.n_experts:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    tgt = Model(cfg)
+    drf = Model(cfg.with_(d_model=128, d_ff=256 if cfg.d_ff else 0,
+                          name=cfg.name + "-d"))
+    kt, kd = jax.random.split(jax.random.key(seed))
+    return tgt, drf, tgt.init(kt), drf.init(kd)
+
+
+def _serve(tgt, drf, tp, dp, cfg, prompts):
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    rids = [eng.submit(p) for p in prompts]
+    out = eng.run()
+    return eng, [out[r] for r in rids]
+
+
+PROMPTS = [[5, 3, 8, 1, 2], [9, 9, 2, 4, 4], [1, 2, 3], [7, 7, 7, 7]]
+
+
+class TestPagedEngineIdentity:
+    @pytest.mark.parametrize("temperature", [0.0, 0.8])
+    def test_paged_equals_dense(self, temperature):
+        """Fully provisioned pool: the paged engine must commit exactly
+        the dense engine's tokens — greedy AND sampled (same PRNG keys,
+        bitwise-equal logits through the gather path)."""
+        tgt, drf, tp, dp = _models(seed=3)
+        outs = {}
+        for paged in (False, True):
+            cfg = EngineConfig(
+                gamma=3, verifier="block", max_slots=2, max_len=96,
+                temperature=temperature, max_new_tokens=12, paged=paged,
+                page_size=16,
+            )
+            _, reqs = _serve(tgt, drf, tp, dp, cfg, PROMPTS)
+            outs[paged] = [r.output for r in reqs]
+        assert outs[True] == outs[False]
+
+    def test_oversubscribed_pool_preempts_and_stays_lossless(self):
+        """Pool smaller than slots x max_len: decode outgrows the pool,
+        the engine preempts (recompute-on-resume), and committed tokens
+        still exactly match a dense run."""
+        tgt, drf, tp, dp = _models(seed=3)
+        base = dict(
+            gamma=3, verifier="block", max_slots=3, max_len=96,
+            temperature=0.0, max_new_tokens=40,
+        )
+        _, ref = _serve(
+            tgt, drf, tp, dp, EngineConfig(paged=False, **base), PROMPTS
+        )
+        cfg = EngineConfig(paged=True, page_size=16, num_pages=8, **base)
+        spec = paging.spec_of(cfg)
+        assert spec.num_pages < cfg.max_slots * spec.max_pages  # oversub
+        eng, got = _serve(tgt, drf, tp, dp, cfg, PROMPTS)
+        assert eng.last_stats["preemptions"] > 0
+        assert sum(r.preemptions for r in got) > 0
+        for r_ref, r_got in zip(ref, got):
+            assert r_got.output == r_ref.output
+            assert len(r_got.output) == 40
+
+    def test_token_and_block_verifiers_paged(self):
+        """Both lossless verifiers stay lossless through the paged path."""
+        tgt, drf, tp, dp = _models()
+        outs = {}
+        for verifier in ("token", "block"):
+            cfg = EngineConfig(
+                gamma=4, verifier=verifier, max_slots=2, max_len=128,
+                temperature=0.0, max_new_tokens=16, paged=True,
+            )
+            _, reqs = _serve(tgt, drf, tp, dp, cfg, PROMPTS[:2])
+            outs[verifier] = [r.output for r in reqs]
+        assert outs["token"] == outs["block"]
+
+
+def _greedy_reference(model, params, prompt, n_new):
+    seq = list(prompt)
+    extras = model.make_extras(1)
+    for _ in range(n_new):
+        logits, _, _ = model.apply(
+            params, jnp.asarray([seq], jnp.int32), extras=extras,
+            mode="train",
+        )
+        seq.append(int(jnp.argmax(logits[0, -1, : model.cfg.vocab])))
+    return seq[len(prompt):]
+
+
+class TestRingWraparound:
+    def test_windowed_layers_decode_past_ring_capacity(self):
+        """Sliding-window rings stay exact after wrapping: decode far
+        enough that total length exceeds window + chunk_slack (the ring
+        capacity), for both the paged engine (windowed layers keep dense
+        rings) and the dense engine."""
+        tgt, drf, tp, dp = _models("mixtral-8x22b")  # smoke window = 32
+        window = tgt.cfg.window_pattern[0]
+        assert window > 0
+        prompt = [3, 1, 4, 1, 5]
+        n_new = 56  # total 61 > window 32 + slack (gamma+1=4 -> cap 48)
+        ref = _greedy_reference(tgt, tp, prompt, n_new)
+        for paged in (False, True):
+            cfg = EngineConfig(
+                gamma=3, verifier="block", max_slots=1, max_len=96,
+                temperature=0.0, max_new_tokens=n_new, paged=paged,
+            )
+            _, (req,) = _serve(tgt, drf, tp, dp, cfg, [prompt])
+            assert req.output[:n_new] == ref, paged
+
+
+class TestPagedSharding:
+    def test_pool_page_dim_takes_data_axes(self):
+        from repro.distributed import sharding as shd
+        from repro.models.attention import PagedKV
+
+        mesh = AbstractMesh((("data", 16), ("model", 16)))
+        model = Model(registry.get_config("smollm-135m"))
+        cache = jax.eval_shape(
+            lambda: model.init_cache(
+                4, 4096, chunk_slack=16, page_pool=(1024, 16)
+            )
+        )
+        shards = shd.cache_shardings(model, mesh, cache)
+        pools = [
+            e for seg in shards["segments"] for e in seg
+            if isinstance(e, PagedKV)
+        ]
+        assert pools, "smollm global layers should be paged"
+        spec = pools[0].k.spec
+        # (G, P, page, K, hd): pages over data; n_kv=3 % 16 != 0 ->
+        # head dim replicated
+        assert spec == P(None, "data", None, None, None)
