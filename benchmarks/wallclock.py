@@ -1,8 +1,11 @@
 """Wall-clock speedup (paper Table 1 right half): byte-level char-LM pair
 trained in-repo, served on CPU with the real engine. Reports tokens/s for
-autoregressive baseline vs SpecDec with token / block verification, and
+autoregressive baseline vs SpecDec with token / block / greedy
+multi-path (num_paths=2, CoW-forked page tables) verification, and
 writes the machine-readable ``results/BENCH_serving.json`` artifact the
-perf trajectory tracks across PRs.
+perf trajectory tracks across PRs — including the per-step allocation
+telemetry (pool occupancy + preemption counts per decode step) the
+over-subscription policies are tuned from.
 
 Checkpoints are cached under results/charlm/ so repeated benchmark runs
 skip training.
@@ -105,16 +108,25 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
         "baseline_ar": {"tokens_per_s": base_tps},
         "verifiers": {},
     }
-    for verifier in ["token", "block"]:
+    # (report name, engine kwargs): the multipath entry serves the same
+    # workload through K=2 CoW-forked draft paths per slot.
+    runs = [
+        ("token", dict(verifier="token")),
+        ("block", dict(verifier="block")),
+        ("multipath_k2", dict(verifier="block", num_paths=2)),
+    ]
+    for name, kwargs in runs:
         cfg = EngineConfig(
-            gamma=gamma, verifier=verifier, max_slots=n_prompts,
+            gamma=gamma, max_slots=n_prompts,
             max_len=256, temperature=temperature, max_new_tokens=max_new,
+            **kwargs,
         )
         eng = SpecEngine(tgt, drf, tp, dp, cfg)
         # warm compile with a throwaway request
         eng.submit(prompts[0], max_new_tokens=2)
         eng.run()
         wall = acc = iters = tokens = 0.0
+        alloc_steps, preemptions = [], 0
         for seed in seeds:
             eng.reset(seed=seed)
             for p in prompts:
@@ -124,17 +136,32 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
             acc += sum(r.accepted_total for r in out.values())
             iters += sum(r.iterations for r in out.values())
             tokens += sum(len(r.output) for r in out.values())
+            # Concatenate seed runs into one monotone series: offset
+            # step numbers and the cumulative preemption counter by the
+            # previous runs' totals so the per-step curve never jumps
+            # backwards across seed boundaries.
+            step0 = alloc_steps[-1]["step"] if alloc_steps else 0
+            alloc_steps.extend(
+                {**s, "step": s["step"] + step0,
+                 "preemptions": s["preemptions"] + preemptions}
+                for s in eng.last_stats["alloc_trace"]
+            )
+            preemptions += eng.last_stats["preemptions"]
         be = (acc + iters) / iters
         tps = tokens / wall
-        results[verifier] = (tps, be)
-        bench["verifiers"][verifier] = {
+        results[name] = (tps, be)
+        bench["verifiers"][name] = {
+            "num_paths": cfg.num_paths,
             "tokens_per_s": tps,
             "block_efficiency": be,
             "acceptance_rate": acc / (iters * gamma) if iters else 0.0,
             "cpu_speedup_vs_ar": tps / base_tps if base_tps else 0.0,
+            # Per-step allocation telemetry (host-mirror pool occupancy;
+            # preemptions are cumulative within each seed's run).
+            "alloc": _summarize_alloc(alloc_steps, preemptions),
         }
         rows.append({
-            "name": f"wallclock/spec_{verifier}",
+            "name": f"wallclock/spec_{name}",
             "tokens_per_s": round(tps, 1),
             "cpu_speedup": round(tps / base_tps, 2),
             "block_efficiency": round(be, 3),
@@ -165,6 +192,30 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
         })
     _write_bench(bench)
     return rows
+
+
+def _summarize_alloc(steps: list[dict], preemptions: int) -> dict:
+    """Compress the engine's per-step allocation trace into the artifact:
+    occupancy statistics, the worst-case budget headroom, preemption
+    count, plus the (downsampled) per-step series itself."""
+    if not steps:
+        return {"steps": 0, "preemptions": preemptions}
+    occ = [s["occupancy_pages"] for s in steps]
+    worst = [s["worst_case_pages"] for s in steps]
+    stride = max(len(steps) // 200, 1)  # keep the artifact bounded
+    return {
+        "steps": len(steps),
+        "num_pages": steps[-1]["num_pages"],
+        "occupancy_pages_mean": sum(occ) / len(occ),
+        "occupancy_pages_max": max(occ),
+        "worst_case_pages_max": max(worst),
+        "preemptions": preemptions,
+        "per_step": [
+            {k: s[k] for k in
+             ("step", "occupancy_pages", "active_slots", "preemptions")}
+            for s in steps[::stride]
+        ],
+    }
 
 
 def _write_bench(bench: dict, path: str = "results/BENCH_serving.json"):

@@ -150,6 +150,82 @@ def exact_expected_accepted(
     return total
 
 
+def exact_multipath_expected_accepted(
+    target: TabularLM,
+    drafter: TabularLM,
+    gamma: int,
+    num_paths: int,
+    ctx0: int = 0,
+) -> float:
+    """E[tau] for greedy multi-path verification, enumerated exactly over
+    all ``num_paths`` i.i.d. draft paths and all accept/reject branches.
+
+    Independent float64 reimplementation of the rule in
+    ``repro.core.verification.multipath_greedy_verify`` (per-position
+    recursive residual rejection over the alive path set, greedy in path
+    order) — the implementation-coupled marginalization lives in
+    ``tests/test_lossless.py``; this closed form cross-checks it and the
+    Monte-Carlo behaviour of the batched verifier.
+    """
+    assert target.vocab == drafter.vocab and target.order == drafter.order
+    v = target.vocab
+    t_tab = np.asarray(target.table, np.float64)
+    d_tab = np.asarray(drafter.table, np.float64)
+    t_tab = t_tab / t_tab.sum(-1, keepdims=True)
+    d_tab = d_tab / d_tab.sum(-1, keepdims=True)
+    n_ctx = target.n_contexts
+
+    def rrs_tables(p_row, q_row, k):
+        cs, zs = [0.0], [1.0]
+        for _ in range(k):
+            c = cs[-1] + zs[-1]
+            cs.append(c)
+            zs.append(float(np.maximum(p_row - c * q_row, 0.0).sum()))
+        return cs, zs
+
+    total = 0.0
+    for paths in itertools.product(
+        _paths(v, gamma), repeat=num_paths
+    ):
+        qprob = 1.0
+        for path in paths:
+            ctx = ctx0
+            for tok in path:
+                qprob *= d_tab[ctx][tok]
+                ctx = (ctx * v + tok) % n_ctx
+        if qprob <= 0.0:
+            continue
+
+        def walk(i, alive, ctx, mass):
+            nonlocal total
+            if i == gamma or mass == 0.0:
+                return
+            p_row, q_row = t_tab[ctx], d_tab[ctx]
+            cs, zs = rrs_tables(p_row, q_row, len(alive))
+            m, reach = 0, 1.0
+            for j in alive:
+                x = paths[j][i]
+                u = max(p_row[x] - cs[m] * q_row[x], 0.0)
+                # Z_m == 0 means the residual is exhausted (u == 0 for
+                # every token): reject, like the JAX implementation.
+                denom = zs[m] * q_row[x]
+                a = min(1.0, u / denom) if denom > 0.0 else 0.0
+                if a > 0.0:
+                    branch = mass * reach * a
+                    total += branch  # tau >= i + 1 along this branch
+                    walk(
+                        i + 1,
+                        [l for l in alive if paths[l][i] == x],
+                        (ctx * v + x) % n_ctx,
+                        branch,
+                    )
+                reach *= 1.0 - a
+                m += 1
+
+        walk(0, list(range(num_paths)), ctx0, qprob)
+    return total
+
+
 def exact_output_distribution(
     target: TabularLM,
     drafter: TabularLM,

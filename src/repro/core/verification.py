@@ -11,6 +11,16 @@ Implements, in batched JAX:
                             per iteration but requires the caller to apply
                             the distribution modification (Algorithm 5)
                             for the next ``gamma - tau - 1`` positions.
+* ``multipath_greedy_verify`` — greedy multi-path verification over K
+                            i.i.d. draft paths (Thomas & Pal / SpecTr-GBV
+                            direction, PAPERS.md): per position, the alive
+                            paths' candidates are tried greedily in path
+                            order under recursive residual rejection, the
+                            longest accepted path is committed, and the
+                            correction token is drawn from the exact
+                            multi-path residual. Lossless for any K; the
+                            serving engine uses it when ``num_paths > 1``
+                            (K = 1 routes to the single-path verifiers).
 
 Shapes (``B`` = batch, ``G`` = gamma = draft length, ``V`` = vocab):
 
@@ -35,6 +45,17 @@ drafter probabilities and their ratios — are computed once into a
 the distributions through the fused TPU kernel. ``resolve_residual_sums``
 picks the backend; the serving engine defaults to ``"auto"`` which routes
 through the Pallas entry point whenever the kernels package is present.
+
+Every algorithm is split into pure **probability surfaces** (acceptance
+probabilities, residual/bonus distributions — deterministic functions of
+the context) and a thin sampling layer that draws uniforms against them.
+The exact-distribution test harness (``tests/test_lossless.py``)
+marginalizes the *same surface functions* over all draft outcomes in
+float64 and checks the committed-token distribution equals the target
+model's autoregressive distribution — so losslessness is asserted about
+this implementation, not a parallel reimplementation. All internal dtypes
+follow the input probabilities (float32 in serving; float64 under
+``jax_enable_x64`` in the harness).
 """
 
 from __future__ import annotations
@@ -116,10 +137,16 @@ def _ratios(p_tok: jax.Array, q_tok: jax.Array) -> jax.Array:
 def make_context(
     draft_tokens: jax.Array, q_probs: jax.Array, p_probs: jax.Array
 ) -> VerifyContext:
-    """Build the shared verification context (one gather per model)."""
+    """Build the shared verification context (one gather per model).
+
+    Probabilities are computed in float32, except float64 inputs (under
+    ``jax_enable_x64``) which are kept — the exact lossless harness
+    marginalizes these surfaces at float64.
+    """
     g = draft_tokens.shape[1]
-    q_probs = q_probs.astype(jnp.float32)
-    p_probs = p_probs.astype(jnp.float32)
+    dt = jnp.promote_types(jnp.result_type(q_probs, p_probs), jnp.float32)
+    q_probs = q_probs.astype(dt)
+    p_probs = p_probs.astype(dt)
     p_tok = _gather(p_probs[:, :g], draft_tokens)
     q_tok = _gather(q_probs, draft_tokens)
     return VerifyContext(
@@ -200,6 +227,26 @@ def resolve_residual_sums(name: str = "auto") -> ResidualSums:
 # ---------------------------------------------------------------------------
 
 
+def token_accept_probs(ctx: VerifyContext) -> jax.Array:
+    """Algorithm 1 acceptance surface: a_i = min(1, M_b/M_s at X_i),
+    i = 1..G. The i-th draft token is accepted iff u_i <= a_i AND all
+    earlier tokens were accepted (first rejection stops the block)."""
+    return jnp.minimum(ctx.ratio, 1.0)
+
+
+def token_bonus_dist(ctx: VerifyContext, tau: jax.Array) -> jax.Array:
+    """Algorithm 1 bonus surface: the distribution of the (tau+1)-th
+    committed token — the token residual norm(max(M_b - M_s, 0)) (Eq. 2)
+    after a rejection, M_b(.|X^G) itself after a full accept."""
+    g = ctx.gamma
+    p_tau = _row_at(ctx.p_probs, tau)  # (B, V): M_b(.|c, X^tau)
+    q_tau = _row_at(ctx.q_probs, jnp.minimum(tau, g - 1))
+    residual = sampling.normalize(
+        jnp.maximum(p_tau - q_tau, 0.0), fallback=p_tau
+    )
+    return jnp.where((tau == g)[:, None], p_tau, residual)
+
+
 def token_verify_ctx(key: jax.Array, ctx: VerifyContext) -> VerifyResult:
     """Algorithm 1: accept X_i independently w.p. min(1, p/q); stop at the
     first rejection; bonus token from the token residual (Eq. 2)."""
@@ -207,17 +254,11 @@ def token_verify_ctx(key: jax.Array, ctx: VerifyContext) -> VerifyResult:
     key_u, key_y = jax.random.split(key)
     u = jax.random.uniform(key_u, (b, g))
 
-    accept = u <= jnp.minimum(ctx.ratio, 1.0)
+    accept = u <= token_accept_probs(ctx)
     # tau = number of leading accepts.
     tau = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
 
-    p_tau = _row_at(ctx.p_probs, tau)  # (B, V): M_b(.|c, X^tau)
-    q_tau = _row_at(ctx.q_probs, jnp.minimum(tau, g - 1))
-    residual = sampling.normalize(
-        jnp.maximum(p_tau - q_tau, 0.0), fallback=p_tau
-    )
-    bonus_dist = jnp.where((tau == g)[:, None], p_tau, residual)
-    bonus = sampling.categorical(key_y, bonus_dist)
+    bonus = sampling.categorical(key_y, token_bonus_dist(ctx, tau))
 
     return VerifyResult(
         tokens=_assemble(ctx.draft_tokens, bonus, tau),
@@ -249,8 +290,67 @@ def _block_ps(ratio: jax.Array) -> jax.Array:
         p_i = jnp.minimum(p_prev * r_i, 1.0)
         return p_i, p_i
 
-    _, ps = jax.lax.scan(step, jnp.ones((b,), jnp.float32), ratio.T)
+    _, ps = jax.lax.scan(step, jnp.ones((b,), ratio.dtype), ratio.T)
     return ps.T  # (B, G): p_1 .. p_G
+
+
+def _block_surfaces(
+    ctx: VerifyContext, residual_sums: ResidualSums | None
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 2 acceptance surface: ``(h, p_full)`` where ``h[:, i-1]``
+    is the Eq.-4 acceptance probability h_i (i = 1..G; tau is the largest
+    accepted index) and ``p_full[:, i]`` is the block scale p_i (Eq. 8,
+    p_0 = 1) the bonus residual is scaled by."""
+    b, g = ctx.draft_tokens.shape
+    ps = _block_ps(ctx.ratio)                 # (B, G): p_1..p_G
+    p_full = jnp.concatenate(
+        [jnp.ones((b, 1), ps.dtype), ps], axis=1
+    )
+
+    sums = residual_sums or default_residual_sums
+    # S_i for i = 0..G-1 : conditioning on X^i uses row i of p_probs/q_probs,
+    # scaled by p_i (Eq. 4). Row G has no drafter distribution (no residual).
+    s_all = sums(p_full[:, :g], ctx.p_probs[:, :g], ctx.q_probs)  # (B, G)
+
+    # Acceptance probabilities h_i for i = 1..G (Eq. 4; h_G = p_G).
+    p_i = ps[:, : g - 1]                      # p_1..p_{G-1}
+    s_i = s_all[:, 1:g]                       # S_1..S_{G-1}
+    h_mid = jnp.where(
+        p_i >= 1.0, 1.0, s_i / jnp.maximum(s_i + 1.0 - p_i, _EPS)
+    )
+    h = jnp.concatenate([h_mid, ps[:, g - 1 :]], axis=1)  # (B, G): h_1..h_G
+    return h, p_full
+
+
+def block_accept_probs(
+    ctx: VerifyContext, residual_sums: ResidualSums | None = None
+) -> jax.Array:
+    """Eq.-4 acceptance probabilities h_1..h_G; tau = max accepted index
+    over independent coins u_i <= h_i (Algorithm 2)."""
+    return _block_surfaces(ctx, residual_sums)[0]
+
+
+def block_bonus_dist(ctx: VerifyContext, tau: jax.Array) -> jax.Array:
+    """Algorithm 2 bonus surface: block residual norm(max(p_tau * M_b -
+    M_s, 0)) (Eq. 3) after a partial accept, M_b(.|X^G) after a full one.
+    Needs only the Eq.-8 scale scan, not the Eq.-4 residual reductions."""
+    b = ctx.draft_tokens.shape[0]
+    ps = _block_ps(ctx.ratio)
+    p_full = jnp.concatenate([jnp.ones((b, 1), ps.dtype), ps], axis=1)
+    return _block_bonus_from(ctx, tau, p_full)
+
+
+def _block_bonus_from(
+    ctx: VerifyContext, tau: jax.Array, p_full: jax.Array
+) -> jax.Array:
+    g = ctx.gamma
+    p_tau_scale = jnp.take_along_axis(p_full, tau[:, None], axis=1)[:, 0]
+    p_row = _row_at(ctx.p_probs, tau)
+    q_row = _row_at(ctx.q_probs, jnp.minimum(tau, g - 1))
+    residual = sampling.normalize(
+        jnp.maximum(p_tau_scale[:, None] * p_row - q_row, 0.0), fallback=p_row
+    )
+    return jnp.where((tau == g)[:, None], p_row, residual)
 
 
 def block_verify_ctx(
@@ -268,35 +368,14 @@ def block_verify_ctx(
     key_u, key_y = jax.random.split(key)
     u = jax.random.uniform(key_u, (b, g))
 
-    ps = _block_ps(ctx.ratio)                 # (B, G): p_1..p_G
-    p_full = jnp.concatenate([jnp.ones((b, 1), jnp.float32), ps], axis=1)
-
-    sums = residual_sums or default_residual_sums
-    # S_i for i = 0..G-1 : conditioning on X^i uses row i of p_probs/q_probs,
-    # scaled by p_i (Eq. 4). Row G has no drafter distribution (no residual).
-    s_all = sums(p_full[:, :g], ctx.p_probs[:, :g], ctx.q_probs)  # (B, G)
-
-    # Acceptance probabilities h_i for i = 1..G (Eq. 4; h_G = p_G).
-    p_i = ps[:, : g - 1]                      # p_1..p_{G-1}
-    s_i = s_all[:, 1:g]                       # S_1..S_{G-1}
-    h_mid = jnp.where(
-        p_i >= 1.0, 1.0, s_i / jnp.maximum(s_i + 1.0 - p_i, _EPS)
-    )
-    h = jnp.concatenate([h_mid, ps[:, g - 1 :]], axis=1)  # (B, G): h_1..h_G
+    h, p_full = _block_surfaces(ctx, residual_sums)
 
     accept = u <= h
     idx = jnp.arange(1, g + 1)[None, :]
     tau = jnp.max(jnp.where(accept, idx, 0), axis=1)  # longest accepted block
 
     # Bonus token: from M_b(.|X^G) when tau == G, else block residual (Eq. 3).
-    p_tau_scale = jnp.take_along_axis(p_full, tau[:, None], axis=1)[:, 0]
-    p_row = _row_at(ctx.p_probs, tau)
-    q_row = _row_at(ctx.q_probs, jnp.minimum(tau, g - 1))
-    residual = sampling.normalize(
-        jnp.maximum(p_tau_scale[:, None] * p_row - q_row, 0.0), fallback=p_row
-    )
-    bonus_dist = jnp.where((tau == g)[:, None], p_row, residual)
-    bonus = sampling.categorical(key_y, bonus_dist)
+    bonus = sampling.categorical(key_y, _block_bonus_from(ctx, tau, p_full))
 
     return VerifyResult(
         tokens=_assemble(ctx.draft_tokens, bonus, tau),
@@ -403,6 +482,229 @@ def modified_target_row(
     ``mod_remaining`` positions after a greedy-block-verification step:
     M_new ∝ max(M_b - M_s, 0), falling back to M_b when M_b == M_s."""
     return sampling.normalize(jnp.maximum(p_row - q_row, 0.0), fallback=p_row)
+
+
+# ---------------------------------------------------------------------------
+# Greedy multi-path verification (K i.i.d. draft paths)
+# ---------------------------------------------------------------------------
+
+
+class MultiVerifyContext(NamedTuple):
+    """Inputs for multi-path verification: K draft paths forked from the
+    same committed prefix, each drafted **independently** from the drafter
+    (i.i.d. path samples — exactly what the serving runner's page-table
+    fork produces), with each path's own per-position drafter and target
+    rows."""
+
+    draft_tokens: jax.Array  # (B, K, G) int32
+    q_probs: jax.Array       # (B, K, G, V)   — M_s rows along each path
+    p_probs: jax.Array       # (B, K, G+1, V) — M_b rows along each path
+
+    @property
+    def num_paths(self) -> int:
+        return self.draft_tokens.shape[1]
+
+    @property
+    def gamma(self) -> int:
+        return self.draft_tokens.shape[2]
+
+
+class MultiVerifyResult(NamedTuple):
+    tokens: jax.Array        # (B, G+1) int32; valid prefix of num_tokens
+    num_accepted: jax.Array  # (B,) int32 — accepted draft tokens (tau)
+    num_tokens: jax.Array    # (B,) int32 — tau + 1
+    winner: jax.Array        # (B,) int32 — path whose prefix was committed
+    #                          (lowest-indexed alive path; its target-pass
+    #                          state is the one the caller must commit)
+
+
+def make_multi_context(
+    draft_tokens: jax.Array, q_probs: jax.Array, p_probs: jax.Array
+) -> MultiVerifyContext:
+    dt = jnp.promote_types(jnp.result_type(q_probs, p_probs), jnp.float32)
+    return MultiVerifyContext(
+        draft_tokens=draft_tokens,
+        q_probs=q_probs.astype(dt),
+        p_probs=p_probs.astype(dt),
+    )
+
+
+def multipath_rrs_tables(
+    p_row: jax.Array,   # (B, V) target row at the committed prefix
+    q_row: jax.Array,   # (B, V) drafter row at the committed prefix
+    num_paths: int,
+    residual_sums: ResidualSums | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Recursive-residual constants for one position.
+
+    With m candidates (each an i.i.d. draw from ``q_row``) already
+    rejected, the conditional law of the committed token is the residual
+    ``r_m = u_m / Z_m`` with ``u_m = max(P - c_m * Q, 0)`` — the same
+    closed form as the paper's block residual (Eq. 3) with scale folded
+    into ``c_m``:
+
+        c_0 = 0,  Z_0 = 1,  c_{m+1} = c_m + Z_m,
+        Z_m = sum_v max(P(v) - c_m * Q(v), 0).
+
+    Each ``Z_m`` is one Eq.-4-style vocab reduction; for ``c_m > 0`` it is
+    routed through the residual-sums backend via the identity
+    ``sum max(P - cQ, 0) = c * sum max((1/c) P - Q, 0)``, so the fused
+    Pallas kernel scores every path's residual sums. Returns ``(c, z)``,
+    each ``(B, num_paths + 1)``.
+    """
+    sums = residual_sums or default_residual_sums
+    b = p_row.shape[0]
+    dt = p_row.dtype
+    cs = [jnp.zeros((b,), dt)]
+    zs = [jnp.ones((b,), dt)]
+    for _ in range(num_paths):
+        c_m = cs[-1] + zs[-1]  # >= 1: Z_0 = 1 and Z_m >= 0
+        z_m = c_m * sums(
+            (1.0 / c_m)[:, None], p_row[:, None], q_row[:, None]
+        )[:, 0]
+        cs.append(c_m)
+        zs.append(z_m)
+    return jnp.stack(cs, axis=1), jnp.stack(zs, axis=1)
+
+
+def multipath_accept_prob(
+    p_tok: jax.Array, q_tok: jax.Array, c_m: jax.Array, z_m: jax.Array
+) -> jax.Array:
+    """Acceptance probability of a candidate token (drafter prob
+    ``q_tok``, target prob ``p_tok``) after ``m`` rejections at this
+    position: ``min(1, u_m(x) / (Z_m * q(x)))``. ``q == 0`` (never
+    drafted) maps to 0, mirroring :func:`_ratios`."""
+    u = jnp.maximum(p_tok - c_m * q_tok, 0.0)
+    a = jnp.minimum(u / jnp.maximum(z_m * q_tok, _EPS), 1.0)
+    return jnp.where(q_tok > 0, a, 0.0)
+
+
+def multipath_residual_dist(
+    p_row: jax.Array, q_row: jax.Array, c_m: jax.Array
+) -> jax.Array:
+    """The exact correction distribution after all ``m`` alive candidates
+    rejected at a position: norm(max(P - c_m * Q, 0)), falling back to P
+    on (unreachable) zero residual mass."""
+    return sampling.normalize(
+        jnp.maximum(p_row - c_m[:, None] * q_row, 0.0), fallback=p_row
+    )
+
+
+def multipath_greedy_verify_ctx(
+    key: jax.Array,
+    mctx: MultiVerifyContext,
+    residual_sums: ResidualSums | None = None,
+) -> MultiVerifyResult:
+    """Greedy multi-path verification.
+
+    Position by position, the candidates of the still-alive paths (those
+    whose prefix equals the committed tokens so far) are tried greedily in
+    path-index order under recursive residual rejection: candidate j+1 is
+    accepted w.p. ``min(1, r_m(x)/q(x))`` where ``r_m`` is the residual of
+    the target row after the m previous rejections (closed form in
+    :func:`multipath_rrs_tables`). Accepting extends the committed path —
+    paths whose token at this position differs die; rejecting all alive
+    candidates ends the block with a correction token drawn from the exact
+    residual ``r_m``. A fully-accepted block earns the usual bonus token
+    from ``M_b(.|X^G)`` of the winning path.
+
+    Lossless: conditioned on the committed prefix, each committed token is
+    distributed exactly as the target row (the RRS chain realizes a sample
+    from ``P`` out of i.i.d. ``Q``-candidates plus one residual draw), the
+    same per-step invariant token/block verification satisfy. At K = 1 the
+    rule reduces to token-level verification — the serving engine
+    therefore routes ``num_paths == 1`` through the configured single-path
+    verifier and uses this rule only for true forks.
+    """
+    b, k, g = mctx.draft_tokens.shape
+    key_u, key_y = jax.random.split(key)
+    u = jax.random.uniform(key_u, (b, g, k))
+
+    alive = jnp.ones((b, k), bool)
+    rep = jnp.zeros((b,), jnp.int32)       # lowest-indexed alive path
+    done = jnp.zeros((b,), bool)
+    tau = jnp.zeros((b,), jnp.int32)
+    bonus_row = jnp.zeros_like(mctx.p_probs[:, 0, 0])
+    ys = []
+    for i in range(g):
+        # All alive paths share the committed prefix, so the
+        # representative's rows ARE the conditional rows at that prefix.
+        sel = rep[:, None, None]
+        p_i = jnp.take_along_axis(mctx.p_probs[:, :, i], sel, axis=1)[:, 0]
+        q_i = jnp.take_along_axis(mctx.q_probs[:, :, i], sel, axis=1)[:, 0]
+        c_tab, z_tab = multipath_rrs_tables(p_i, q_i, k, residual_sums)
+
+        acc = jnp.zeros((b,), bool)
+        m = jnp.zeros((b,), jnp.int32)     # rejections so far, this position
+        y = jnp.zeros((b,), jnp.int32)
+        for j in range(k):
+            cand = mctx.draft_tokens[:, j, i]
+            eligible = alive[:, j] & ~acc & ~done
+            c_m = jnp.take_along_axis(c_tab, m[:, None], axis=1)[:, 0]
+            z_m = jnp.take_along_axis(z_tab, m[:, None], axis=1)[:, 0]
+            p_tok = jnp.take_along_axis(p_i, cand[:, None], axis=1)[:, 0]
+            q_tok = jnp.take_along_axis(q_i, cand[:, None], axis=1)[:, 0]
+            a = multipath_accept_prob(p_tok, q_tok, c_m, z_m)
+            take = eligible & (u[:, i, j] <= a)
+            y = jnp.where(take, cand, y)
+            acc = acc | take
+            m = m + (eligible & ~take)
+
+        # All alive candidates rejected: the block ends here; correction
+        # token from the exact residual after m rejections.
+        rejected = ~acc & ~done
+        c_f = jnp.take_along_axis(c_tab, m[:, None], axis=1)[:, 0]
+        res_row = multipath_residual_dist(p_i, q_i, c_f)
+        bonus_row = jnp.where(rejected[:, None], res_row, bonus_row)
+
+        tau = tau + acc
+        alive = jnp.where(
+            acc[:, None],
+            alive & (mctx.draft_tokens[:, :, i] == y[:, None]),
+            alive,
+        )
+        rep = jnp.where(acc, jnp.argmax(alive, axis=1).astype(jnp.int32), rep)
+        ys.append(y)
+        done = done | rejected
+
+    # Fully accepted blocks: bonus from M_b(.|X^G) of the winning path.
+    p_last = jnp.take_along_axis(
+        mctx.p_probs[:, :, g], rep[:, None, None], axis=1
+    )[:, 0]
+    bonus_row = jnp.where(done[:, None], bonus_row, p_last)
+    bonus = sampling.categorical(key_y, bonus_row)
+
+    committed = jnp.stack(ys, axis=1)  # (B, G); junk past tau is masked
+    return MultiVerifyResult(
+        tokens=_assemble(committed, bonus, tau),
+        num_accepted=tau,
+        num_tokens=tau + 1,
+        winner=rep,
+    )
+
+
+def multipath_greedy_verify(
+    key: jax.Array,
+    draft_tokens: jax.Array,
+    q_probs: jax.Array,
+    p_probs: jax.Array,
+    residual_sums: ResidualSums | None = None,
+) -> MultiVerifyResult:
+    return multipath_greedy_verify_ctx(
+        key, make_multi_context(draft_tokens, q_probs, p_probs),
+        residual_sums=residual_sums,
+    )
+
+
+def get_multipath_verifier(residual_backend: str | None = None):
+    """Context-based multi-path verifier ``verify(key, mctx)`` with the
+    residual reductions bound to a backend (``None`` = plain jnp)."""
+    if residual_backend is None:
+        return multipath_greedy_verify_ctx
+    return partial(
+        multipath_greedy_verify_ctx,
+        residual_sums=resolve_residual_sums(residual_backend),
+    )
 
 
 # ---------------------------------------------------------------------------

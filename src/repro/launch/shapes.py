@@ -18,6 +18,7 @@ from repro.core import verification
 from repro.distributed import sharding as shd
 from repro.models import drafter_of
 from repro.models.model import Model
+from repro.serving import paging
 from repro.serving import runner as serving_runner
 from repro.serving.batch import BatchState
 from repro.serving.engine import EngineConfig
@@ -80,6 +81,12 @@ VARIANTS: dict[str, dict] = {
     "pure-dp-serve": {"serve_fsdp": False, "serve_tp": False},
     # Both.
     "combined": {"cfg": {"moe_impl": "gather"}, "serve_fsdp": False},
+    # Serving through the paged KV pool: global-attention layers read
+    # K/V via per-slot page tables (XLA gather path off-TPU), the page
+    # pool shards (pages over data axes) and the in-step allocator ops
+    # lower with the program — HLO bytes/collective accounting covers
+    # the gather path, not just the dense-cache serve step.
+    "paged-serve": {"serve_paged": True},
 }
 
 
@@ -214,15 +221,23 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
     # residual_backend="jnp": the dry-run lowers for XLA cost/collective
     # analysis on host platforms; the fused Pallas path is exercised by the
     # serving engine and the kernels benches.
-    # paged=False: the dry-run lowers the dense-cache serve step (the
-    # paged pool's gather/scatter lowering is covered by the kernel
-    # identity tests; its sharding by test_distributed).
+    # The default lowers the dense-cache serve step; the "paged-serve"
+    # variant lowers the page-pool engine instead (gather path + in-step
+    # allocator, pool sharded pages-over-data) so HLO bytes/collective
+    # accounting covers both memory modes.
+    paged = bool(opts.get("serve_paged", False))
     e_cfg = EngineConfig(
         gamma=GAMMA, verifier="block", max_slots=b, max_len=max_len,
-        temperature=1.0, residual_backend="jnp", paged=False,
+        temperature=1.0, residual_backend="jnp", paged=paged,
+        prefill_chunk=GAMMA + 1,  # page slack == the serve chunk slack
     )
     verify = verification.get_ctx_verifier(
         e_cfg.verifier, residual_backend=e_cfg.residual_backend
+    )
+    page_spec = paging.spec_of(e_cfg)
+    page_pool = (
+        (page_spec.num_pages, page_spec.page_size)
+        if page_spec is not None else None
     )
     shard_seq = b == 1  # long_500k: sequence-sharded caches
 
@@ -234,10 +249,14 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
         )
 
     t_cache = jax.eval_shape(
-        lambda: model.init_cache(b, max_len, SERVE_DTYPE, GAMMA + 1)
+        lambda: model.init_cache(
+            b, max_len, SERVE_DTYPE, GAMMA + 1, page_pool=page_pool
+        )
     )
     d_cache = jax.eval_shape(
-        lambda: drafter.init_cache(b, max_len, SERVE_DTYPE, GAMMA + 1)
+        lambda: drafter.init_cache(
+            b, max_len, SERVE_DTYPE, GAMMA + 1, page_pool=page_pool
+        )
     )
     fsdp = opts.get("serve_fsdp", True)
     if opts.get("serve_tp", True):
@@ -260,15 +279,38 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
 
     slot_i32 = jax.ShapeDtypeStruct((b,), jnp.int32)
     slot_bool = jax.ShapeDtypeStruct((b,), jnp.bool_)
+    table_spec = table_shard = used_spec = used_shard = None
+    pool_spec = pool_shard = None
+    if page_spec is not None:
+        # Page tables follow the slot dim like seq_buf; the free list /
+        # refcounts are tiny bookkeeping arrays, replicated (the pooled
+        # K/V itself shards pages-over-data via cache_shardings).
+        table_spec = jax.ShapeDtypeStruct(
+            (b, page_spec.max_pages), jnp.int32
+        )
+        table_shard = b_or_rep
+        used_spec, used_shard = slot_i32, rep
+        pool_spec = paging.PagePool(
+            free_stack=jax.ShapeDtypeStruct(
+                (page_spec.num_pages,), jnp.int32
+            ),
+            free_count=jax.ShapeDtypeStruct((), jnp.int32),
+            ref=jax.ShapeDtypeStruct((page_spec.num_pages,), jnp.int32),
+        )
+        pool_shard = paging.PagePool(
+            free_stack=rep, free_count=rep, ref=rep
+        )
     batch_specs = BatchState(
         seq_buf=jax.ShapeDtypeStruct((b, max_len), jnp.int32),
         lens=slot_i32, d_lens=slot_i32, t_pref=slot_i32,
         active=slot_bool, ready=slot_bool,
         out_start=slot_i32, max_new=slot_i32,
+        page_table=table_spec, pages_used=used_spec, pool=pool_spec,
     )
     batch_shard = BatchState(
         seq_buf=b_or_rep, lens=rep, d_lens=rep, t_pref=rep,
         active=rep, ready=rep, out_start=rep, max_new=rep,
+        page_table=table_shard, pages_used=used_shard, pool=pool_shard,
     )
     args = (
         _bf16_params(model), _bf16_params(drafter),

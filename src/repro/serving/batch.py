@@ -42,11 +42,16 @@ class BatchState(NamedTuple):
     max_new: jax.Array    # (B,) int32 — per-request new-token budget
     # Paged-KV bookkeeping (None when the engine serves dense caches):
     # the page table maps each slot's logical pages to physical pool
-    # pages; the pool is the shared device free-list. One table serves
-    # both models — target and drafter pools share the page-id space.
+    # pages; the pool is the shared device free-list plus per-page
+    # refcounts. One table serves both models — target and drafter pools
+    # share the page-id space. Multi-path engines fork this table into
+    # K copy-on-write aliases *inside* the decode body
+    # (runner.decode_body_multipath); only the adopted winner's table
+    # lands back here, so the batch pytree stays (B, max_pages) no
+    # matter how many paths an iteration scored.
     page_table: jax.Array | None = None   # (B, max_pages) int32, -1 empty
     pages_used: jax.Array | None = None   # (B,) int32 — allocated pages
-    pool: paging.PagePool | None = None   # shared free-list
+    pool: paging.PagePool | None = None   # shared free-list + refcounts
 
     @property
     def num_slots(self) -> int:

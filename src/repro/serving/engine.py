@@ -43,6 +43,11 @@ from repro.serving.runner import Runner, StepOutputs
 from repro.serving.scheduler import RequestState, Scheduler  # noqa: F401
 
 PREFILL_CHUNK = 16
+# Per-step allocation telemetry is decimated once it reaches this many
+# entries (stride doubles, every other retained entry is dropped), so a
+# long-lived engine keeps a bounded, coarsening trace instead of one
+# dict per decode iteration forever.
+ALLOC_TRACE_CAP = 4096
 
 
 @dataclass(frozen=True)
@@ -66,6 +71,14 @@ class EngineConfig:
     paged: bool = True
     page_size: int = 16             # tokens per page
     num_pages: int | None = None    # physical pages; None = max_slots quota
+    # Greedy multi-path block verification (repro.core.verification):
+    # each decode iteration forks every slot's page table into
+    # ``num_paths`` copy-on-write aliases, drafts K i.i.d. paths, scores
+    # them in one fused target pass and greedily commits the longest
+    # accepted path. Requires paged=True and fully-paged caches (all
+    # global-attention layers). ``num_paths=1`` is the single-path
+    # engine, bit-for-bit.
+    num_paths: int = 1
 
 
 class SpecEngine:
@@ -96,7 +109,8 @@ class SpecEngine:
         spec = self.runner.page_spec
         self.batch = batch_mod.init_batch(cfg.max_slots, cfg.max_len, spec)
         budget = (
-            paging.PageBudget(spec, cfg.gamma) if spec is not None else None
+            paging.PageBudget(spec, cfg.gamma, num_paths=cfg.num_paths)
+            if spec is not None else None
         )
         self.scheduler = Scheduler(
             cfg.max_slots, cfg.max_new_tokens, cfg.prefill_chunk,
@@ -140,8 +154,14 @@ class SpecEngine:
         stats = {
             "iterations": 0, "prefill_steps": 0, "tokens": 0,
             "preemptions": 0, "wall_s": 0.0,
+            # Per-step allocation telemetry (paged engines): host-mirror
+            # pool occupancy and cumulative preemptions at each decode
+            # dispatch, consumed by benchmarks/wallclock.py into
+            # results/BENCH_serving.json.
+            "alloc_trace": [],
         }
         t0 = time.perf_counter()
+        trace_stride = 1
         # (snapshot of live-at-dispatch slots, in-flight StepOutputs)
         pending: tuple[dict[int, RequestState], StepOutputs] | None = None
         while True:
@@ -183,6 +203,19 @@ class SpecEngine:
                     )
                 )
                 stats["iterations"] += 1
+                budget = sched.budget
+                if budget is not None and stats["iterations"] % trace_stride == 0:
+                    if len(stats["alloc_trace"]) >= ALLOC_TRACE_CAP:
+                        del stats["alloc_trace"][::2]
+                        trace_stride *= 2
+                    stats["alloc_trace"].append({
+                        "step": stats["iterations"],
+                        "occupancy_pages": budget.occupancy_pages(),
+                        "worst_case_pages": budget.used_worst(),
+                        "num_pages": budget.spec.num_pages,
+                        "active_slots": len(snapshot),
+                        "preemptions": stats["preemptions"],
+                    })
             # Materialize the PREVIOUS step's outputs while the device runs
             # the one just dispatched (double buffering).
             if pending is not None:

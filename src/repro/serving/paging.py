@@ -1,4 +1,5 @@
-"""Paged KV cache: page-pool allocator with a device-resident free list.
+"""Paged KV cache: page-pool allocator with a device-resident free list
+and copy-on-write page sharing.
 
 Instead of reserving a dense ``(max_len, n_kv, hd)`` ring per slot up
 front, global-attention layers write K/V into a **global page pool**
@@ -6,27 +7,41 @@ shared by all slots; each slot owns a small **page table** mapping its
 logical pages (position // page_size) to physical pool pages. Concurrency
 is then bounded by *actual* token usage, not worst-case length — the
 defining property of a production serving engine (vLLM-style
-PagedAttention), and the prerequisite for copy-on-write prefix sharing
+PagedAttention), and the substrate for copy-on-write prefix sharing
 across multi-path draft candidates (see PAPERS.md).
 
-Three pieces live here:
+Pieces:
 
 * :class:`PageSpec` — static geometry (page size, pool size, per-slot
   table length). Derived from the engine config via :func:`spec_of`.
 * :class:`PagePool` + :func:`ensure` / :func:`release` — the device-side
   allocator. ``free_stack[:free_count]`` holds the free physical page
-  ids; ``ensure`` pops pages (all-or-nothing per slot, slot-index order,
-  so allocation is deterministic) to cover a target length, ``release``
-  pushes a retired slot's pages back (LIFO). Both are pure jittable
-  functions over ``(page_table, pages_used, pool)`` and run *inside* the
-  runner's fixed-shape programs — allocation never syncs the host.
+  ids and ``ref`` the per-page reference counts; ``ensure`` pops pages
+  (all-or-nothing per slot, slot-index order, so allocation is
+  deterministic) to cover a target length, ``release`` drops a row's
+  claims and pushes pages whose refcount reaches zero back onto the
+  stack. Rows may alias each other's pages (forked path tables) —
+  duplicate references decrement once each. All allocator ops are pure
+  jittable functions over ``(page_table, pages_used, pool)`` and run
+  *inside* the runner's fixed-shape programs — allocation never syncs
+  the host.
+* :func:`fork` / :func:`cow_ensure` — copy-on-write sharing: ``fork``
+  aliases a slot's table into K path tables (converting its one claim
+  per page into K claims), ``cow_ensure`` prepares a path table for
+  writes — growing fresh pages for the unmapped tail and remapping any
+  *shared* page in the write window to a private copy (the caller
+  applies the returned ``src -> dst`` pool copies before writing). A
+  path writing through its table therefore never perturbs a sibling's
+  view of the shared prefix.
 * :class:`PageBudget` — the host-side conservative mirror the scheduler
   admits/preempts by. The device allocates from exact lengths; the host
   only sees lengths one double-buffered step late, so it budgets with
   ``worst_pages(len + 2 * (gamma + 1))`` per slot — an upper bound on
-  what the device can allocate before the next budget check. As long as
-  ``sum(worst) <= num_pages`` before every dispatch, the device-side
-  ``ensure`` can never fail and slots never stall.
+  what the device can allocate before the next budget check — plus, for
+  multi-path engines, the worst-case post-fork transient of
+  ``num_paths`` path tables' CoW copies and speculative pages. As long
+  as ``sum(worst) <= num_pages`` before every dispatch, the device-side
+  allocators can never fail and slots never stall.
 
 The allocator is exercised by both models' caches with a *single* page
 table: target and drafter pools are indexed by the same physical page
@@ -43,10 +58,13 @@ import jax.numpy as jnp
 
 
 class PagePool(NamedTuple):
-    """Device free-list: ``free_stack[:free_count]`` are free page ids."""
+    """Device free-list: ``free_stack[:free_count]`` are free page ids;
+    ``ref[p]`` counts the table entries (across slots and forked path
+    tables) referencing physical page ``p`` — 0 for free pages."""
 
     free_stack: jax.Array  # (num_pages,) int32
     free_count: jax.Array  # () int32
+    ref: jax.Array         # (num_pages,) int32
 
 
 @dataclass(frozen=True)
@@ -68,20 +86,36 @@ def chunk_slack_of(cfg) -> int:
     return max(cfg.gamma + 1, cfg.prefill_chunk)
 
 
+def path_transient_pages(spec: PageSpec, gamma: int) -> int:
+    """Upper bound on the fresh pages ONE forked path can hold mid-step:
+    its write window [lens - 1, lens + gamma] spans at most
+    ``pages_for(gamma + 2) + 1`` pages, each either a CoW copy of a
+    shared page or a newly grown speculative page."""
+    return spec.pages_for(gamma + 2) + 1
+
+
 def spec_of(cfg) -> PageSpec | None:
     """Derive the pool geometry from an engine config. ``num_pages=None``
-    fully provisions the pool (``max_slots * max_pages``: no
-    over-subscription, admission never blocks, preemption never fires)."""
+    fully provisions the pool (``max_slots * max_pages`` plus the forked
+    paths' transient for multi-path engines: no over-subscription,
+    admission never blocks, preemption never fires)."""
     if not getattr(cfg, "paged", False):
         return None
     ps = cfg.page_size
     max_pages = -(-(cfg.max_len + chunk_slack_of(cfg)) // ps)
+    num_paths = getattr(cfg, "num_paths", 1)
+    spec = PageSpec(page_size=ps, num_pages=0, max_pages=max_pages)
+    fork_extra = (
+        num_paths * path_transient_pages(spec, cfg.gamma)
+        if num_paths > 1 else 0
+    )
     num_pages = cfg.num_pages
     if num_pages is None:
-        num_pages = cfg.max_slots * max_pages
-    assert num_pages >= max_pages, (
+        num_pages = cfg.max_slots * (max_pages + fork_extra)
+    assert num_pages >= max_pages + fork_extra, (
         f"pool of {num_pages} pages cannot hold one full-length slot "
-        f"({max_pages} pages); raise num_pages or shrink max_len"
+        f"({max_pages} pages + {fork_extra} fork transient); raise "
+        f"num_pages or shrink max_len"
     )
     return PageSpec(page_size=ps, num_pages=num_pages, max_pages=max_pages)
 
@@ -90,6 +124,7 @@ def init_pool(spec: PageSpec) -> PagePool:
     return PagePool(
         free_stack=jnp.arange(spec.num_pages, dtype=jnp.int32),
         free_count=jnp.asarray(spec.num_pages, jnp.int32),
+        ref=jnp.zeros((spec.num_pages,), jnp.int32),
     )
 
 
@@ -137,30 +172,181 @@ def ensure(
         jnp.where(take, ids, -1), mode="drop"
     )
     pages_used = pages_used + granted
-    pool = PagePool(pool.free_stack, pool.free_count - jnp.sum(granted))
+    ref = pool.ref.at[jnp.where(take, ids, spec.num_pages)].set(
+        1, mode="drop"
+    )
+    pool = PagePool(pool.free_stack, pool.free_count - jnp.sum(granted), ref)
     return page_table, pages_used, pool, ok
 
 
 def release(
     spec: PageSpec,
-    page_table: jax.Array,
-    pages_used: jax.Array,
+    page_table: jax.Array,  # (N, max_pages) — slot tables OR path tables
+    pages_used: jax.Array,  # (N,)
     pool: PagePool,
-    mask: jax.Array,  # (B,) bool — slots to free
+    mask: jax.Array,  # (N,) bool — rows to free
 ):
-    """Push every masked slot's pages back onto the free stack and clear
-    its table. Returns ``(page_table, pages_used, pool)``."""
-    give_n = jnp.where(mask, pages_used, 0)
-    off = jnp.cumsum(give_n) - give_n
+    """Drop every masked row's page claims and clear its table.
+
+    Refcount-aware: each mapped entry decrements its physical page's
+    refcount (rows may alias each other's pages — forked path tables;
+    duplicates decrement once each) and only pages reaching refcount 0
+    are pushed back onto the free stack (in page-id order). Returns
+    ``(page_table, pages_used, pool)``."""
     jj = jnp.arange(spec.max_pages)[None]
-    give = mask[:, None] & (jj < pages_used[:, None])
-    dst = jnp.where(give, pool.free_count + off[:, None] + jj, spec.num_pages)
+    give = mask[:, None] & (jj < pages_used[:, None]) & (page_table >= 0)
+    entries = jnp.where(give, page_table, spec.num_pages)  # OOB -> drop
+    ref = pool.ref.at[entries].add(
+        -give.astype(jnp.int32), mode="drop"
+    )
+    touched = (
+        jnp.zeros((spec.num_pages,), jnp.int32)
+        .at[entries].add(give.astype(jnp.int32), mode="drop")
+    ) > 0
+    freed = touched & (ref <= 0)
+    ref = jnp.where(freed, 0, ref)
+    idx = jnp.cumsum(freed) - freed
+    dst = jnp.where(freed, pool.free_count + idx, spec.num_pages)
     stack = pool.free_stack.at[dst].set(
-        jnp.where(give, page_table, 0), mode="drop"
+        jnp.arange(spec.num_pages), mode="drop"
     )
     page_table = jnp.where(mask[:, None], -1, page_table)
     pages_used = jnp.where(mask, 0, pages_used)
-    return page_table, pages_used, PagePool(stack, pool.free_count + jnp.sum(give_n))
+    pool = PagePool(stack, pool.free_count + jnp.sum(freed), ref)
+    return page_table, pages_used, pool
+
+
+def fork(
+    spec: PageSpec,
+    page_table: jax.Array,  # (B, max_pages)
+    pages_used: jax.Array,  # (B,)
+    pool: PagePool,
+    num_paths: int,
+    mask: jax.Array,        # (B,) bool — slots to fork
+):
+    """Fork each masked slot's table into ``num_paths`` aliased path
+    tables.
+
+    The slot's single claim on each mapped page is converted into
+    ``num_paths`` path claims (``ref += num_paths - 1``); after
+    verification the caller adopts the winning path's table as the
+    slot's new main table (keeping that path's claim) and ``release``-s
+    the other ``num_paths - 1`` rows — refcounts on the shared prefix
+    return to exactly 1. Unmasked slots get empty path rows and no
+    refcount change. Returns ``(path_tables (B, K, MP), path_used
+    (B, K), pool)``."""
+    b, mp = page_table.shape
+    path_tables = jnp.broadcast_to(
+        jnp.where(mask[:, None, None], page_table[:, None], -1),
+        (b, num_paths, mp),
+    )
+    path_used = jnp.broadcast_to(
+        jnp.where(mask[:, None], pages_used[:, None], 0), (b, num_paths)
+    )
+    jj = jnp.arange(mp)[None]
+    mapped = mask[:, None] & (jj < pages_used[:, None]) & (page_table >= 0)
+    entries = jnp.where(mapped, page_table, spec.num_pages)
+    ref = pool.ref.at[entries].add(
+        jnp.where(mapped, num_paths - 1, 0), mode="drop"
+    )
+    return path_tables, path_used, PagePool(pool.free_stack, pool.free_count, ref)
+
+
+def cow_ensure(
+    spec: PageSpec,
+    page_table: jax.Array,   # (N, max_pages) — path tables (N = B * K)
+    pages_used: jax.Array,   # (N,)
+    pool: PagePool,
+    write_begin: jax.Array,  # (N,) int32 — first position to be written
+    need_len: jax.Array,     # (N,) int32 — cover positions [0, need_len)
+    mask: jax.Array,         # (N,) bool — rows about to write
+    *,
+    max_write_pages: int,    # static bound on write-window pages
+):
+    """Prepare each masked row's table for KV writes in
+    ``[write_begin, need_len)``: grow fresh pages (refcount 1) for the
+    unmapped tail like :func:`ensure`, and remap every *shared* mapped
+    page in the write window (refcount > 1) to a fresh private copy —
+    copy-on-write. All-or-nothing per row, row-index order.
+
+    Returns ``(page_table, pages_used, pool, copy_src, copy_dst, ok)``;
+    ``copy_src/copy_dst`` are ``(N, max_write_pages)`` physical-page copy
+    pairs (sentinel -1 = no copy) the caller MUST apply to every
+    pool-backed cache entry before the writes land. A source page whose
+    claims all CoW away is freed in the same call."""
+    ps = spec.page_size
+    n, mp = page_table.shape
+    w = max_write_pages
+    p_sent = spec.num_pages
+
+    need = jnp.clip((need_len + ps - 1) // ps, 0, spec.max_pages)
+    need = jnp.where(mask, jnp.maximum(need, pages_used), pages_used)
+    deficit = need - pages_used
+
+    # Shared mapped pages inside the write window -> CoW.
+    first_w = jnp.clip(write_begin // ps, 0, spec.max_pages)
+    wj = first_w[:, None] + jnp.arange(w)[None]          # (N, W) logical
+    in_win = mask[:, None] & (wj < pages_used[:, None]) & (wj < mp)
+    phys_w = jnp.take_along_axis(
+        page_table, jnp.clip(wj, 0, mp - 1), axis=1
+    )
+    in_win &= phys_w >= 0
+    shared = in_win & (pool.ref[jnp.clip(phys_w, 0, p_sent - 1)] > 1)
+    n_cow = jnp.sum(shared, axis=1)
+
+    # All-or-nothing grant over (CoW copies + growth), row order.
+    tot = n_cow + deficit
+    cum_excl = jnp.cumsum(tot) - tot
+    ok = cum_excl + tot <= pool.free_count
+    granted_tot = jnp.where(ok, tot, 0)
+    goff = jnp.cumsum(granted_tot) - granted_tot
+
+    row = jnp.arange(n)[:, None]
+    # CoW pages pop first (window order)...
+    cow_take = shared & ok[:, None]
+    cow_rank = jnp.cumsum(shared, axis=1) - shared
+    csrc = pool.free_count - 1 - (goff[:, None] + cow_rank)
+    cow_new = pool.free_stack[jnp.clip(csrc, 0, p_sent - 1)]
+    dst_col = jnp.where(cow_take, wj, spec.max_pages)
+    page_table = page_table.at[
+        jnp.broadcast_to(row, dst_col.shape), dst_col
+    ].set(jnp.where(cow_take, cow_new, -1), mode="drop")
+    # ... then growth pages for the unmapped tail.
+    gj = jnp.arange(spec.max_pages)[None]
+    grow_take = (gj < deficit[:, None]) & ok[:, None]
+    gsrc = pool.free_count - 1 - (goff[:, None] + n_cow[:, None] + gj)
+    grow_new = pool.free_stack[jnp.clip(gsrc, 0, p_sent - 1)]
+    dst_col = jnp.where(grow_take, pages_used[:, None] + gj, spec.max_pages)
+    page_table = page_table.at[
+        jnp.broadcast_to(row, dst_col.shape), dst_col
+    ].set(jnp.where(grow_take, grow_new, -1), mode="drop")
+    pages_used = pages_used + jnp.where(ok, deficit, 0)
+
+    # Refcounts: fresh pages claim 1; CoW sources lose one claim each —
+    # a source every fork CoW'd away is freed (its content lives on in
+    # the copies).
+    ref = pool.ref.at[jnp.where(cow_take, cow_new, p_sent)].set(
+        1, mode="drop"
+    )
+    ref = ref.at[jnp.where(grow_take, grow_new, p_sent)].set(1, mode="drop")
+    ref = ref.at[jnp.where(cow_take, phys_w, p_sent)].add(-1, mode="drop")
+    touched = (
+        jnp.zeros((spec.num_pages,), jnp.int32)
+        .at[jnp.where(cow_take, phys_w, p_sent)]
+        .add(1, mode="drop")
+    ) > 0
+    freed = touched & (ref <= 0)
+    ref = jnp.where(freed, 0, ref)
+    base = pool.free_count - jnp.sum(granted_tot)
+    idx = jnp.cumsum(freed) - freed
+    stack = pool.free_stack.at[
+        jnp.where(freed, base + idx, p_sent)
+    ].set(jnp.arange(spec.num_pages), mode="drop")
+    pool = PagePool(stack, base + jnp.sum(freed), ref)
+
+    copy_src = jnp.where(cow_take, phys_w, -1)
+    copy_dst = jnp.where(cow_take, cow_new, -1)
+    return page_table, pages_used, pool, copy_src, copy_dst, ok
 
 
 @dataclass
@@ -171,19 +357,36 @@ class PageBudget:
     double-buffered loop the host only learns lengths one step late, so
     each live slot is budgeted at ``worst_pages(len + 2 * (gamma + 1))``
     — covering the unmaterialized in-flight step plus the step about to
-    be dispatched. Invariant enforced by the scheduler/engine: the sum
-    of worst-case pages over live slots never exceeds ``num_pages`` at
-    dispatch time, so the device-side ``ensure`` cannot fail."""
+    be dispatched. Multi-path engines add the worst-case post-fork
+    transient: the adopted winner table may cover one extra drafted
+    block, and mid-step every one of the ``num_paths`` path tables can
+    hold :func:`path_transient_pages` fresh pages (CoW copies plus
+    speculative growth). Invariant enforced by the scheduler/engine: the
+    sum of worst-case pages over live slots never exceeds ``num_pages``
+    at dispatch time, so the device-side allocators cannot fail."""
 
     spec: PageSpec
     gamma: int
+    num_paths: int = 1
     slot_len: dict[int, int] = field(default_factory=dict)
 
     def worst_pages(self, length: int) -> int:
-        return self.spec.pages_for(length + 2 * (self.gamma + 1))
+        worst = self.spec.pages_for(length + 2 * (self.gamma + 1))
+        if self.num_paths > 1:
+            worst = self.spec.pages_for(length + 3 * (self.gamma + 1))
+            worst += self.num_paths * path_transient_pages(
+                self.spec, self.gamma
+            )
+        return worst
 
     def used_worst(self) -> int:
         return sum(self.worst_pages(n) for n in self.slot_len.values())
+
+    def occupancy_pages(self) -> int:
+        """Exact committed-page count across live slots — the host-lagged
+        pool occupancy the per-step allocation telemetry reports (the
+        device may briefly hold up to ``used_worst()``)."""
+        return sum(self.spec.pages_for(n) for n in self.slot_len.values())
 
     def can_admit(self, prompt_len: int) -> bool:
         return (

@@ -17,6 +17,18 @@ Two fixed-shape programs cover the whole request lifecycle:
   small :class:`StepOutputs` tuple per step and the bookkeeping arrays
   stay device-resident (see ``repro.serving.batch``).
 
+* :func:`decode_body_multipath` — the ``num_paths > 1`` variant: after
+  the shared drafter catch-up, the slot's page table is **forked** into
+  K aliased path tables (``paging.fork``), each path copy-on-writes the
+  shared boundary page and grows private speculative pages
+  (``paging.cow_ensure``), K draft paths run as ``B * K`` flattened
+  lanes through one drafter scan and ONE fused target verify pass
+  (every lane attends through its own aliased table into the shared
+  pools), greedy multi-path verification picks the winning path, whose
+  table the slot adopts; the losing paths' claims are released inside
+  the same program. ``num_paths == 1`` keeps :func:`decode_body`
+  bitwise intact.
+
 Bookkeeping invariants (per slot): ``seq_buf[: len]`` holds all committed
 tokens; the *target* has consumed ``seq_buf[: len-1]`` — the last
 committed token is consumed at the start of the next verify chunk; the
@@ -99,6 +111,111 @@ def _mask_cache(new_cache, old_cache, mask):
     )
 
 
+def _probs_of(cfg, vocab: int, logits: jax.Array) -> jax.Array:
+    return sampling.logits_to_probs(
+        logits[..., :vocab], temperature=cfg.temperature
+    )
+
+
+def _catch_up_drafter(
+    drafter: Model, cfg, d_params, d_cache,
+    seq_buf, lens, d_lens, page_table, write_mask,
+):
+    """Shared head of both decode bodies — drafter catch-up: one chunk of
+    up to ``gamma + 1`` tokens advances the drafter from ``d_lens`` to
+    the committed length ``lens``. Returns the committed drafter cache
+    and ``q(.| committed prefix)`` as probabilities."""
+    g = cfg.gamma
+    k_catch = g + 1
+    idx = d_lens[:, None] + jnp.arange(k_catch)[None]
+    catch_toks = jnp.take_along_axis(
+        seq_buf, jnp.minimum(idx, seq_buf.shape[1] - 1), axis=1
+    )
+    n_valid = jnp.clip(lens - d_lens, 1, k_catch)  # in [1, g+1]
+    d_logits, d_vcache, _ = drafter.apply(
+        d_params, catch_toks, cache=d_cache, lens=d_lens,
+        mode="verify", valid_len=n_valid,
+        page_table=page_table, kv_write_mask=write_mask,
+    )
+    committed = drafter.commit_cache(d_vcache, n_valid - 1)
+    # q(. | committed prefix): logits at index n_valid-1.
+    last_q_logits = jnp.take_along_axis(
+        d_logits, (n_valid - 1)[:, None, None], axis=1
+    )[:, 0]
+    return committed, _probs_of(cfg, drafter.cfg.vocab, last_q_logits)
+
+
+def _draft_gamma(
+    drafter: Model, cfg, d_params, cache,
+    q0, lens, page_table, write_mask, key,
+):
+    """Shared by both decode bodies — sample ``X_1 .. X_gamma``
+    autoregressively from the drafter, one lane per draft path. Returns
+    ``(drafted cache, draft_toks (N, G), q_rows (N, G, V))`` with
+    ``q_rows = [q0, q(.|X^1), ..., q(.|X^{G-1})]`` as verification
+    needs them."""
+    g = cfg.gamma
+    vocab = drafter.cfg.vocab
+    key, sub = jax.random.split(key)
+    x1 = sampling.categorical(sub, q0)
+
+    def draft_step(carry, i):
+        cache, tok, key_i = carry
+        key_i, sub = jax.random.split(key_i)
+        # the drafter has consumed lens + i tokens so far
+        logits, cache, _ = drafter.apply(
+            d_params, tok[:, None], cache=cache, lens=lens + i,
+            mode="decode", page_table=page_table, kv_write_mask=write_mask,
+        )
+        q = _probs_of(cfg, vocab, logits[:, 0])
+        nxt = sampling.categorical(sub, q)
+        return (cache, nxt, key_i), (tok, q)
+
+    (drafted, _, _), (draft_toks, q_scan) = jax.lax.scan(
+        draft_step, (cache, x1, key), jnp.arange(g)
+    )
+    draft_toks = draft_toks.T                          # (N, G): X_1..X_G
+    # q_scan[i] = q(. | prefix, X_1..X_{i+1}); verification needs
+    # [q0, q(.|X_1), ..., q(.|X^{G-1})].
+    q_rows = jnp.concatenate(
+        [q0[:, None], jnp.swapaxes(q_scan, 0, 1)[:, : g - 1]], axis=1
+    )                                                  # (N, G, V)
+    return drafted, draft_toks, q_rows
+
+
+def _commit_and_stop(cfg, batch: BatchState, run, tokens, num_tokens):
+    """Shared tail of both decode bodies: write the iteration's committed
+    tokens into ``seq_buf``, advance ``lens``/``d_lens``, and detect
+    EOS / max-new-tokens / max-len stops on device. Returns
+    ``(seq_buf, new_lens, new_d_lens, n_keep, done)``."""
+    seq_buf, lens, d_lens = batch.seq_buf, batch.lens, batch.d_lens
+    b = seq_buf.shape[0]
+    g = cfg.gamma
+    pos = jnp.arange(g + 1)[None]
+    write_idx = lens[:, None] + pos
+    valid = (pos < num_tokens[:, None]) & run[:, None]
+    write_idx = jnp.where(valid, write_idx, seq_buf.shape[1] - 1)
+    b_idx = jnp.broadcast_to(jnp.arange(b)[:, None], write_idx.shape)
+    seq_buf = seq_buf.at[b_idx, write_idx].set(
+        jnp.where(valid, tokens, seq_buf[b_idx, write_idx])
+    )
+    new_lens = jnp.where(run, lens + num_tokens, lens)
+    new_d_lens = jnp.where(run, lens, d_lens)
+
+    emitted_before = lens - batch.out_start  # output tokens so far
+    cum_out = emitted_before[:, None] + pos + 1
+    in_block = pos < num_tokens[:, None]
+    hit = in_block & (cum_out >= batch.max_new[:, None])
+    if cfg.eos_id >= 0:
+        hit = hit | (in_block & (tokens == cfg.eos_id))
+    first_stop = jnp.min(jnp.where(hit, pos, g + 1), axis=1)
+    n_keep = jnp.where(run, jnp.minimum(num_tokens, first_stop + 1), 0)
+    done = run & (
+        (first_stop <= g) | (new_lens + g + 2 >= cfg.max_len)
+    )
+    return seq_buf, new_lens, new_d_lens, n_keep, done
+
+
 def _ensure_pages(cfg, batch: BatchState, need_len, mask):
     """Grow masked slots' page tables to cover ``need_len`` tokens (no-op
     for dense engines). Returns (batch, ok): ``ok=False`` slots got no
@@ -167,7 +284,6 @@ def decode_body(
     caches and batch plus :class:`StepOutputs`; ``num_tokens``/``n_keep``
     are 0 and ``done`` False for slots that did not run."""
     seq_buf, lens, d_lens = batch.seq_buf, batch.lens, batch.d_lens
-    b = seq_buf.shape[0]
     g = cfg.gamma
     vocab = target.cfg.vocab
     run = batch.active & batch.ready
@@ -179,54 +295,16 @@ def decode_body(
     key_d, key_v = jax.random.split(key)
 
     # ---- 1. drafter catch-up: chunk of up to g+1 tokens from d_lens. ----
-    k_catch = g + 1
-    idx = d_lens[:, None] + jnp.arange(k_catch)[None]
-    catch_toks = jnp.take_along_axis(
-        seq_buf, jnp.minimum(idx, seq_buf.shape[1] - 1), axis=1
+    d_cache_committed, q0 = _catch_up_drafter(
+        drafter, cfg, d_params, d_cache, seq_buf, lens, d_lens,
+        batch.page_table, run,
     )
-    n_valid = jnp.clip(lens - d_lens, 1, k_catch)  # in [1, g+1]
-    d_logits, d_vcache, _ = drafter.apply(
-        d_params, catch_toks, cache=d_cache, lens=d_lens,
-        mode="verify", valid_len=n_valid,
-        page_table=batch.page_table, kv_write_mask=run,
-    )
-    d_cache_committed = drafter.commit_cache(d_vcache, n_valid - 1)
-    # q(. | committed prefix): logits at index n_valid-1.
-    last_q_logits = jnp.take_along_axis(
-        d_logits, (n_valid - 1)[:, None, None], axis=1
-    )[:, 0]
 
     # ---- 2. draft gamma tokens. ----
-    def probs_of(logits):
-        return sampling.logits_to_probs(
-            logits[..., :vocab], temperature=cfg.temperature
-        )
-
-    q0 = probs_of(last_q_logits)                      # (B, V)
-    key_d, sub = jax.random.split(key_d)
-    x1 = sampling.categorical(sub, q0)
-
-    def draft_step(carry, i):
-        cache, tok, key_i = carry
-        key_i, sub = jax.random.split(key_i)
-        pos_len = lens + i  # drafter consumed lens+i tokens so far
-        logits, cache, _ = drafter.apply(
-            d_params, tok[:, None], cache=cache, lens=pos_len, mode="decode",
-            page_table=batch.page_table, kv_write_mask=run,
-        )
-        q = probs_of(logits[:, 0])
-        nxt = sampling.categorical(sub, q)
-        return (cache, nxt, key_i), (tok, q)
-
-    (d_cache_drafted, _, _), (draft_toks, q_scan) = jax.lax.scan(
-        draft_step, (d_cache_committed, x1, key_d), jnp.arange(g)
+    d_cache_drafted, draft_toks, q_rows = _draft_gamma(
+        drafter, cfg, d_params, d_cache_committed, q0, lens,
+        batch.page_table, run, key_d,
     )
-    draft_toks = draft_toks.T                          # (B, G): X_1..X_G
-    # q_scan[i] = q(. | prefix, X_1..X_{i+1}); verification needs
-    # [q0, q(.|X_1), ..., q(.|X^{G-1})].
-    q_rows = jnp.concatenate(
-        [q0[:, None], jnp.swapaxes(q_scan, 0, 1)[:, : g - 1]], axis=1
-    )                                                  # (B, G, V)
     d_cache_next = _restore_ssm(d_cache_drafted, d_cache_committed)
 
     # ---- 3. target verify chunk [last_token, X_1..X_gamma]. ----
@@ -236,38 +314,18 @@ def decode_body(
         t_params, chunk, cache=t_cache, lens=lens - 1, mode="verify",
         page_table=batch.page_table, kv_write_mask=run,
     )
-    p_rows = probs_of(t_logits)                         # (B, G+1, V)
+    p_rows = _probs_of(cfg, vocab, t_logits)            # (B, G+1, V)
 
     # ---- 4. verification (the paper's algorithms). ----
     res = verify(key_v, verification.make_context(draft_toks, q_rows, p_rows))
     tau = res.num_accepted
     num_tokens = jnp.where(run, res.num_tokens, 0)
 
-    # ---- 5. commit. ----
+    # ---- 5. commit + stop detection (device-side). ----
     t_cache_next = _mask_cache(target.commit_cache(t_vcache, tau), t_cache, run)
     d_cache_next = _mask_cache(d_cache_next, d_cache, run)
-    pos = jnp.arange(g + 1)[None]
-    write_idx = lens[:, None] + pos
-    valid = (pos < num_tokens[:, None]) & run[:, None]
-    write_idx = jnp.where(valid, write_idx, seq_buf.shape[1] - 1)
-    b_idx = jnp.broadcast_to(jnp.arange(b)[:, None], write_idx.shape)
-    seq_buf = seq_buf.at[b_idx, write_idx].set(
-        jnp.where(valid, res.tokens, seq_buf[b_idx, write_idx])
-    )
-    new_lens = jnp.where(run, lens + num_tokens, lens)
-    new_d_lens = jnp.where(run, lens, d_lens)
-
-    # ---- 6. stop detection (device-side). ----
-    emitted_before = lens - batch.out_start  # output tokens so far
-    cum_out = emitted_before[:, None] + pos + 1
-    in_block = pos < num_tokens[:, None]
-    hit = in_block & (cum_out >= batch.max_new[:, None])
-    if cfg.eos_id >= 0:
-        hit = hit | (in_block & (res.tokens == cfg.eos_id))
-    first_stop = jnp.min(jnp.where(hit, pos, g + 1), axis=1)
-    n_keep = jnp.where(run, jnp.minimum(num_tokens, first_stop + 1), 0)
-    done = run & (
-        (first_stop <= g) | (new_lens + g + 2 >= cfg.max_len)
+    seq_buf, new_lens, new_d_lens, n_keep, done = _commit_and_stop(
+        cfg, batch, run, res.tokens, num_tokens
     )
 
     # Deactivate finished slots on device immediately: with the engine's
@@ -284,6 +342,177 @@ def decode_body(
     return t_cache_next, d_cache_next, new_batch, outs
 
 
+def _apply_pool_copies(cache, copy_src: jax.Array, copy_dst: jax.Array):
+    """Apply CoW page copies (physical src -> dst pairs, -1 = none) to
+    every :class:`PagedKV` pool in a cache pytree. Pool leaves are
+    stacked over layer groups — pages live on axis 1."""
+    src = copy_src.reshape(-1)
+    dst = copy_dst.reshape(-1)
+    dst = jnp.where(dst >= 0, dst, jnp.iinfo(jnp.int32).max)  # drop
+
+    def copy(leaf: PagedKV) -> PagedKV:
+        def one(pool):
+            rows = pool[:, jnp.clip(src, 0, pool.shape[1] - 1)]
+            return pool.at[:, dst].set(rows, mode="drop")
+
+        return PagedKV(k=one(leaf.k), v=one(leaf.v))
+
+    return jax.tree.map(
+        lambda e: copy(e) if isinstance(e, PagedKV) else e,
+        cache,
+        is_leaf=lambda x: isinstance(x, PagedKV),
+    )
+
+
+def _tile_paths(x: jax.Array, num_paths: int) -> jax.Array:
+    """(B, ...) -> (B * K, ...) with lane index b * K + j."""
+    return jnp.repeat(x, num_paths, axis=0)
+
+
+def decode_body_multipath(
+    target: Model, drafter: Model, cfg, verify_mp,
+    t_params, d_params, t_cache, d_cache, batch: BatchState, key,
+):
+    """One multi-path speculative iteration (``cfg.num_paths`` > 1).
+
+    Requires fully-paged caches (both models all-global attention): the
+    K forked paths share every pool and differ only through their page
+    tables, so the drafter scan and the target verify chunk run as one
+    fused fixed-shape program over ``B * num_paths`` lanes."""
+    spec = paging.spec_of(cfg)
+    seq_buf, lens, d_lens = batch.seq_buf, batch.lens, batch.d_lens
+    b = seq_buf.shape[0]
+    g = cfg.gamma
+    k = cfg.num_paths
+    bk = b * k
+    vocab = target.cfg.vocab
+    run = batch.active & batch.ready
+    key_d, key_v = jax.random.split(key)
+
+    # ---- 0. cover the committed prefix; speculative pages are per-path.
+    table, used, pool, ok = paging.ensure(
+        spec, batch.page_table, batch.pages_used, batch.pool, lens, run
+    )
+    run = run & ok
+
+    # ---- 1. drafter catch-up on the committed tokens (once per slot:
+    # pre-fork, through the slot's main table — every path forks this
+    # state). ----
+    d_cache, q0 = _catch_up_drafter(
+        drafter, cfg, d_params, d_cache, seq_buf, lens, d_lens, table, run
+    )
+
+    # ---- 2. fork the page table into K aliased path tables and prepare
+    # each path's write window (CoW the shared boundary page, grow
+    # private speculative pages). ----
+    path_tables, path_used, pool = paging.fork(spec, table, used, pool, k, run)
+    pt = path_tables.reshape(bk, spec.max_pages)
+    pu = path_used.reshape(bk)
+    run_k = _tile_paths(run, k)
+    lens_k = _tile_paths(lens, k)
+    w_pages = spec.pages_for(g + 1) + 1  # write window [lens-1, lens+g)
+    pt, pu, pool, copy_src, copy_dst, ok_k = paging.cow_ensure(
+        spec, pt, pu, pool, lens_k - 1, lens_k + g, run_k,
+        max_write_pages=w_pages,
+    )
+    # All-or-nothing per slot: a slot whose paths could not all get pages
+    # sits the step out (the host budget makes this unreachable).
+    run = run & jnp.all(ok_k.reshape(b, k), axis=1)
+    run_k = _tile_paths(run, k)
+    t_cache = _apply_pool_copies(t_cache, copy_src, copy_dst)
+    d_cache = _apply_pool_copies(d_cache, copy_src, copy_dst)
+
+    # ---- 3. draft K i.i.d. paths (B * K flattened lanes). ----
+    d_cache_drafted, draft_toks, q_rows = _draft_gamma(
+        drafter, cfg, d_params, d_cache, _tile_paths(q0, k), lens_k,
+        pt, run_k, key_d,
+    )                                                  # (BK, G), (BK, G, V)
+    d_cache = _restore_ssm(d_cache_drafted, d_cache)
+
+    # ---- 4. ONE fused target pass verifies all K paths: each lane
+    # attends through its own aliased page table into the shared pools.
+    last_tok = jnp.take_along_axis(seq_buf, (lens - 1)[:, None], axis=1)
+    chunk = jnp.concatenate(
+        [_tile_paths(last_tok, k), draft_toks], axis=1
+    )                                                  # (BK, G+1)
+    t_logits, t_vcache, _ = target.apply(
+        t_params, chunk, cache=t_cache, lens=lens_k - 1, mode="verify",
+        page_table=pt, kv_write_mask=run_k,
+    )
+    p_rows = _probs_of(cfg, vocab, t_logits)           # (BK, G+1, V)
+
+    # ---- 5. greedy multi-path verification. ----
+    mctx = verification.make_multi_context(
+        draft_toks.reshape(b, k, g),
+        q_rows.reshape(b, k, g, vocab),
+        p_rows.reshape(b, k, g + 1, vocab),
+    )
+    res = verify_mp(key_v, mctx)
+    tau = res.num_accepted
+    num_tokens = jnp.where(run, res.num_tokens, 0)
+
+    # ---- 6. adopt the winner's table, release the losing paths. Every
+    # forked slot adopts exactly one path row's claim (a slot that sat
+    # the step out adopts path 0, whose table is a superset alias of its
+    # old one) so the committed pages' refcounts return to exactly 1.
+    forked = batch.active & batch.ready & ok
+    winner = jnp.where(run, res.winner, 0)
+    t_cache = _mask_cache(target.commit_cache(t_vcache, tau), t_cache, run)
+    path_tables = pt.reshape(b, k, spec.max_pages)
+    path_used = pu.reshape(b, k)
+    win_table = jnp.take_along_axis(
+        path_tables, winner[:, None, None], axis=1
+    )[:, 0]
+    win_used = jnp.take_along_axis(path_used, winner[:, None], axis=1)[:, 0]
+    new_table = jnp.where(forked[:, None], win_table, table)
+    new_used = jnp.where(forked, win_used, used)
+    keep = jnp.tile(jnp.arange(k), (b,)) == _tile_paths(winner, k)
+    pt, pu, pool = paging.release(
+        spec, pt, pu, pool, _tile_paths(forked, k) & ~keep
+    )
+
+    # ---- 7. commit + stop detection (shared with the single-path body).
+    seq_buf, new_lens, new_d_lens, n_keep, done = _commit_and_stop(
+        cfg, batch, run, res.tokens, num_tokens
+    )
+
+    new_batch = batch._replace(
+        seq_buf=seq_buf, lens=new_lens, d_lens=new_d_lens,
+        active=batch.active & ~done, ready=batch.ready & ~done,
+        page_table=new_table, pages_used=new_used, pool=pool,
+    )
+    outs = StepOutputs(
+        tokens=res.tokens, n_keep=n_keep, num_tokens=num_tokens, done=done
+    )
+    return t_cache, d_cache, new_batch, outs
+
+
+def _assert_all_paged(model: Model, cfg, chunk_slack: int, role: str):
+    """Multi-path serving runs K paths as flattened lanes over shared
+    page pools — every cache entry must be a :class:`PagedKV` (no dense
+    rings, SSM states or cross-attention caches, whose per-slot batch
+    axes cannot follow the fork)."""
+    cache = jax.eval_shape(
+        lambda: model.init_cache(
+            1, cfg.max_len, chunk_slack=chunk_slack, page_pool=(1, 1)
+        )
+    )
+    bad = [
+        type(e).__name__
+        for seg in cache["segments"]
+        for entry in seg
+        for e in (entry.values() if isinstance(entry, dict) else [entry])
+        if not isinstance(e, PagedKV)
+    ]
+    if bad:
+        raise ValueError(
+            f"num_paths={cfg.num_paths} needs fully-paged caches, but the "
+            f"{role} model {model.cfg.name!r} has non-paged entries "
+            f"{sorted(set(bad))} (sliding-window / SSM / cross layers); "
+            "serve it with num_paths=1"
+        )
+
+
 class Runner:
     """Owns the compiled programs for one (target, drafter) pair. Exactly
     two executables cover the whole lifecycle — chunked prefill and the
@@ -298,9 +527,23 @@ class Runner:
             cfg.verifier, residual_backend=cfg.residual_backend
         )
         self._prefill_fn = jax.jit(partial(prefill_body, target, drafter, cfg))
-        self._decode_fn = jax.jit(
-            partial(decode_body, target, drafter, cfg, self.verify)
-        )
+        if getattr(cfg, "num_paths", 1) > 1:
+            if self.page_spec is None:
+                raise ValueError("num_paths > 1 requires paged=True")
+            _assert_all_paged(target, cfg, self.chunk_slack, "target")
+            _assert_all_paged(drafter, cfg, self.chunk_slack, "drafter")
+            verify_mp = verification.get_multipath_verifier(
+                cfg.residual_backend
+            )
+            self._decode_fn = jax.jit(
+                partial(
+                    decode_body_multipath, target, drafter, cfg, verify_mp
+                )
+            )
+        else:
+            self._decode_fn = jax.jit(
+                partial(decode_body, target, drafter, cfg, self.verify)
+            )
         self._release_fn = jax.jit(partial(_release_slot, self.page_spec))
 
     @property

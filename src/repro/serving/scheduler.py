@@ -11,7 +11,10 @@ consumed exactly ``min(chunk, remaining)`` more prompt tokens.
 Paged engines hand the scheduler a :class:`repro.serving.paging.PageBudget`
 — admission then goes by *free-page budget* instead of blind slot-fill:
 a queued request is admitted only when the pool can cover every live
-slot's conservative worst case plus the newcomer's. When decoding grows
+slot's conservative worst case plus the newcomer's. For multi-path
+engines that worst case is **post-fork**: it includes the K forked path
+tables' copy-on-write and speculative transient, so the in-program
+fork/cow allocators can never run the pool dry. When decoding grows
 live slots past the budget (over-subscribed pools), the engine preempts
 the most recently admitted slot: its pages are freed and the request
 requeues at the *front* with ``prompt + output`` as its resume prompt —

@@ -1,6 +1,8 @@
 """Launch-layer structural tests (no 512-device init needed)."""
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import AbstractMesh
 
 from repro.configs import registry
 from repro.launch import roofline, shapes
@@ -30,8 +32,43 @@ def test_shape_configs_match_assignment():
 
 def test_variants_known():
     assert "base" in shapes.VARIANTS
-    for v in ["gather-moe", "ragged-moe", "pure-dp-serve", "expert-parallel"]:
+    for v in ["gather-moe", "ragged-moe", "pure-dp-serve", "expert-parallel",
+              "paged-serve"]:
         assert v in shapes.VARIANTS
+
+
+def test_paged_serve_step_builds_page_pool_specs():
+    """The paged-serve dry-run variant must thread page tables + the
+    pool free list through the serve step's input specs and shardings
+    (the base variant keeps the dense-cache step: no page fields)."""
+    from repro.models.attention import PagedKV
+    from repro.models.model import Model
+
+    mesh = AbstractMesh((("data", 16), ("model", 16)))
+    model = Model(registry.get_config("olmo-1b"))
+    shape = shapes.SHAPES["decode_32k"]
+
+    _, args, shardings, out_shardings = shapes.build_serve_step(
+        model, mesh, shape, shapes.VARIANTS["paged-serve"]
+    )
+    batch_specs, batch_shard = args[4], shardings[4]
+    assert batch_specs.page_table is not None
+    assert batch_specs.page_table.shape[0] == shape.global_batch
+    assert batch_specs.pool is not None
+    assert batch_specs.pool.free_stack.shape == batch_specs.pool.ref.shape
+    assert batch_shard.page_table is not None
+    # global-attention layers lower as pooled PagedKV entries
+    t_cache = args[2]
+    pools = [
+        e for seg in t_cache["segments"] for e in seg
+        if isinstance(e, PagedKV)
+    ]
+    assert pools, "olmo global layers should be paged in this variant"
+    assert pools[0].k.shape[1] == batch_specs.pool.free_stack.shape[0]
+
+    # base variant unchanged: dense caches, no page bookkeeping
+    _, args_b, _, _ = shapes.build_serve_step(model, mesh, shape, {})
+    assert args_b[4].page_table is None and args_b[4].pool is None
 
 
 def test_analytic_costs_sane():

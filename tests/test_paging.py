@@ -1,5 +1,7 @@
-"""Paged KV cache tests: allocator invariants, paged-vs-dense engine
-identity (greedy and sampled), over-subscription with preemption +
+"""Paged KV cache tests: allocator invariants, copy-on-write page
+sharing (refcounts, fork/write/release leak-freedom, sibling isolation),
+paged-vs-dense engine identity (greedy and sampled), multi-path engine
+identity and pool drain, over-subscription with preemption +
 recompute-on-resume, ring wraparound for sliding-window layers, and
 page-pool sharding specs."""
 
@@ -8,10 +10,19 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline/minimal env: keep deterministic cases running
+    from conftest import hypothesis_stub
+
+    given, settings, st = hypothesis_stub()
+
 from repro.configs import registry
 from repro.models import Model
+from repro.models.attention import PagedKV
 from repro.serving import paging
 from repro.serving.engine import EngineConfig, SpecEngine
+from repro.serving.runner import _apply_pool_copies
 
 SPEC = paging.PageSpec(page_size=4, num_pages=16, max_pages=6)
 
@@ -108,6 +119,184 @@ class TestAllocator:
             paging.spec_of(cfg)
 
 
+def _pool_invariant(spec, pool):
+    """No leaks, ever: free pages + referenced pages == the pool, the
+    free stack holds exactly the unreferenced page ids, refcounts are
+    non-negative."""
+    free = int(pool.free_count)
+    live = int(jnp.sum(pool.ref > 0))
+    assert free + live == spec.num_pages, (free, live, spec.num_pages)
+    assert bool(jnp.all(pool.ref >= 0))
+    stack_ids = {int(x) for x in pool.free_stack[:free]}
+    live_ids = {p for p in range(spec.num_pages) if int(pool.ref[p]) > 0}
+    assert len(stack_ids) == free  # distinct
+    assert stack_ids.isdisjoint(live_ids)
+
+
+class TestCoW:
+    def test_fork_bumps_refcounts_release_drains_to_zero(self):
+        spec = paging.PageSpec(page_size=4, num_pages=16, max_pages=6)
+        table, used, pool = _mk(1, spec)
+        table, used, pool, _ = paging.ensure(
+            spec, table, used, pool, jnp.array([10]), jnp.array([True])
+        )
+        assert bool(jnp.all(pool.ref[table[0, :3]] == 1))
+        pt, pu, pool = paging.fork(
+            spec, table, used, pool, 3, jnp.array([True])
+        )
+        # the slot's 1 claim per page became 3 path claims
+        assert bool(jnp.all(pool.ref[table[0, :3]] == 3))
+        assert int(pool.free_count) == 16 - 3
+        _pool_invariant(spec, pool)
+        pt = pt.reshape(3, spec.max_pages)
+        pu = pu.reshape(3)
+        # releasing the aliased rows decrements once each; the last
+        # release returns the pages — refcounts back to zero.
+        pt, pu, pool = paging.release(
+            spec, pt, pu, pool, jnp.array([True, True, False])
+        )
+        assert bool(jnp.all(pool.ref[table[0, :3]] == 1))
+        assert int(pool.free_count) == 16 - 3  # still claimed by path 2
+        pt, pu, pool = paging.release(
+            spec, pt, pu, pool, jnp.array([False, False, True])
+        )
+        assert int(jnp.max(pool.ref)) == 0
+        assert int(pool.free_count) == 16
+        _pool_invariant(spec, pool)
+
+    def test_cow_write_does_not_perturb_sibling_paths(self):
+        """A path writing into a (CoW-remapped) shared page never changes
+        what its sibling reads through ITS table — and the shared prefix
+        outside the write window stays physically shared."""
+        spec = paging.PageSpec(page_size=4, num_pages=16, max_pages=6)
+        table, used, pool = _mk(1, spec)
+        table, used, pool, _ = paging.ensure(
+            spec, table, used, pool, jnp.array([6]), jnp.array([True])
+        )
+        # committed KV content: pool leaf (G=1, P, page, 1, 1)
+        k0 = jnp.arange(16 * 4, dtype=jnp.float32).reshape(1, 16, 4, 1, 1)
+        cache = {"segments": [[PagedKV(k=k0, v=-k0)]]}
+
+        pt, pu, pool = paging.fork(spec, table, used, pool, 2, jnp.array([True]))
+        pt = pt.reshape(2, spec.max_pages)
+        pu = pu.reshape(2)
+        pt, pu, pool, src, dst, ok = paging.cow_ensure(
+            spec, pt, pu, pool,
+            jnp.array([5, 5]), jnp.array([9, 9]), jnp.array([True, True]),
+            max_write_pages=2,
+        )
+        assert ok.tolist() == [True, True]
+        _pool_invariant(spec, pool)
+        p0, p1 = int(table[0, 0]), int(table[0, 1])
+        # page 0 is outside the write window: still shared by both paths
+        assert int(pt[0, 0]) == p0 and int(pt[1, 0]) == p0
+        assert int(pool.ref[p0]) == 2
+        # page 1 was shared and in the window: remapped to private copies
+        assert int(pt[0, 1]) != p1 and int(pt[1, 1]) != p1
+        assert int(pt[0, 1]) != int(pt[1, 1])
+        # both paths grew a private speculative page 2
+        assert int(pt[0, 2]) != int(pt[1, 2])
+        assert pu.tolist() == [3, 3]
+        # the fully-CoW'd source page was freed in the same call
+        assert int(pool.ref[p1]) == 0
+
+        cache = _apply_pool_copies(cache, src, dst)
+        leaf = cache["segments"][0][0]
+        # copies carry the committed content of the source page
+        assert bool(jnp.all(leaf.k[0, int(pt[1, 1])] == k0[0, p1]))
+        # path 0 writes into its copy (position 5 = logical page 1, off 1)
+        k_new = leaf.k.at[0, int(pt[0, 1]), 1].set(999.0)
+        # sibling's view through ITS table is untouched
+        assert bool(jnp.all(k_new[0, int(pt[1, 1])] == k0[0, p1]))
+        assert bool(jnp.all(k_new[0, p0] == k0[0, p0]))
+
+    def test_cow_unshared_pages_write_in_place(self):
+        """A row whose pages are exclusively owned (refcount 1) gets no
+        copies from cow_ensure — only growth."""
+        spec = paging.PageSpec(page_size=4, num_pages=8, max_pages=4)
+        table, used, pool = _mk(1, spec)
+        table, used, pool, _ = paging.ensure(
+            spec, table, used, pool, jnp.array([6]), jnp.array([True])
+        )
+        before = table.copy()
+        table, used, pool, src, dst, ok = paging.cow_ensure(
+            spec, table, used, pool,
+            jnp.array([5]), jnp.array([9]), jnp.array([True]),
+            max_write_pages=2,
+        )
+        assert bool(ok[0]) and used.tolist() == [3]
+        assert bool(jnp.all(src == -1)) and bool(jnp.all(dst == -1))
+        assert bool(jnp.all(table[0, :2] == before[0, :2]))
+        _pool_invariant(spec, pool)
+
+    def _random_lifecycle(self, seed):
+        import numpy as np
+
+        rng = np.random.RandomState(seed)
+        spec = paging.PageSpec(page_size=4, num_pages=32, max_pages=6)
+        b = 3
+        table, used, pool = _mk(b, spec)
+        lens = np.zeros(b, int)
+        for _ in range(12):
+            op = rng.randint(3)
+            slot = rng.randint(b)
+            onehot = jnp.arange(b) == slot
+            if op == 0:  # grow
+                lens[slot] = min(lens[slot] + rng.randint(1, 8), 20)
+                table, used, pool, _ = paging.ensure(
+                    spec, table, used, pool,
+                    jnp.asarray(lens, jnp.int32), onehot,
+                )
+            elif op == 1 and lens[slot] > 0:  # fork / cow / adopt / release
+                k = rng.randint(2, 4)
+                pt, pu, pool = paging.fork(spec, table, used, pool, k, onehot)
+                pt = pt.reshape(b * k, spec.max_pages)
+                pu = pu.reshape(b * k)
+                wb = jnp.asarray(
+                    np.repeat(np.maximum(lens - 1, 0), k), jnp.int32
+                )
+                nl = jnp.asarray(np.repeat(lens + 4, k), jnp.int32)
+                mask = jnp.repeat(onehot, k)
+                pt, pu, pool, _, _, ok = paging.cow_ensure(
+                    spec, pt, pu, pool, wb, nl, mask, max_write_pages=3
+                )
+                winner = rng.randint(k)
+                if bool(jnp.all(jnp.where(mask, ok, True))):
+                    w_tab = pt.reshape(b, k, -1)[:, winner]
+                    w_used = pu.reshape(b, k)[:, winner]
+                    table = jnp.where(onehot[:, None], w_tab, table)
+                    used = jnp.where(onehot, w_used, used)
+                    keep = jnp.tile(jnp.arange(k), (b,)) == winner
+                    rel = mask & ~keep
+                else:  # could not fork: adopt path 0, drop the rest
+                    w_tab = pt.reshape(b, k, -1)[:, 0]
+                    w_used = pu.reshape(b, k)[:, 0]
+                    table = jnp.where(onehot[:, None], w_tab, table)
+                    used = jnp.where(onehot, w_used, used)
+                    rel = mask & (jnp.tile(jnp.arange(k), (b,)) != 0)
+                pt, pu, pool = paging.release(spec, pt, pu, pool, rel)
+            else:  # retire
+                lens[slot] = 0
+                table, used, pool = paging.release(
+                    spec, table, used, pool, onehot
+                )
+            _pool_invariant(spec, pool)
+        table, used, pool = paging.release(
+            spec, table, used, pool, jnp.ones(b, bool)
+        )
+        assert int(pool.free_count) == spec.num_pages
+        assert int(jnp.max(pool.ref)) == 0
+
+    def test_random_fork_write_release_never_leaks(self):
+        for seed in (0, 1, 2, 3):
+            self._random_lifecycle(seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_random_fork_write_release_never_leaks_property(self, seed):
+        self._random_lifecycle(seed)
+
+
 def _models(name="smollm-135m", seed=0):
     cfg = registry.smoke_config(name)
     if cfg.n_experts:
@@ -181,6 +370,97 @@ class TestPagedEngineIdentity:
             _, reqs = _serve(tgt, drf, tp, dp, cfg, PROMPTS[:2])
             outs[verifier] = [r.output for r in reqs]
         assert outs["token"] == outs["block"]
+
+
+class TestMultiPathEngine:
+    def test_temp0_multipath_equals_dense_greedy(self):
+        """At temperature 0 all K forked paths draft identically, so the
+        multi-path engine must commit EXACTLY the dense engine's greedy
+        tokens — any CoW/page-aliasing corruption of the KV would change
+        the logits and break this. page_size=8 forces multi-page CoW
+        windows."""
+        tgt, drf, tp, dp = _models(seed=3)
+        base = dict(
+            gamma=3, verifier="block", max_slots=2, max_len=96,
+            temperature=0.0, max_new_tokens=16,
+        )
+        _, ref = _serve(
+            tgt, drf, tp, dp, EngineConfig(paged=False, **base), PROMPTS
+        )
+        eng, got = _serve(
+            tgt, drf, tp, dp,
+            EngineConfig(paged=True, page_size=8, num_paths=2, **base),
+            PROMPTS,
+        )
+        assert [r.output for r in got] == [r.output for r in ref]
+        pool = eng.batch.pool
+        assert int(pool.free_count) == eng.runner.page_spec.num_pages
+        assert int(jnp.max(pool.ref)) == 0
+
+    def test_multipath_sampled_drains_pool_and_emits_budget(self):
+        """Sampled multi-path serving: every request completes its full
+        budget, refcounts return to zero at retirement, and the per-step
+        allocation telemetry is emitted."""
+        tgt, drf, tp, dp = _models(seed=3)
+        cfg = EngineConfig(
+            gamma=3, verifier="block", max_slots=2, max_len=96,
+            temperature=0.8, max_new_tokens=12, paged=True, page_size=16,
+            num_paths=3,
+        )
+        eng, got = _serve(tgt, drf, tp, dp, cfg, PROMPTS)
+        assert all(len(r.output) == 12 for r in got)
+        pool = eng.batch.pool
+        assert int(pool.free_count) == eng.runner.page_spec.num_pages
+        assert int(jnp.max(pool.ref)) == 0
+        trace = eng.last_stats["alloc_trace"]
+        assert len(trace) == eng.last_stats["iterations"]
+        assert all(
+            0 <= t["occupancy_pages"] <= t["worst_case_pages"]
+            for t in trace
+        )
+
+    def test_multipath_oversubscribed_preempts_and_stays_greedy_exact(self):
+        """Over-subscribed pool + multi-path: preemption fires
+        (recompute-on-resume) and the committed tokens still exactly
+        match the dense greedy run."""
+        tgt, drf, tp, dp = _models(seed=3)
+        base = dict(
+            gamma=3, verifier="block", max_slots=3, max_len=96,
+            temperature=0.0, max_new_tokens=56,
+        )
+        _, ref = _serve(
+            tgt, drf, tp, dp, EngineConfig(paged=False, **base), PROMPTS
+        )
+        cfg = EngineConfig(
+            paged=True, page_size=16, num_pages=16, num_paths=2, **base
+        )
+        spec = paging.spec_of(cfg)
+        full = paging.spec_of(
+            EngineConfig(paged=True, page_size=16, num_paths=2, **base)
+        )
+        assert spec.num_pages < full.num_pages  # oversubscribed
+        eng, got = _serve(tgt, drf, tp, dp, cfg, PROMPTS)
+        assert eng.last_stats["preemptions"] > 0
+        for r_ref, r_got in zip(ref, got):
+            assert r_got.output == r_ref.output
+        assert int(eng.batch.pool.free_count) == spec.num_pages
+
+    def test_num_paths_requires_fully_paged_caches(self):
+        tgt, drf, tp, dp = _models("mixtral-8x22b")  # sliding windows
+        cfg = EngineConfig(
+            gamma=3, max_slots=1, max_len=96, paged=True, num_paths=2,
+        )
+        with pytest.raises(ValueError, match="fully-paged"):
+            SpecEngine(tgt, drf, tp, dp, cfg)
+        with pytest.raises(ValueError, match="paged=True"):
+            tgt2, drf2, tp2, dp2 = _models()
+            SpecEngine(
+                tgt2, drf2, tp2, dp2,
+                EngineConfig(
+                    gamma=3, max_slots=1, max_len=96, paged=False,
+                    num_paths=2,
+                ),
+            )
 
 
 def _greedy_reference(model, params, prompt, n_new):
