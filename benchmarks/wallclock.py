@@ -1,11 +1,14 @@
 """Wall-clock speedup (paper Table 1 right half): byte-level char-LM pair
 trained in-repo, served on CPU with the real engine. Reports tokens/s for
 autoregressive baseline vs SpecDec with token / block / greedy
-multi-path (num_paths=2, CoW-forked page tables) verification, and
-writes the machine-readable ``results/BENCH_serving.json`` artifact the
-perf trajectory tracks across PRs — including the per-step allocation
-telemetry (pool occupancy + preemption counts per decode step) the
-over-subscription policies are tuned from.
+multi-path (num_paths=2, CoW-forked page tables) verification, plus a
+repeated-prefix workload measuring the cross-request prefix cache (hit
+rate + prefill-token savings), and writes the machine-readable
+``results/BENCH_serving.json`` artifact the perf trajectory tracks
+across PRs — including the per-step allocation telemetry (pool
+occupancy + preemption counts per decode step) the over-subscription
+policies are tuned from. ``run_prefix_smoke`` is the CI entry point
+that refreshes only the prefix-cache section.
 
 Checkpoints are cached under results/charlm/ so repeated benchmark runs
 skip training.
@@ -104,6 +107,7 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
             "paged": EngineConfig.paged,
             "page_size": EngineConfig.page_size,
             "num_pages": EngineConfig.num_pages,
+            "prefix_cache": EngineConfig.prefix_cache,
         },
         "baseline_ar": {"tokens_per_s": base_tps},
         "verifiers": {},
@@ -171,6 +175,13 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
                 be / (1.0 + gamma * drf.param_count() / tgt.param_count()), 2
             ),
         })
+    # Repeated-prefix workload: the chat-system-prompt traffic pattern
+    # the cross-request prefix cache exists for.
+    bench["prefix_cache"], pc_row = _prefix_cache_bench(
+        tgt, drf, tp, dp, gamma=gamma, temperature=temperature,
+        max_new=max_new // 2,
+    )
+    rows.append(pc_row)
     if results["token"][0] > 0:
         bench["block_over_token"] = {
             "wallclock_pct": (
@@ -194,6 +205,99 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
     return rows
 
 
+def _prefix_cache_bench(
+    tgt, drf, tp, dp, gamma: int, temperature: float, max_new: int,
+    n_prompts: int = 8, shared_tokens: int = 32,
+):
+    """Serve a repeated-prefix workload (every prompt opens with the same
+    ``shared_tokens``-token system preamble, served twice) with the
+    prefix cache off and on. Reports the hit rate and the prefill-token
+    savings — the quantities ``results/BENCH_serving.json`` tracks for
+    the cache across PRs."""
+    tok = ByteTokenizer()
+    preamble = tok.encode(
+        "system: you are a concise byte-level assistant. answer briefly. "
+    )[:shared_tokens]
+    assert len(preamble) == shared_tokens
+    prompts = [
+        preamble + tok.encode(p)[:12]
+        for p in generate_prompts(3, n_prompts)
+    ]
+    out = {}
+    for pc in (False, True):
+        cfg = EngineConfig(
+            gamma=gamma, verifier="block", max_slots=2, max_len=256,
+            temperature=temperature, max_new_tokens=max_new,
+            page_size=16, prefix_cache=pc,
+        )
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        eng.submit(prompts[0], max_new_tokens=2)  # warm compile
+        eng.run()
+        eng.reset(seed=0)
+        prefill = tokens = wall = hits = misses = 0
+        for _round in range(2):  # the second pass re-serves every prompt
+            for p in prompts:
+                eng.submit(p)
+            res = eng.run()
+            prefill += eng.last_stats["prefill_tokens"]
+            tokens += sum(len(r.output) for r in res.values())
+            wall += eng.last_stats["wall_s"]
+            pcs = eng.last_stats.get("prefix_cache")
+            if pcs is not None:
+                hits += pcs["hits"]
+                misses += pcs["misses"]
+        out[pc] = dict(
+            prefill=prefill, tokens=tokens, wall=wall,
+            hits=hits, misses=misses,
+        )
+    hit_rate = out[True]["hits"] / max(out[True]["hits"]
+                                       + out[True]["misses"], 1)
+    saved_pct = (1 - out[True]["prefill"] / out[False]["prefill"]) * 100
+    bench = {
+        "workload": {
+            "n_prompts": n_prompts, "rounds": 2,
+            "shared_prefix_tokens": shared_tokens,
+            "max_new_tokens": max_new,
+        },
+        "prefix_cache_hit_rate": hit_rate,
+        "prefill_tokens": out[True]["prefill"],
+        "prefill_tokens_uncached": out[False]["prefill"],
+        "prefill_tokens_saved_pct": saved_pct,
+        "tokens_per_s": out[True]["tokens"] / out[True]["wall"],
+        "tokens_per_s_uncached": out[False]["tokens"] / out[False]["wall"],
+    }
+    row = {
+        "name": "wallclock/prefix_cache",
+        "hit_rate": round(hit_rate, 3),
+        "prefill_saved_pct": round(saved_pct, 1),
+        "tokens_per_s": round(bench["tokens_per_s"], 1),
+    }
+    return bench, row
+
+
+def run_prefix_smoke(train_steps: int = 120):
+    """CI smoke: train (or load) the char-LM pair, run ONLY the
+    repeated-prefix workload, and refresh the ``prefix_cache`` section
+    of ``results/BENCH_serving.json`` in place (other sections are
+    preserved so the smoke job never clobbers the full bench rows)."""
+    tgt, drf, tp, dp = _get_models(train_steps)
+    bench_pc, row = _prefix_cache_bench(
+        tgt, drf, tp, dp, gamma=4, temperature=0.8, max_new=40,
+    )
+    # Regression-gate BEFORE touching the tracked artifact, so a failed
+    # smoke never clobbers the last-good numbers.
+    assert bench_pc["prefix_cache_hit_rate"] > 0
+    assert bench_pc["prefill_tokens"] < bench_pc["prefill_tokens_uncached"]
+    path = "results/BENCH_serving.json"
+    bench = {"bench": "serving"}
+    if os.path.exists(path):
+        with open(path) as f:
+            bench = json.load(f)
+    bench["prefix_cache"] = bench_pc
+    _write_bench(bench, path)
+    return row
+
+
 def _summarize_alloc(steps: list[dict], preemptions: int) -> dict:
     """Compress the engine's per-step allocation trace into the artifact:
     occupancy statistics, the worst-case budget headroom, preemption
@@ -203,6 +307,9 @@ def _summarize_alloc(steps: list[dict], preemptions: int) -> dict:
     occ = [s["occupancy_pages"] for s in steps]
     worst = [s["worst_case_pages"] for s in steps]
     stride = max(len(steps) // 200, 1)  # keep the artifact bounded
+    sampled = steps[::stride]
+    if sampled[-1] is not steps[-1]:
+        sampled.append(steps[-1])  # anchor the series' freshest sample
     return {
         "steps": len(steps),
         "num_pages": steps[-1]["num_pages"],
@@ -213,7 +320,7 @@ def _summarize_alloc(steps: list[dict], preemptions: int) -> dict:
         "per_step": [
             {k: s[k] for k in
              ("step", "occupancy_pages", "active_slots", "preemptions")}
-            for s in steps[::stride]
+            for s in sampled
         ],
     }
 

@@ -296,9 +296,10 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
             ),
             free_count=jax.ShapeDtypeStruct((), jnp.int32),
             ref=jax.ShapeDtypeStruct((page_spec.num_pages,), jnp.int32),
+            cached=jax.ShapeDtypeStruct((page_spec.num_pages,), jnp.bool_),
         )
         pool_shard = paging.PagePool(
-            free_stack=rep, free_count=rep, ref=rep
+            free_stack=rep, free_count=rep, ref=rep, cached=rep
         )
     batch_specs = BatchState(
         seq_buf=jax.ShapeDtypeStruct((b, max_len), jnp.int32),

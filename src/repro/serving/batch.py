@@ -80,22 +80,29 @@ def init_batch(
 
 
 def admit_slot(
-    state: BatchState, slot: int, prompt_ids: list[int], max_new: int
+    state: BatchState, slot: int, prompt_ids: list[int], max_new: int,
+    prefix_len: int = 0,
 ) -> BatchState:
-    """Stage a request into a free slot. The models have consumed nothing
-    yet (``t_pref = 0``); the runner's chunked prefill advances both
-    through ``plen - 1`` tokens, after which the slot turns ``ready``."""
+    """Stage a request into a free slot. With ``prefix_len = 0`` the
+    models have consumed nothing yet (``t_pref = 0``) and the runner's
+    chunked prefill advances both through ``plen - 1`` tokens, after
+    which the slot turns ``ready``. A prefix-cache hit passes the
+    claimed token count as ``prefix_len`` (page-aligned, both models'
+    K/V for ``[0, prefix_len)`` already live in the claimed pool pages):
+    prefill then starts at the first uncached position — a full-prefix
+    hit (``prefix_len == plen - 1``) is ready immediately."""
     plen = len(prompt_ids)
     assert 1 <= plen < state.max_len, (plen, state.max_len)
+    assert 0 <= prefix_len <= plen - 1, (prefix_len, plen)
     row = jnp.zeros((state.max_len,), jnp.int32)
     row = row.at[:plen].set(jnp.asarray(prompt_ids, jnp.int32))
     return state._replace(
         seq_buf=state.seq_buf.at[slot].set(row),
         lens=state.lens.at[slot].set(plen),
         d_lens=state.d_lens.at[slot].set(plen - 1),
-        t_pref=state.t_pref.at[slot].set(0),
+        t_pref=state.t_pref.at[slot].set(prefix_len),
         active=state.active.at[slot].set(True),
-        ready=state.ready.at[slot].set(plen <= 1),
+        ready=state.ready.at[slot].set(prefix_len >= plen - 1),
         out_start=state.out_start.at[slot].set(plen),
         max_new=state.max_new.at[slot].set(max_new),
     )

@@ -50,6 +50,19 @@ PREFILL_CHUNK = 16
 ALLOC_TRACE_CAP = 4096
 
 
+def _decimate_trace(trace: list) -> list:
+    """Halve the allocation trace for the stride-doubling coarsening,
+    anchoring both ends: the first sample (the run's starting occupancy)
+    and the last (the freshest) always survive. The old ``del
+    trace[::2]`` dropped the even indices — including sample 0 — so long
+    runs lost the trace's start and the coarsened series no longer began
+    where the run did."""
+    kept = trace[0::2]
+    if len(trace) > 1 and (len(trace) - 1) % 2:
+        kept.append(trace[-1])
+    return kept
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     gamma: int = 8
@@ -79,6 +92,16 @@ class EngineConfig:
     # global-attention layers). ``num_paths=1`` is the single-path
     # engine, bit-for-bit.
     num_paths: int = 1
+    # Cross-request prefix caching (repro.serving.paging.PrefixCache):
+    # a retiring/preempted request's committed full pages park in the
+    # pool's ``cached`` state, indexed by their token spans; a newly
+    # admitted request claims the longest matching page-aligned prefix
+    # of its prompt (refcount bump, no recompute) and chunked prefill
+    # starts at the first uncached position. Cached pages are evicted
+    # LRU only under allocation pressure. Requires paged=True and
+    # fully-paged caches; hits cannot affect sampled distributions —
+    # claimed pages hold bitwise the K/V the prefill would recompute.
+    prefix_cache: bool = False
 
 
 class SpecEngine:
@@ -116,6 +139,11 @@ class SpecEngine:
             cfg.max_slots, cfg.max_new_tokens, cfg.prefill_chunk,
             budget=budget,
         )
+        self.prefix_cache = (
+            paging.PrefixCache(spec)
+            if cfg.prefix_cache and spec is not None else None
+        )
+        self._claims: dict[int, list] = {}  # slot -> claimed trie nodes
         self.key = jax.random.key(seed)
         self.last_stats: dict = {}
 
@@ -137,12 +165,38 @@ class SpecEngine:
         """Stage an admitted request: zero the slot's cache rows (chunked
         prefill resumes SSM recurrences from cached state) and write the
         prompt + budgets into the batch pytree. A preempted request
-        resumes with ``prompt + output`` and its remaining budget."""
+        resumes with ``prompt + output`` and its remaining budget.
+
+        With the prefix cache on, the longest cached page-aligned prefix
+        of the (resume) prompt is claimed instead of re-prefilled: the
+        claimed pages' refcounts bump, the slot's table starts with
+        them, and prefill begins at the first uncached position."""
         self.t_cache = batch_mod.clear_slot_cache(self.t_cache, slot)
         self.d_cache = batch_mod.clear_slot_cache(self.d_cache, slot)
+        prompt = req.serve_prompt()
+        nodes = []
+        if self.prefix_cache is not None:
+            nodes = self.prefix_cache.lookup(prompt)
+            if nodes:
+                self.prefix_cache.claim(nodes)
+                self._claims[slot] = nodes
+            else:
+                self.prefix_cache.misses += 1
+        prefix_len = len(nodes) * self.cfg.page_size
         self.batch = batch_mod.admit_slot(
-            self.batch, slot, req.serve_prompt(), req.serve_max_new()
+            self.batch, slot, prompt, req.serve_max_new(),
+            prefix_len=prefix_len,
         )
+        if nodes:
+            table, used, pool = paging.host_claim_prefix(
+                self.runner.page_spec, self.batch.page_table,
+                self.batch.pages_used, self.batch.pool, slot,
+                [n.page for n in nodes],
+            )
+            self.batch = self.batch._replace(
+                page_table=table, pages_used=used, pool=pool
+            )
+            self.scheduler.note_prefix_claim(slot, prefix_len)
 
     # ------------------------------------------------------------------
     # main loop
@@ -152,14 +206,21 @@ class SpecEngine:
         """Serve until queue + slots drain. Returns rid -> RequestState."""
         sched = self.scheduler
         stats = {
-            "iterations": 0, "prefill_steps": 0, "tokens": 0,
-            "preemptions": 0, "wall_s": 0.0,
+            "iterations": 0, "prefill_steps": 0, "prefill_tokens": 0,
+            "tokens": 0, "preemptions": 0, "wall_s": 0.0,
             # Per-step allocation telemetry (paged engines): host-mirror
             # pool occupancy and cumulative preemptions at each decode
             # dispatch, consumed by benchmarks/wallclock.py into
-            # results/BENCH_serving.json.
+            # results/BENCH_serving.json. ``alloc_trace_stride`` is the
+            # effective sampling stride after decimation (see
+            # ``_decimate_trace``).
             "alloc_trace": [],
+            "alloc_trace_stride": 1,
         }
+        pc0 = (
+            self.prefix_cache.stats()
+            if self.prefix_cache is not None else None
+        )
         t0 = time.perf_counter()
         trace_stride = 1
         # (snapshot of live-at-dispatch slots, in-flight StepOutputs)
@@ -178,11 +239,30 @@ class SpecEngine:
                     victim = sched.pick_victim()
                     if victim is None:
                         break
+                    req = sched.slot_req[victim]
+                    left = sched.prefill_left(victim)
                     sched.preempt(victim)
-                    self.batch = self.runner.release_slot(self.batch, victim)
+                    # Cache-aware release: the victim's committed full
+                    # pages park in the prefix index, so its resume
+                    # usually re-claims them instead of re-prefilling.
+                    self.batch = self._release_and_cache(victim, req, left)
                     stats["preemptions"] += 1
             for slot, req in sched.admit():
                 self._admit(slot, req)
+            # Cached-page pressure: evict LRU reclaimable pages until the
+            # free stack provably covers the next dispatch's worst case
+            # (claims/admissions above may have shifted both sides).
+            if self.prefix_cache is not None:
+                deficit = sched.budget.evict_deficit(
+                    self.prefix_cache.reclaimable_pages()
+                )
+                if deficit > 0:
+                    self.batch = self.batch._replace(
+                        pool=paging.host_evict(
+                            self.runner.page_spec, self.batch.pool,
+                            self.prefix_cache.evict_lru(deficit),
+                        )
+                    )
             if sched.prefill_pending():
                 self.t_cache, self.d_cache, self.batch = (
                     self.runner.prefill_step(
@@ -190,7 +270,7 @@ class SpecEngine:
                         self.t_cache, self.d_cache, self.batch,
                     )
                 )
-                sched.note_prefill_dispatch()
+                stats["prefill_tokens"] += sched.note_prefill_dispatch()
                 stats["prefill_steps"] += 1
             outs = None
             snapshot = sched.ready_slots()
@@ -206,8 +286,11 @@ class SpecEngine:
                 budget = sched.budget
                 if budget is not None and stats["iterations"] % trace_stride == 0:
                     if len(stats["alloc_trace"]) >= ALLOC_TRACE_CAP:
-                        del stats["alloc_trace"][::2]
+                        stats["alloc_trace"] = _decimate_trace(
+                            stats["alloc_trace"]
+                        )
                         trace_stride *= 2
+                        stats["alloc_trace_stride"] = trace_stride
                     stats["alloc_trace"].append({
                         "step": stats["iterations"],
                         "occupancy_pages": budget.occupancy_pages(),
@@ -215,6 +298,10 @@ class SpecEngine:
                         "num_pages": budget.spec.num_pages,
                         "active_slots": len(snapshot),
                         "preemptions": stats["preemptions"],
+                        "cached_pages": (
+                            self.prefix_cache.cached_pages
+                            if self.prefix_cache is not None else 0
+                        ),
                     })
             # Materialize the PREVIOUS step's outputs while the device runs
             # the one just dispatched (double buffering).
@@ -228,6 +315,15 @@ class SpecEngine:
             ):
                 break
         stats["wall_s"] = time.perf_counter() - t0
+        if pc0 is not None:
+            pc = self.prefix_cache.stats()
+            # Counters are per-run deltas (the index persists across
+            # run() calls); *_pages occupancy values are absolute
+            # end-of-run gauges.
+            counters = ("hits", "misses", "claimed_tokens", "evicted_pages")
+            stats["prefix_cache"] = {
+                k: pc[k] - pc0[k] if k in counters else pc[k] for k in pc
+            }
         self.last_stats = stats
         return dict(sched.done)
 
@@ -265,7 +361,39 @@ class SpecEngine:
                 # cut off by the max_len guard, which earlier versions
                 # silently dropped from throughput accounting.
                 stats["tokens"] += len(req.output)
-                self.batch = self.runner.release_slot(self.batch, slot)
+                self.batch = self._release_and_cache(slot, req, 0)
+
+    def _release_and_cache(
+        self, slot: int, req: RequestState, prefill_left: int
+    ):
+        """Release a retired/preempted slot's pages. With the prefix
+        cache on, its committed **full** pages — those entirely inside
+        ``[0, consumed)``, where ``consumed`` counts tokens whose K/V
+        both models have materialized (the last committed token is only
+        consumed by the *next* chunk, and a prefilling victim stops at
+        its mirror's frontier) — are registered in the radix index and
+        parked in the pool's ``cached`` state instead of freed. Pages an
+        identical-content index entry already covers release normally
+        (no double-indexing); the slot's own claims are dropped first."""
+        cache_cols = None
+        if self.prefix_cache is not None:
+            self.prefix_cache.release_claims(self._claims.pop(slot, []))
+            committed = req.serve_prompt()
+            consumed = len(committed) - 1 - prefill_left
+            n_cache = max(consumed, 0) // self.cfg.page_size
+            if n_cache > 0:
+                # One small device->host sync per retirement: the physical
+                # ids backing the slot's committed prefix.
+                ids = np.asarray(
+                    self.batch.page_table[slot, :n_cache]
+                ).tolist()
+                assert all(p >= 0 for p in ids), (slot, ids)
+                adopted = self.prefix_cache.insert(committed, ids)
+                cache_cols = np.zeros(
+                    (self.runner.page_spec.max_pages,), bool
+                )
+                cache_cols[:n_cache] = adopted
+        return self.runner.release_slot(self.batch, slot, cache_cols)
 
     def _finish_reason(self, req: RequestState) -> str:
         if (

@@ -42,14 +42,33 @@ Pieces:
   ``num_paths`` path tables' CoW copies and speculative pages. As long
   as ``sum(worst) <= num_pages`` before every dispatch, the device-side
   allocators can never fail and slots never stall.
+* :class:`PrefixCache` + :func:`host_claim_prefix` / :func:`host_evict`
+  — **cross-request prefix caching**. Pages released with a cache mask
+  enter a ``cached`` state (refcount 0 but *off* the free stack, content
+  preserved) and are registered in a host-side radix index keyed by
+  page-aligned committed token spans. When a new request is admitted,
+  the longest matching page-aligned prefix of its prompt is *claimed*
+  (refcount bump, table installed) instead of re-prefilled, and chunked
+  prefill starts at the first uncached position. Cached pages are
+  evicted LRU — removed from the index and pushed back onto the free
+  stack — only when the budget says the next dispatch could otherwise
+  run the free stack dry (:meth:`PageBudget.evict_deficit`).
+
+Page lifecycle (each physical page):
+
+    free ──ensure──▶ referenced ──release(cache)──▶ cached ──host_evict──▶ free
+    (on stack,        (ref ≥ 1)      ▲    (ref 0, off stack,   (back on stack)
+     ref 0)                          └────claim── content kept)
 
 The allocator is exercised by both models' caches with a *single* page
 table: target and drafter pools are indexed by the same physical page
-ids (their per-page byte sizes differ; the id space is shared).
+ids (their per-page byte sizes differ; the id space is shared) — so a
+claimed prefix restores BOTH models' committed K/V at once.
 """
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import NamedTuple
 
@@ -60,11 +79,17 @@ import jax.numpy as jnp
 class PagePool(NamedTuple):
     """Device free-list: ``free_stack[:free_count]`` are free page ids;
     ``ref[p]`` counts the table entries (across slots and forked path
-    tables) referencing physical page ``p`` — 0 for free pages."""
+    tables) referencing physical page ``p`` — 0 for free pages.
+    ``cached[p]`` marks pages held by the cross-request prefix index:
+    a cached page whose refcount reaches 0 stays OFF the free stack
+    (its K/V content must survive for future claims) until the host
+    evicts it (:func:`host_evict`). The stack and the cached set are
+    always disjoint."""
 
     free_stack: jax.Array  # (num_pages,) int32
     free_count: jax.Array  # () int32
     ref: jax.Array         # (num_pages,) int32
+    cached: jax.Array      # (num_pages,) bool
 
 
 @dataclass(frozen=True)
@@ -125,6 +150,7 @@ def init_pool(spec: PageSpec) -> PagePool:
         free_stack=jnp.arange(spec.num_pages, dtype=jnp.int32),
         free_count=jnp.asarray(spec.num_pages, jnp.int32),
         ref=jnp.zeros((spec.num_pages,), jnp.int32),
+        cached=jnp.zeros((spec.num_pages,), bool),
     )
 
 
@@ -175,7 +201,9 @@ def ensure(
     ref = pool.ref.at[jnp.where(take, ids, spec.num_pages)].set(
         1, mode="drop"
     )
-    pool = PagePool(pool.free_stack, pool.free_count - jnp.sum(granted), ref)
+    pool = PagePool(
+        pool.free_stack, pool.free_count - jnp.sum(granted), ref, pool.cached
+    )
     return page_table, pages_used, pool, ok
 
 
@@ -185,17 +213,28 @@ def release(
     pages_used: jax.Array,  # (N,)
     pool: PagePool,
     mask: jax.Array,  # (N,) bool — rows to free
+    cache_cols: jax.Array | None = None,  # (N, max_pages) bool — to cache
 ):
     """Drop every masked row's page claims and clear its table.
 
     Refcount-aware: each mapped entry decrements its physical page's
     refcount (rows may alias each other's pages — forked path tables;
     duplicates decrement once each) and only pages reaching refcount 0
-    are pushed back onto the free stack (in page-id order). Returns
+    are pushed back onto the free stack (in page-id order). Pages that
+    are ``cached`` (held by the prefix index) are NEVER pushed — at
+    refcount 0 they park off-stack, content intact, until the host
+    claims them again or evicts them. ``cache_cols`` marks released
+    entries that should *enter* the cached state (the host registered
+    them in the prefix index in the same breath). Returns
     ``(page_table, pages_used, pool)``."""
     jj = jnp.arange(spec.max_pages)[None]
     give = mask[:, None] & (jj < pages_used[:, None]) & (page_table >= 0)
     entries = jnp.where(give, page_table, spec.num_pages)  # OOB -> drop
+    cached = pool.cached
+    if cache_cols is not None:
+        cached = cached.at[
+            jnp.where(give & cache_cols, page_table, spec.num_pages)
+        ].set(True, mode="drop")
     ref = pool.ref.at[entries].add(
         -give.astype(jnp.int32), mode="drop"
     )
@@ -203,8 +242,8 @@ def release(
         jnp.zeros((spec.num_pages,), jnp.int32)
         .at[entries].add(give.astype(jnp.int32), mode="drop")
     ) > 0
-    freed = touched & (ref <= 0)
-    ref = jnp.where(freed, 0, ref)
+    freed = touched & (ref <= 0) & ~cached
+    ref = jnp.where(touched & (ref <= 0), 0, ref)
     idx = jnp.cumsum(freed) - freed
     dst = jnp.where(freed, pool.free_count + idx, spec.num_pages)
     stack = pool.free_stack.at[dst].set(
@@ -212,7 +251,7 @@ def release(
     )
     page_table = jnp.where(mask[:, None], -1, page_table)
     pages_used = jnp.where(mask, 0, pages_used)
-    pool = PagePool(stack, pool.free_count + jnp.sum(freed), ref)
+    pool = PagePool(stack, pool.free_count + jnp.sum(freed), ref, cached)
     return page_table, pages_used, pool
 
 
@@ -249,7 +288,9 @@ def fork(
     ref = pool.ref.at[entries].add(
         jnp.where(mapped, num_paths - 1, 0), mode="drop"
     )
-    return path_tables, path_used, PagePool(pool.free_stack, pool.free_count, ref)
+    return path_tables, path_used, PagePool(
+        pool.free_stack, pool.free_count, ref, pool.cached
+    )
 
 
 def cow_ensure(
@@ -335,18 +376,228 @@ def cow_ensure(
         .at[jnp.where(cow_take, phys_w, p_sent)]
         .add(1, mode="drop")
     ) > 0
-    freed = touched & (ref <= 0)
-    ref = jnp.where(freed, 0, ref)
+    freed = touched & (ref <= 0) & ~pool.cached
+    ref = jnp.where(touched & (ref <= 0), 0, ref)
     base = pool.free_count - jnp.sum(granted_tot)
     idx = jnp.cumsum(freed) - freed
     stack = pool.free_stack.at[
         jnp.where(freed, base + idx, p_sent)
     ].set(jnp.arange(spec.num_pages), mode="drop")
-    pool = PagePool(stack, base + jnp.sum(freed), ref)
+    pool = PagePool(stack, base + jnp.sum(freed), ref, pool.cached)
 
     copy_src = jnp.where(cow_take, phys_w, -1)
     copy_dst = jnp.where(cow_take, cow_new, -1)
     return page_table, pages_used, pool, copy_src, copy_dst, ok
+
+
+# ---------------------------------------------------------------------------
+# Cross-request prefix caching
+# ---------------------------------------------------------------------------
+
+
+def host_claim_prefix(
+    spec: PageSpec,
+    page_table: jax.Array,  # (B, max_pages)
+    pages_used: jax.Array,  # (B,)
+    pool: PagePool,
+    slot: int,
+    page_ids: list[int],
+):
+    """Claim (pin) a cached page run as slot ``slot``'s table prefix:
+    install the physical ids, bump each page's refcount by one. Runs
+    eagerly at admission (host-driven, like ``admit_slot``) — the pages
+    are off the free stack (cached state), so the free count is
+    untouched. The caller guarantees the ids come from the prefix index
+    (distinct, cached, never mid-eviction)."""
+    n = len(page_ids)
+    ids = jnp.asarray(page_ids, jnp.int32)
+    page_table = page_table.at[slot, :n].set(ids)
+    pages_used = pages_used.at[slot].set(n)
+    ref = pool.ref.at[ids].add(1)
+    return page_table, pages_used, PagePool(
+        pool.free_stack, pool.free_count, ref, pool.cached
+    )
+
+
+def host_evict(spec: PageSpec, pool: PagePool, page_ids: list[int]) -> PagePool:
+    """Evict cached pages: un-mark them and push them back onto the free
+    stack. The caller (the engine, driven by
+    :meth:`PageBudget.evict_deficit` over the prefix index's LRU order)
+    guarantees every id is cached with refcount 0 — no live claimant."""
+    if not page_ids:
+        return pool
+    n = len(page_ids)
+    ids = jnp.asarray(page_ids, jnp.int32)
+    cached = pool.cached.at[ids].set(False)
+    stack = pool.free_stack.at[pool.free_count + jnp.arange(n)].set(ids)
+    return PagePool(stack, pool.free_count + n, pool.ref, cached)
+
+
+@dataclass
+class _PrefixNode:
+    """One cached page in the radix index: ``key`` is the page's
+    ``page_size``-token span, the path from the root is the full
+    page-aligned token prefix it represents."""
+
+    key: tuple[int, ...]
+    page: int
+    parent: "_PrefixNode | None"
+    children: dict = field(default_factory=dict)
+    claims: int = 0      # live slots currently claiming this node's path
+    last_use: int = 0    # logical LRU tick
+
+
+class PrefixCache:
+    """Host-side radix index over **page-aligned committed token spans**.
+
+    Keying rule: a node at depth ``i`` is keyed by tokens
+    ``[i*page_size, (i+1)*page_size)``; a physical page is indexed iff
+    every position in it holds *committed* K/V (the engine only inserts
+    pages fully inside ``[0, committed_len - 1)`` — position ``len-1``
+    is rewritten by the next verify chunk, so its page is never shared).
+    Claims are page-aligned and capped at ``(prompt_len - 1) //
+    page_size`` pages, which guarantees a claiming slot only ever
+    *writes* at positions ``>= prompt_len - 1`` — strictly past its
+    claimed prefix — so claimed pages are read-only by construction and
+    need no copy-on-write.
+
+    The host mirror is exact: claims/releases/evictions are all
+    host-initiated, and decode-side refcount transients (multi-path
+    fork/adopt) are net-zero per step, so ``claims == device ref``
+    contribution of live slots at every dispatch boundary. Claiming a
+    node claims its whole path, so ``claims`` is monotone up the tree —
+    a claim-free node never has a claimed descendant, which makes the
+    claim-free set downward-closed and leaf-first LRU eviction always
+    able to reclaim every claim-free page."""
+
+    def __init__(self, spec: PageSpec):
+        self.spec = spec
+        self.children: dict[tuple, _PrefixNode] = {}  # root level
+        self.by_page: dict[int, _PrefixNode] = {}
+        self._tick = 0
+        # cumulative telemetry (engine snapshots into per-run stats)
+        self.hits = 0
+        self.misses = 0
+        self.claimed_tokens = 0
+        self.evicted_pages = 0
+
+    # -- lookup / claim ----------------------------------------------------
+
+    def lookup(self, tokens: list[int]) -> list[_PrefixNode]:
+        """Longest cached page-aligned prefix of ``tokens``, capped so a
+        claiming slot still prefills (and first writes) at or past
+        position ``len(tokens) - 1``."""
+        ps = self.spec.page_size
+        cap = max(len(tokens) - 1, 0) // ps
+        path: list[_PrefixNode] = []
+        children = self.children
+        for i in range(cap):
+            node = children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if node is None:
+                break
+            path.append(node)
+            children = node.children
+        return path
+
+    def claim(self, path: list[_PrefixNode]) -> None:
+        """Pin a looked-up path for a newly admitted slot (the caller
+        applies :func:`host_claim_prefix` for the device side)."""
+        self._tick += 1
+        for node in path:
+            node.claims += 1
+            node.last_use = self._tick
+        self.hits += 1
+        self.claimed_tokens += len(path) * self.spec.page_size
+
+    def release_claims(self, path: list[_PrefixNode]) -> None:
+        for node in path:
+            node.claims -= 1
+            assert node.claims >= 0, "claim/release imbalance"
+
+    # -- insertion (at retire / preempt) -----------------------------------
+
+    def insert(self, tokens: list[int], page_ids: list[int]) -> list[bool]:
+        """Register a retiring slot's committed full pages. Returns one
+        bool per page: True — the slot's physical page backs (or already
+        backed) the index node, so it must move to the ``cached`` state;
+        False — a different physical page with identical content got
+        there first, and the slot's duplicate releases normally."""
+        ps = self.spec.page_size
+        adopted: list[bool] = []
+        children, parent = self.children, None
+        self._tick += 1
+        for i, pid in enumerate(page_ids):
+            pid = int(pid)
+            key = tuple(tokens[i * ps:(i + 1) * ps])
+            node = children.get(key)
+            if node is None:
+                node = _PrefixNode(
+                    key=key, page=pid, parent=parent, last_use=self._tick
+                )
+                children[key] = node
+                self.by_page[pid] = node
+                adopted.append(True)
+            else:
+                node.last_use = self._tick
+                adopted.append(node.page == pid)
+            children, parent = node.children, node
+        return adopted
+
+    # -- eviction ----------------------------------------------------------
+
+    def reclaimable_pages(self) -> int:
+        """Cached pages with no live claimant — exactly the pages whose
+        device refcount is 0 and that :meth:`evict_lru` may reclaim."""
+        return sum(1 for n in self.by_page.values() if n.claims == 0)
+
+    def evict_lru(self, n: int) -> list[int]:
+        """Pick ``n`` pages to evict, least-recently-used childless nodes
+        first (an interior page must outlive its descendants or they
+        become unreachable and leak). The caller pushes the returned ids
+        back onto the device free stack (:func:`host_evict`).
+
+        Heap over the current claim-free leaves; evicting a leaf can
+        only newly expose its own parent, so one push per eviction keeps
+        the candidate set exact without rescanning the index."""
+        heap = [
+            (nd.last_use, nd.page)
+            for nd in self.by_page.values()
+            if nd.claims == 0 and not nd.children
+        ]
+        heapq.heapify(heap)
+        out: list[int] = []
+        while heap and len(out) < n:
+            _, page = heapq.heappop(heap)
+            nd = self.by_page[page]
+            siblings = nd.parent.children if nd.parent else self.children
+            del siblings[nd.key]
+            del self.by_page[page]
+            out.append(page)
+            parent = nd.parent
+            if (
+                parent is not None
+                and parent.claims == 0
+                and not parent.children
+            ):
+                heapq.heappush(heap, (parent.last_use, parent.page))
+        self.evicted_pages += len(out)
+        return out
+
+    # -- telemetry ---------------------------------------------------------
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self.by_page)
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "claimed_tokens": self.claimed_tokens,
+            "cached_pages": self.cached_pages,
+            "reclaimable_pages": self.reclaimable_pages(),
+            "evicted_pages": self.evicted_pages,
+        }
 
 
 @dataclass
@@ -389,6 +640,9 @@ class PageBudget:
         return sum(self.spec.pages_for(n) for n in self.slot_len.values())
 
     def can_admit(self, prompt_len: int) -> bool:
+        """Cached pages don't block admission: reclaimable ones are
+        evicted on demand (:meth:`evict_deficit`) and claimed ones are
+        already inside their claimants' worst-case terms."""
         return (
             self.used_worst() + self.worst_pages(prompt_len)
             <= self.spec.num_pages
@@ -396,6 +650,21 @@ class PageBudget:
 
     def needs_preemption(self) -> bool:
         return self.used_worst() > self.spec.num_pages
+
+    def evict_deficit(self, reclaimable_cached: int) -> int:
+        """Cached pages the engine must evict before the next dispatch so
+        the device allocators provably cannot run the free stack dry.
+
+        Pages referenced by live slots never exceed ``used_worst()`` and
+        the step's new allocations are covered by the same bound, so the
+        free stack suffices iff claim-free cached pages fit the
+        remainder: ``reclaimable <= num_pages - used_worst()``. (Claimed
+        cached pages are referenced, hence inside ``used_worst()``.)
+        Always satisfiable: the preemption/admission invariants keep
+        ``used_worst() <= num_pages``."""
+        return max(
+            0, reclaimable_cached - (self.spec.num_pages - self.used_worst())
+        )
 
     def note_admit(self, slot: int, prompt_len: int) -> None:
         self.slot_len[slot] = prompt_len

@@ -487,11 +487,15 @@ def decode_body_multipath(
     return t_cache, d_cache, new_batch, outs
 
 
-def _assert_all_paged(model: Model, cfg, chunk_slack: int, role: str):
+def _assert_all_paged(
+    model: Model, cfg, chunk_slack: int, role: str,
+    feature: str = "num_paths",
+):
     """Multi-path serving runs K paths as flattened lanes over shared
-    page pools — every cache entry must be a :class:`PagedKV` (no dense
-    rings, SSM states or cross-attention caches, whose per-slot batch
-    axes cannot follow the fork)."""
+    page pools, and prefix-cache claims restore pooled K/V only — either
+    way every cache entry must be a :class:`PagedKV` (no dense rings,
+    SSM states or cross-attention caches, whose per-slot batch axes
+    cannot follow a fork or survive a claim)."""
     cache = jax.eval_shape(
         lambda: model.init_cache(
             1, cfg.max_len, chunk_slack=chunk_slack, page_pool=(1, 1)
@@ -505,11 +509,15 @@ def _assert_all_paged(model: Model, cfg, chunk_slack: int, role: str):
         if not isinstance(e, PagedKV)
     ]
     if bad:
+        want = (
+            f"num_paths={cfg.num_paths}" if feature == "num_paths"
+            else "prefix_cache=True"
+        )
         raise ValueError(
-            f"num_paths={cfg.num_paths} needs fully-paged caches, but the "
+            f"{want} needs fully-paged caches, but the "
             f"{role} model {model.cfg.name!r} has non-paged entries "
             f"{sorted(set(bad))} (sliding-window / SSM / cross layers); "
-            "serve it with num_paths=1"
+            f"serve it without {feature}"
         )
 
 
@@ -527,6 +535,17 @@ class Runner:
             cfg.verifier, residual_backend=cfg.residual_backend
         )
         self._prefill_fn = jax.jit(partial(prefill_body, target, drafter, cfg))
+        if getattr(cfg, "prefix_cache", False):
+            # Prefix claims restore only pooled K/V; dense rings and SSM
+            # states are zeroed per slot at admission, so a claimed
+            # prefix would silently lose those layers' history.
+            if self.page_spec is None:
+                raise ValueError("prefix_cache=True requires paged=True")
+            for model, role in ((target, "target"), (drafter, "drafter")):
+                _assert_all_paged(
+                    model, cfg, self.chunk_slack, role,
+                    feature="prefix_cache",
+                )
         if getattr(cfg, "num_paths", 1) > 1:
             if self.page_spec is None:
                 raise ValueError("num_paths > 1 requires paged=True")
@@ -575,13 +594,28 @@ class Runner:
             t_params, d_params, t_cache, d_cache, batch, key
         )
 
-    def release_slot(self, batch: BatchState, slot: int) -> BatchState:
+    def release_slot(
+        self, batch: BatchState, slot: int, cache_cols=None
+    ) -> BatchState:
         """Deactivate a retired/preempted slot and (paged engines) push
-        its pages back onto the free stack."""
-        return self._release_fn(batch, jnp.asarray(slot, jnp.int32))
+        its pages back onto the free stack — except entries flagged in
+        ``cache_cols`` ((max_pages,) bool), which the engine just
+        registered in the prefix index: those park in the ``cached``
+        state, content intact, for future claims."""
+        spec = self.page_spec
+        if cache_cols is None:
+            cache_cols = (
+                jnp.zeros((spec.max_pages,), bool)
+                if spec is not None else jnp.zeros((0,), bool)
+            )
+        else:
+            cache_cols = jnp.asarray(cache_cols, bool)
+        return self._release_fn(
+            batch, jnp.asarray(slot, jnp.int32), cache_cols
+        )
 
 
-def _release_slot(spec, batch: BatchState, slot):
+def _release_slot(spec, batch: BatchState, slot, cache_cols):
     mask = jnp.arange(batch.num_slots) == slot
     batch = batch._replace(
         active=batch.active & ~mask, ready=batch.ready & ~mask
@@ -589,6 +623,7 @@ def _release_slot(spec, batch: BatchState, slot):
     if spec is None:
         return batch
     table, used, pool = paging.release(
-        spec, batch.page_table, batch.pages_used, batch.pool, mask
+        spec, batch.page_table, batch.pages_used, batch.pool, mask,
+        cache_cols=mask[:, None] & cache_cols[None, :],
     )
     return batch._replace(page_table=table, pages_used=used, pool=pool)

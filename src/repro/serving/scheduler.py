@@ -19,7 +19,12 @@ live slots past the budget (over-subscribed pools), the engine preempts
 the most recently admitted slot: its pages are freed and the request
 requeues at the *front* with ``prompt + output`` as its resume prompt —
 recompute-on-resume, the classic trade of a little prefill compute for
-not reserving worst-case memory.
+not reserving worst-case memory. With the cross-request prefix cache
+enabled, the engine parks a victim's committed full pages in the
+``cached`` state instead of freeing them, so resume usually re-*claims*
+its own prefix rather than re-prefilling it (the engine reports the
+claim via :meth:`Scheduler.note_prefix_claim`, which shrinks the
+prefill mirror).
 
 It never touches device arrays; the engine translates admissions and
 retirements into :mod:`repro.serving.batch` updates.
@@ -45,11 +50,22 @@ class RequestState:
     # lifecycle timestamps (engine clock; None until reached)
     submit_t: float = 0.0
     admit_t: float | None = None
+    # Monotonic admission sequence number (bumped at every (re)admission).
+    # Preemption picks its LIFO victim by this, NOT by admit_t: all
+    # requests admitted in one admit() call share the same clock reading,
+    # so a timestamp tie-break silently degrades to "highest slot index".
+    admit_seq: int = -1
     first_token_t: float | None = None
     finish_t: float | None = None
     finish_reason: str | None = None
     finished: bool = False
     preemptions: int = 0
+    # Time spent requeued between a preemption and the matching
+    # readmission AFTER the first token was emitted — excluded from
+    # decode throughput (pre-first-token waits are already outside the
+    # first_token_t -> finish_t window).
+    requeue_wait_s: float = 0.0
+    _preempt_t: float | None = None
 
     def serve_prompt(self) -> list[int]:
         """Tokens to prefill at (re)admission: the original prompt plus
@@ -69,6 +85,24 @@ class RequestState:
 
     @property
     def tokens_per_s(self) -> float | None:
+        """Decode throughput: output tokens over the time the request was
+        actually generating — first token to finish, minus any
+        post-first-token preemption requeue waits
+        (:attr:`requeue_wait_s`). Queue wait and requeue time belong to
+        :attr:`e2e_tokens_per_s`; folding them in here deflated
+        per-request decode throughput under load."""
+        if (
+            self.finish_t is None
+            or self.first_token_t is None
+            or not self.output
+        ):
+            return None
+        dur = self.finish_t - self.first_token_t - self.requeue_wait_s
+        return len(self.output) / dur if dur > 0 else None
+
+    @property
+    def e2e_tokens_per_s(self) -> float | None:
+        """End-to-end throughput including queue wait and requeue time."""
         if self.finish_t is None or not self.output:
             return None
         dur = self.finish_t - self.submit_t
@@ -102,6 +136,7 @@ class Scheduler:
         self._prefill_left = [0] * num_slots
         self.done: dict[int, RequestState] = {}
         self._next_rid = 0
+        self._admit_seq = 0
 
     # -- submission / admission --------------------------------------------
 
@@ -138,6 +173,11 @@ class Scheduler:
                     break
                 req = self.queue.popleft()
                 req.admit_t = now
+                if req._preempt_t is not None:  # resuming after preemption
+                    req.requeue_wait_s += now - req._preempt_t
+                    req._preempt_t = None
+                req.admit_seq = self._admit_seq
+                self._admit_seq += 1
                 self.slot_req[slot] = req
                 # Both models must consume plen - 1 prompt tokens.
                 self._prefill_left[slot] = max(plen - 1, 0)
@@ -145,6 +185,14 @@ class Scheduler:
                     self.budget.note_admit(slot, plen)
                 admitted.append((slot, req))
         return admitted
+
+    def note_prefix_claim(self, slot: int, prefix_len: int) -> None:
+        """Account a prefix-cache hit for a just-admitted slot: the first
+        ``prefix_len`` prompt tokens were claimed from cached pages, so
+        chunked prefill only has to consume the remainder."""
+        self._prefill_left[slot] = max(
+            self._prefill_left[slot] - prefix_len, 0
+        )
 
     # -- prefill mirror ----------------------------------------------------
 
@@ -154,13 +202,24 @@ class Scheduler:
             for slot, left in enumerate(self._prefill_left)
         )
 
-    def note_prefill_dispatch(self) -> None:
+    def note_prefill_dispatch(self) -> int:
         """Account one dispatched chunked-prefill step: every prefilling
-        slot advanced by ``min(chunk, remaining)`` tokens."""
+        slot advanced by ``min(chunk, remaining)`` tokens. Returns the
+        total prompt tokens consumed by the dispatch — the engine's
+        prefill-volume telemetry (what prefix-cache hits shrink)."""
+        consumed = 0
         for slot in range(self.num_slots):
             if self.slot_req[slot] is not None:
                 left = self._prefill_left[slot]
+                consumed += min(left, self.prefill_chunk)
                 self._prefill_left[slot] = max(left - self.prefill_chunk, 0)
+        return consumed
+
+    def prefill_left(self, slot: int) -> int:
+        """Prompt tokens slot ``slot`` has not yet consumed — 0 once
+        decodable. The engine uses it at preemption time to bound the
+        cacheable committed-KV prefix of a still-prefilling victim."""
+        return self._prefill_left[slot]
 
     def ready_slots(self) -> dict[int, RequestState]:
         """Live slots whose prefill has fully dispatched (decodable)."""
@@ -193,11 +252,14 @@ class Scheduler:
     def pick_victim(self) -> int | None:
         """Slot to preempt when the pool runs dry: the most recently
         admitted live slot (LIFO — protects the oldest requests' progress
-        and matches the resume queue's front-insertion order). Never
-        offers the last live slot: a lone slot always fits the pool
-        (``num_pages >= max_pages`` is asserted at spec construction)."""
+        and matches the resume queue's front-insertion order), decided by
+        the monotonic ``admit_seq`` — NOT ``admit_t``, whose one-clock-
+        reading-per-``admit()`` ties made "most recent" collapse to
+        "highest slot index". Never offers the last live slot: a lone
+        slot always fits the pool (``num_pages >= max_pages`` is
+        asserted at spec construction)."""
         live = [
-            (req.admit_t, slot)
+            (req.admit_seq, slot)
             for slot, req in enumerate(self.slot_req)
             if req is not None
         ]
@@ -212,6 +274,10 @@ class Scheduler:
         req = self.slot_req[slot]
         assert req is not None, slot
         req.preemptions += 1
+        if req.first_token_t is not None:
+            # Mid-decode victim: the coming requeue wait must not count
+            # against its decode throughput.
+            req._preempt_t = self.clock()
         self.slot_req[slot] = None
         self._prefill_left[slot] = 0
         if self.budget is not None:
@@ -237,6 +303,8 @@ class Scheduler:
                     "iterations": req.iterations,
                     "ttft_s": req.ttft_s,
                     "tokens_per_s": req.tokens_per_s,
+                    "e2e_tokens_per_s": req.e2e_tokens_per_s,
+                    "preemptions": req.preemptions,
                     "acceptance_rate": req.acceptance_rate(gamma),
                     "block_efficiency": (
                         (req.accepted_total + req.iterations) / req.iterations

@@ -211,3 +211,47 @@ def test_request_metrics_reported():
         assert 0.0 <= m["acceptance_rate"] <= 1.0
         assert 1.0 <= m["block_efficiency"] <= cfg.gamma + 1
         assert m["finish_reason"] == "length"
+
+
+def test_alloc_trace_decimation_keeps_first_and_last():
+    """The old ``del trace[::2]`` dropped the EVEN indices — including
+    sample 0 — so long runs lost the trace's start. The helper must keep
+    both anchors and halve the middle."""
+    from repro.serving.engine import _decimate_trace
+
+    trace = [{"step": i} for i in range(1, 9)]          # odd last index
+    kept = _decimate_trace(trace)
+    assert [t["step"] for t in kept] == [1, 3, 5, 7, 8]
+    trace = [{"step": i} for i in range(1, 10)]         # even last index
+    kept = _decimate_trace(trace)
+    assert [t["step"] for t in kept] == [1, 3, 5, 7, 9]
+    assert _decimate_trace([{"step": 1}]) == [{"step": 1}]
+
+
+def test_alloc_trace_capped_run_preserves_anchors(monkeypatch):
+    """Drive a paged engine past the trace cap: the recorded series must
+    stay bounded, keep its FIRST sample, end at the freshest recorded
+    step, and report the doubled effective stride."""
+    from repro.serving import engine as engine_mod
+
+    monkeypatch.setattr(engine_mod, "ALLOC_TRACE_CAP", 8)
+    tgt, drf, tp, dp = _models("smollm-135m")
+    cfg = EngineConfig(
+        gamma=2, verifier="block", max_slots=1, max_len=96,
+        temperature=0.0, max_new_tokens=48,
+    )
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    eng.submit([3, 1, 4, 1, 5])
+    eng.run()
+    stats = eng.last_stats
+    trace = stats["alloc_trace"]
+    iters = stats["iterations"]
+    assert iters > 8  # the cap was actually hit
+    assert len(trace) <= 8 + 1
+    assert trace[0]["step"] == 1                  # first sample survives
+    steps = [t["step"] for t in trace]
+    assert steps == sorted(steps)
+    stride = stats["alloc_trace_stride"]
+    assert stride > 1 and (stride & (stride - 1)) == 0  # doubled, 2^k
+    # the tail is never more than one stride stale
+    assert iters - trace[-1]["step"] < stride

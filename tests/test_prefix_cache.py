@@ -1,0 +1,577 @@
+"""Cross-request prefix caching tests.
+
+Three layers:
+
+* allocator semantics of the ``cached`` page state — release with a
+  cache mask parks pages off-stack at refcount 0, claims resurrect
+  them, eviction frees them;
+* the host-side :class:`~repro.serving.paging.PrefixCache` radix index
+  (page-aligned keying, claim pinning, duplicate-content adoption,
+  leaf-first LRU eviction);
+* the serving engine with ``prefix_cache=True`` — hits skip prefill
+  tokens while staying bit-identical to the uncached engine (greedy AND
+  sampled), preemption resume re-claims its own prefix, eviction
+  pressure never leaks pages, and the "device allocation can never
+  fail" invariant holds under randomized PageBudget-admitted traffic
+  (the hypothesis property form of the docstring claim).
+"""
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline/minimal env: keep deterministic cases running
+    from conftest import hypothesis_stub
+
+    given, settings, st = hypothesis_stub()
+
+from repro.configs import registry
+from repro.models import Model
+from repro.serving import paging
+from repro.serving.engine import EngineConfig, SpecEngine
+
+SPEC = paging.PageSpec(page_size=4, num_pages=16, max_pages=6)
+
+
+def _mk(num_slots=2, spec=SPEC):
+    table, used = paging.init_tables(spec, num_slots)
+    return table, used, paging.init_pool(spec)
+
+
+def _pool_invariant(spec, pool, cache=None):
+    """free + referenced + parked-cached == the pool; the stack holds
+    exactly the free ids (disjoint from referenced and cached pages);
+    the device ``cached`` set mirrors the host index page-for-page."""
+    free = int(pool.free_count)
+    ref = np.asarray(pool.ref)
+    cached = np.asarray(pool.cached)
+    live = int((ref > 0).sum())
+    parked = int(((ref == 0) & cached).sum())
+    assert free + live + parked == spec.num_pages, (free, live, parked)
+    assert (ref >= 0).all()
+    stack = {int(x) for x in pool.free_stack[:free]}
+    assert len(stack) == free
+    assert not stack & {p for p in range(spec.num_pages) if ref[p] > 0}
+    assert not stack & {p for p in range(spec.num_pages) if cached[p]}
+    if cache is not None:
+        assert set(cache.by_page) == {
+            p for p in range(spec.num_pages) if cached[p]
+        }
+
+
+class TestCachedPageState:
+    def test_release_with_cache_mask_parks_pages(self):
+        table, used, pool = _mk()
+        table, used, pool, ok = paging.ensure(
+            SPEC, table, used, pool, jnp.array([10, 0]),
+            jnp.array([True, False]),
+        )
+        assert bool(jnp.all(ok)) and used.tolist() == [3, 0]
+        ids = [int(p) for p in table[0, :3]]
+        cache_cols = jnp.zeros((2, SPEC.max_pages), bool).at[0, :2].set(True)
+        table, used, pool = paging.release(
+            SPEC, table, used, pool, jnp.array([True, False]),
+            cache_cols=cache_cols,
+        )
+        # pages 0,1 parked (cached, ref 0, off stack); page 2 freed
+        assert int(pool.free_count) == 16 - 2
+        assert int(jnp.max(pool.ref)) == 0
+        assert [bool(pool.cached[p]) for p in ids] == [True, True, False]
+        _pool_invariant(SPEC, pool)
+
+    def test_claim_resurrects_and_evict_frees(self):
+        table, used, pool = _mk()
+        table, used, pool, _ = paging.ensure(
+            SPEC, table, used, pool, jnp.array([8, 0]),
+            jnp.array([True, False]),
+        )
+        ids = [int(p) for p in table[0, :2]]
+        cc = jnp.zeros((2, SPEC.max_pages), bool).at[0, :2].set(True)
+        table, used, pool = paging.release(
+            SPEC, table, used, pool, jnp.array([True, False]), cache_cols=cc
+        )
+        # a later slot claims the parked run: refcounts bump, no popping
+        table, used, pool = paging.host_claim_prefix(
+            SPEC, table, used, pool, 1, ids
+        )
+        assert used.tolist() == [0, 2]
+        assert [int(pool.ref[p]) for p in ids] == [1, 1]
+        assert int(pool.free_count) == 16 - 2
+        _pool_invariant(SPEC, pool)
+        # release WITHOUT re-caching: cached pages still never hit the
+        # stack (the index owns them until eviction)
+        table, used, pool = paging.release(
+            SPEC, table, used, pool, jnp.array([False, True])
+        )
+        assert int(pool.free_count) == 16 - 2
+        assert int(jnp.max(pool.ref)) == 0
+        _pool_invariant(SPEC, pool)
+        # eviction is the only path back to free
+        pool = paging.host_evict(SPEC, pool, ids)
+        assert int(pool.free_count) == 16
+        assert not bool(jnp.any(pool.cached))
+        _pool_invariant(SPEC, pool)
+
+    def test_shared_claim_refcounts(self):
+        """Two live slots claiming the same cached run: ref 2; releases
+        drop to 1 then park at 0."""
+        table, used, pool = _mk(3)
+        table, used, pool, _ = paging.ensure(
+            SPEC, table, used, pool, jnp.array([8, 0, 0]),
+            jnp.array([True, False, False]),
+        )
+        ids = [int(p) for p in table[0, :2]]
+        cc = jnp.zeros((3, SPEC.max_pages), bool).at[0, :2].set(True)
+        table, used, pool = paging.release(
+            SPEC, table, used, pool, jnp.array([True, False, False]),
+            cache_cols=cc,
+        )
+        for slot in (1, 2):
+            table, used, pool = paging.host_claim_prefix(
+                SPEC, table, used, pool, slot, ids
+            )
+        assert [int(pool.ref[p]) for p in ids] == [2, 2]
+        cc = jnp.zeros((3, SPEC.max_pages), bool).at[1:, :2].set(True)
+        table, used, pool = paging.release(
+            SPEC, table, used, pool, jnp.array([False, True, True]),
+            cache_cols=cc,
+        )
+        assert int(jnp.max(pool.ref)) == 0
+        assert int(pool.free_count) == 16 - 2  # still parked, no leak
+        _pool_invariant(SPEC, pool)
+
+
+class TestPrefixIndex:
+    def test_lookup_caps_below_last_prompt_token(self):
+        cache = paging.PrefixCache(SPEC)
+        toks = list(range(12))
+        cache.insert(toks[:8], [3, 5])
+        # 9 tokens: (9-1)//4 = 2 full pages claimable
+        assert [n.page for n in cache.lookup(toks[:9])] == [3, 5]
+        # 8 tokens: position 7 must be rewritten -> only 1 page
+        assert [n.page for n in cache.lookup(toks[:8])] == [3]
+        # diverging second page stops the walk
+        other = toks[:4] + [99, 99, 99, 99, 0]
+        assert [n.page for n in cache.lookup(other)] == [3]
+        assert cache.lookup([7]) == []
+
+    def test_insert_adopts_and_rejects_duplicates(self):
+        cache = paging.PrefixCache(SPEC)
+        toks = list(range(8))
+        assert cache.insert(toks, [2, 4]) == [True, True]
+        # identical content arriving on different physical pages: the
+        # index keeps the first copy, the second releases normally
+        assert cache.insert(toks, [7, 9]) == [False, False]
+        assert [n.page for n in cache.lookup(toks + [0])] == [2, 4]
+        # a claimed re-insert (same ids) is re-adopted
+        assert cache.insert(toks, [2, 4]) == [True, True]
+        assert cache.cached_pages == 2
+
+    def test_claims_pin_and_propagate(self):
+        cache = paging.PrefixCache(SPEC)
+        toks = list(range(12))
+        cache.insert(toks, [1, 2, 3])
+        path = cache.lookup(toks + [0])
+        cache.claim(path)
+        assert cache.reclaimable_pages() == 0  # whole path pinned
+        assert cache.evict_lru(3) == []
+        cache.release_claims(path)
+        assert cache.reclaimable_pages() == 3
+
+    def test_evict_lru_leaf_first(self):
+        cache = paging.PrefixCache(SPEC)
+        a = [0] * 8
+        b = [0] * 4 + [1] * 4
+        cache.insert(a, [10, 11])     # shared first page 10
+        cache.insert(b, [10, 12])
+        # touch branch b more recently
+        cache.claim(cache.lookup(b + [0]))
+        cache.release_claims(cache.lookup(b + [0]))
+        # first eviction must take the LRU *leaf* (11), never the shared
+        # interior page 10 (its children would become unreachable)
+        assert cache.evict_lru(1) == [11]
+        assert cache.evict_lru(2) == [12, 10]
+        assert cache.cached_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level tests
+# ---------------------------------------------------------------------------
+
+
+def _models(name="smollm-135m", seed=0):
+    cfg = registry.smoke_config(name)
+    if cfg.n_experts:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    tgt = Model(cfg)
+    drf = Model(cfg.with_(d_model=128, d_ff=256 if cfg.d_ff else 0,
+                          name=cfg.name + "-d"))
+    kt, kd = jax.random.split(jax.random.key(seed))
+    return tgt, drf, tgt.init(kt), drf.init(kd)
+
+
+def _serve(eng, prompts):
+    rids = [eng.submit(p) for p in prompts]
+    out = eng.run()
+    return [out[r] for r in rids]
+
+
+# Two prompt families sharing a >= 2-page prefix at page_size=8.
+SHARED = [5, 3, 8, 1, 2, 9, 4, 6, 7, 7, 1, 3, 2, 8, 9, 5]  # 2 pages
+PROMPTS = [
+    SHARED + [11, 12, 13, 14],
+    SHARED + [21, 22, 23],
+    SHARED + [31],
+]
+
+
+class TestEnginePrefixCache:
+    BASE = dict(
+        gamma=3, verifier="block", max_slots=1, max_len=96,
+        temperature=0.0, max_new_tokens=10, paged=True, page_size=8,
+    )
+
+    def test_hits_skip_prefill_and_stay_greedy_identical(self):
+        """max_slots=1 serializes the requests, so request 2+ admit after
+        request 1 retired and cached its prefix: strictly fewer prompt
+        tokens are prefilled (the claim starts prefill at the first
+        uncached position) and committed tokens match the uncached
+        engine exactly."""
+        tgt, drf, tp, dp = _models(seed=3)
+        ref_eng = SpecEngine(
+            tgt, drf, tp, dp, EngineConfig(prefix_cache=False, **self.BASE)
+        )
+        ref = _serve(ref_eng, PROMPTS)
+        ref_prefill = ref_eng.last_stats["prefill_tokens"]
+
+        eng = SpecEngine(
+            tgt, drf, tp, dp, EngineConfig(prefix_cache=True, **self.BASE)
+        )
+        got = _serve(eng, PROMPTS)
+        assert [r.output for r in got] == [r.output for r in ref]
+        stats = eng.last_stats
+        # requests 2 and 3 each claimed the 2 shared pages (16 tokens)
+        assert stats["prefix_cache"]["hits"] == 2
+        assert stats["prefix_cache"]["claimed_tokens"] == 32
+        assert stats["prefill_tokens"] == ref_prefill - 32
+        assert stats["prefill_tokens"] < ref_prefill
+
+    def test_cross_run_hits_and_sampled_bitwise_identity(self):
+        """The index persists across run() calls; with the single-slot
+        sequential workload the decode key stream is untouched by how
+        much prefill ran, so even SAMPLED outputs are bit-identical to
+        the uncached engine."""
+        tgt, drf, tp, dp = _models(seed=3)
+        outs = {}
+        for pc in (False, True):
+            cfg = EngineConfig(
+                **{**self.BASE, "temperature": 0.8}, prefix_cache=pc
+            )
+            eng = SpecEngine(tgt, drf, tp, dp, cfg)
+            eng.reset(seed=5)
+            first = [r.output for r in _serve(eng, PROMPTS[:1])]
+            second = [r.output for r in _serve(eng, PROMPTS)]
+            outs[pc] = (first, second)
+            if pc:
+                s = eng.last_stats["prefix_cache"]
+                assert s["hits"] == 3  # every prompt reused the prefix
+        assert outs[True] == outs[False]
+
+    def test_full_prefix_hit_admits_ready(self):
+        """A prompt whose first plen-1 tokens are all cached skips
+        prefill entirely (ready at admission)."""
+        tgt, drf, tp, dp = _models(seed=3)
+        eng = SpecEngine(
+            tgt, drf, tp, dp, EngineConfig(prefix_cache=True, **self.BASE)
+        )
+        prompt = SHARED + [42]  # plen 17; plen-1 = 16 = 2 full pages
+        _serve(eng, [prompt])
+        base_prefill = eng.last_stats["prefill_tokens"]
+        assert base_prefill == 16
+        _serve(eng, [prompt])
+        assert eng.last_stats["prefill_tokens"] == 0
+        assert eng.last_stats["prefill_steps"] == 0
+        ref_eng = SpecEngine(
+            tgt, drf, tp, dp, EngineConfig(prefix_cache=False, **self.BASE)
+        )
+        a = _serve(ref_eng, [prompt])
+        b = _serve(ref_eng, [prompt])
+        eng2 = SpecEngine(
+            tgt, drf, tp, dp, EngineConfig(prefix_cache=True, **self.BASE)
+        )
+        x = _serve(eng2, [prompt])
+        y = _serve(eng2, [prompt])
+        assert [r.output for r in x] == [r.output for r in a]
+        assert [r.output for r in y] == [r.output for r in b]
+
+    def test_eviction_pressure_no_leaked_pages(self):
+        """A pool too small to keep every retired prefix forces LRU
+        eviction; afterwards every page is either free or accounted to
+        the index — zero refcounts, no limbo pages — and outputs still
+        match the uncached engine."""
+        tgt, drf, tp, dp = _models(seed=3)
+        base = dict(self.BASE, max_new_tokens=8)
+        prompts = [
+            [f + 1] * 8 + [f + 1, 9, f + 2, 7]  # distinct 1-page prefixes
+            for f in range(6)
+        ] + [PROMPTS[0], PROMPTS[1]]
+        cfg = EngineConfig(prefix_cache=True, num_pages=16, **base)
+        spec = paging.spec_of(cfg)
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        got = _serve(eng, prompts)
+        ref = _serve(
+            SpecEngine(tgt, drf, tp, dp,
+                       EngineConfig(prefix_cache=False, num_pages=16, **base)),
+            prompts,
+        )
+        assert [r.output for r in got] == [r.output for r in ref]
+        stats = eng.last_stats
+        assert stats["prefix_cache"]["evicted_pages"] > 0
+        pool = eng.batch.pool
+        assert int(jnp.max(pool.ref)) == 0
+        _pool_invariant(spec, pool, eng.prefix_cache)
+        assert (
+            int(pool.free_count) + eng.prefix_cache.cached_pages
+            == spec.num_pages
+        )
+
+    def test_preemption_resume_reclaims_own_prefix(self):
+        """Over-subscribed pool: preempted requests park their committed
+        pages and their resume claims them back — committed tokens still
+        exactly match the dense engine."""
+        tgt, drf, tp, dp = _models(seed=3)
+        base = dict(
+            gamma=3, verifier="block", max_slots=3, max_len=96,
+            temperature=0.0, max_new_tokens=40, page_size=16,
+        )
+        dense = SpecEngine(
+            tgt, drf, tp, dp, EngineConfig(paged=False, **base)
+        )
+        ref = _serve(dense, [p[:8] for p in PROMPTS])
+        cfg = EngineConfig(
+            paged=True, num_pages=8, prefix_cache=True, **base
+        )
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        got = _serve(eng, [p[:8] for p in PROMPTS])
+        assert eng.last_stats["preemptions"] > 0
+        assert eng.last_stats["prefix_cache"]["hits"] > 0  # resume claims
+        for r_ref, r_got in zip(ref, got):
+            assert r_got.output == r_ref.output
+        assert int(jnp.max(eng.batch.pool.ref)) == 0
+        _pool_invariant(
+            paging.spec_of(cfg), eng.batch.pool, eng.prefix_cache
+        )
+
+    def test_multipath_with_prefix_cache_temp0(self):
+        """CoW multi-path forking composes with claimed prefixes: the
+        fork's transient refcount bumps on claimed pages cancel at
+        adoption, and temp-0 outputs stay dense-identical."""
+        tgt, drf, tp, dp = _models(seed=3)
+        base = dict(
+            gamma=3, verifier="block", max_slots=1, max_len=96,
+            temperature=0.0, max_new_tokens=10, page_size=8,
+        )
+        dense = SpecEngine(
+            tgt, drf, tp, dp, EngineConfig(paged=False, **base)
+        )
+        ref = [
+            [r.output for r in _serve(dense, PROMPTS[:1])],
+            [r.output for r in _serve(dense, PROMPTS)],
+        ]
+        cfg = EngineConfig(
+            paged=True, num_paths=2, prefix_cache=True, **base
+        )
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        got = [
+            [r.output for r in _serve(eng, PROMPTS[:1])],
+            [r.output for r in _serve(eng, PROMPTS)],
+        ]
+        assert got == ref
+        assert eng.last_stats["prefix_cache"]["hits"] >= 3
+        assert int(jnp.max(eng.batch.pool.ref)) == 0
+        _pool_invariant(
+            paging.spec_of(cfg), eng.batch.pool, eng.prefix_cache
+        )
+
+    def test_prefix_cache_requires_fully_paged(self):
+        tgt, drf, tp, dp = _models("mixtral-8x22b")  # sliding windows
+        with pytest.raises(ValueError, match="prefix_cache"):
+            SpecEngine(
+                tgt, drf, tp, dp,
+                EngineConfig(
+                    gamma=3, max_slots=1, max_len=96, paged=True,
+                    prefix_cache=True,
+                ),
+            )
+        with pytest.raises(ValueError, match="paged=True"):
+            tgt2, drf2, tp2, dp2 = _models()
+            SpecEngine(
+                tgt2, drf2, tp2, dp2,
+                EngineConfig(
+                    gamma=3, max_slots=1, max_len=96, paged=False,
+                    prefix_cache=True,
+                ),
+            )
+
+
+# ---------------------------------------------------------------------------
+# "Device allocation can never fail" — the property form
+# ---------------------------------------------------------------------------
+
+
+def _budget_traffic_lifecycle(seed: int, num_paths: int = 1):
+    """Randomized serving traffic driven by the REAL host policy
+    (PageBudget admission, LIFO preemption, prefix claims, LRU eviction)
+    against the REAL device allocator ops — asserting that ``ensure`` /
+    ``cow_ensure`` never return ``ok=False`` for a budgeted slot, the
+    docstring invariant the engine's correctness rests on. Mirrors the
+    engine loop's ordering exactly: preempt -> admit(+claim) -> evict ->
+    allocate -> commit -> retire."""
+    rng = np.random.RandomState(seed)
+    gamma = 3
+    spec = paging.PageSpec(page_size=4, num_pages=40, max_pages=10)
+    max_len = 32  # keep one slot's worst case well inside the pool
+    budget = paging.PageBudget(spec, gamma, num_paths=num_paths)
+    cache = paging.PrefixCache(spec)
+    num_slots = 3
+    table, used = paging.init_tables(spec, num_slots)
+    pool = paging.init_pool(spec)
+    shared = [rng.randint(0, 7, size=12).tolist() for _ in range(2)]
+    queue: deque = deque()
+    # live[slot] = {"tokens": [...], "claims": [...]}
+    live: dict[int, dict] = {}
+    seq = 0
+    admit_order: dict[int, int] = {}
+
+    def release_slot(slot, to_cache=True):
+        nonlocal table, used, pool
+        st = live.pop(slot)
+        cache.release_claims(st["claims"])
+        cc = np.zeros((num_slots, spec.max_pages), bool)
+        if to_cache:
+            n_cache = (len(st["tokens"]) - 1) // spec.page_size
+            if n_cache > 0:
+                ids = [int(p) for p in table[slot, :n_cache]]
+                assert all(p >= 0 for p in ids)
+                cc[slot, :n_cache] = cache.insert(st["tokens"], ids)
+        mask = jnp.arange(num_slots) == slot
+        table, used, pool = paging.release(
+            spec, table, used, pool, mask, cache_cols=jnp.asarray(cc)
+        )
+        budget.note_release(slot)
+        admit_order.pop(slot)
+
+    for _ in range(60):
+        if rng.rand() < 0.6:
+            base = shared[rng.randint(2)]
+            npages = rng.choice([1, 2, 3])
+            tail = rng.randint(0, 7, size=rng.randint(1, 5)).tolist()
+            queue.append(base[: npages * spec.page_size] + tail)
+        # 1. preemption (engine order: sync, then LIFO preempt)
+        while budget.needs_preemption() and len(live) > 1:
+            victim = max(live, key=lambda s: admit_order[s])
+            st = live[victim]
+            queue.appendleft(st["tokens"])
+            release_slot(victim)
+        # 2. admission (+ prefix claims)
+        for slot in range(num_slots):
+            if slot not in live and queue:
+                if not budget.can_admit(len(queue[0])):
+                    break
+                toks = queue.popleft()
+                nodes = cache.lookup(toks)
+                if nodes:
+                    cache.claim(nodes)
+                    table, used, pool = paging.host_claim_prefix(
+                        spec, table, used, pool, slot,
+                        [n.page for n in nodes],
+                    )
+                live[slot] = {"tokens": list(toks), "claims": nodes}
+                budget.note_admit(slot, len(toks))
+                admit_order[slot] = seq
+                seq += 1
+        # 3. eviction: restore the free-stack invariant before dispatch
+        deficit = budget.evict_deficit(cache.reclaimable_pages())
+        if deficit > 0:
+            evicted = cache.evict_lru(deficit)
+            assert len(evicted) == deficit  # always satisfiable
+            pool = paging.host_evict(spec, pool, evicted)
+        # 4. the dispatch's allocations must never fail
+        lens = jnp.asarray(
+            [len(live[s]["tokens"]) if s in live else 0
+             for s in range(num_slots)], jnp.int32,
+        )
+        run = jnp.asarray([s in live for s in range(num_slots)])
+        if num_paths == 1:
+            table, used, pool, ok = paging.ensure(
+                spec, table, used, pool, lens + gamma + 1, run
+            )
+            assert bool(jnp.all(jnp.where(run, ok, True))), (
+                "ensure failed under budget", seed
+            )
+        else:
+            table, used, pool, ok = paging.ensure(
+                spec, table, used, pool, lens, run
+            )
+            assert bool(jnp.all(jnp.where(run, ok, True)))
+            k = num_paths
+            pt, pu, pool = paging.fork(spec, table, used, pool, k, run)
+            pt = pt.reshape(num_slots * k, spec.max_pages)
+            pu = pu.reshape(num_slots * k)
+            lens_k = jnp.repeat(lens, k)
+            run_k = jnp.repeat(run, k)
+            w = spec.pages_for(gamma + 1) + 1
+            pt, pu, pool, _, _, ok_k = paging.cow_ensure(
+                spec, pt, pu, pool,
+                jnp.maximum(lens_k - 1, 0), lens_k + gamma, run_k,
+                max_write_pages=w,
+            )
+            assert bool(jnp.all(jnp.where(run_k, ok_k, True))), (
+                "cow_ensure failed under budget", seed
+            )
+            winner = rng.randint(k)
+            w_tab = pt.reshape(num_slots, k, -1)[:, winner]
+            w_used = pu.reshape(num_slots, k)[:, winner]
+            table = jnp.where(run[:, None], w_tab, table)
+            used = jnp.where(run, w_used, used)
+            keep = jnp.tile(jnp.arange(k), (num_slots,)) == winner
+            pt, pu, pool = paging.release(
+                spec, pt, pu, pool, run_k & ~keep
+            )
+        # 5. commit
+        for slot in list(live):
+            st = live[slot]
+            n_new = int(rng.randint(1, gamma + 2))
+            st["tokens"].extend(rng.randint(0, 7, size=n_new).tolist())
+            budget.note_commit(slot, n_new)
+            if len(st["tokens"]) >= max_len or rng.rand() < 0.15:
+                release_slot(slot)
+        _pool_invariant(spec, pool, cache)
+
+    for slot in list(live):
+        release_slot(slot)
+    _pool_invariant(spec, pool, cache)
+    assert int(jnp.max(pool.ref)) == 0
+    assert (
+        int(pool.free_count) + cache.cached_pages == spec.num_pages
+    )
+
+
+class TestAllocationNeverFails:
+    def test_budget_traffic_deterministic(self):
+        for seed in (0, 1, 2):
+            _budget_traffic_lifecycle(seed, num_paths=1)
+        _budget_traffic_lifecycle(3, num_paths=2)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        num_paths=st.sampled_from([1, 1, 2]),
+    )
+    def test_budget_traffic_property(self, seed, num_paths):
+        _budget_traffic_lifecycle(seed, num_paths=num_paths)

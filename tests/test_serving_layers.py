@@ -73,6 +73,77 @@ class TestScheduler:
         assert m["acceptance_rate"] == pytest.approx(3 / 8)
         assert m["block_efficiency"] == pytest.approx(5 / 2)
 
+    def test_decode_vs_e2e_tokens_per_s(self):
+        """tokens_per_s is decode throughput (first token -> finish);
+        queue wait lives only in e2e_tokens_per_s. The old single metric
+        divided by finish - submit, so queue/requeue time deflated
+        per-request decode throughput."""
+        s = self._sched(slots=1)  # fake clock: +1s per reading
+        s.submit([1, 2, 3])                 # submit_t  = 1
+        ((slot, req),) = s.admit()          # admit_t   = 2
+        req.output.extend([7] * 6)
+        req.first_token_t = s.clock()       # = 3
+        s.retire(slot, "length")            # finish_t  = 4
+        (m,) = s.request_metrics(gamma=4)
+        assert m["tokens_per_s"] == pytest.approx(6 / 1.0)
+        assert m["e2e_tokens_per_s"] == pytest.approx(6 / 3.0)
+        assert m["preemptions"] == 0
+
+    def test_requeue_wait_excluded_from_decode_tps(self):
+        """A request preempted AFTER its first token must not have the
+        requeue wait counted against decode throughput either."""
+        s = self._sched(slots=1)            # fake clock: +1s per reading
+        s.submit([1, 2, 3])                 # submit_t  = 1
+        ((slot, req),) = s.admit()          # admit_t   = 2
+        req.output.extend([7] * 3)
+        req.first_token_t = s.clock()       # = 3
+        s.preempt(slot)                     # _preempt_t = 4
+        ((slot, req),) = s.admit()          # readmit   = 5 -> wait 1s
+        assert req.requeue_wait_s == pytest.approx(1.0)
+        req.output.extend([7] * 3)
+        s.retire(slot, "length")            # finish_t  = 6
+        (m,) = s.request_metrics(gamma=4)
+        # decode window: (6 - 3) - 1 requeued = 2s for 6 tokens
+        assert m["tokens_per_s"] == pytest.approx(6 / 2.0)
+        assert m["e2e_tokens_per_s"] == pytest.approx(6 / 5.0)
+        assert m["preemptions"] == 1
+
+    def test_pick_victim_lifo_by_admission_sequence(self):
+        """All requests admitted in one admit() call share one clock
+        reading, and slot reuse puts the newest request in the LOWEST
+        free slot — so the old (admit_t, slot) tie-break picked the
+        wrong victim. The monotonic admit_seq pins true LIFO."""
+        s = Scheduler(2, default_max_new=8, prefill_chunk=16,
+                      clock=lambda: 0.0)  # constant clock: admit_t ties
+        s.submit([1, 2])
+        s.submit([3, 4])
+        s.admit()                     # -> slots 0, 1 (same admit_t)
+        s.retire(0, "length")
+        s.submit([5, 6])
+        s.admit()                     # newest request lands in slot 0
+        assert s.slot_req[0].admit_seq > s.slot_req[1].admit_seq
+        assert s.pick_victim() == 0   # LIFO; (admit_t, slot) said 1
+
+    def test_prefill_dispatch_reports_consumed_tokens(self):
+        s = self._sched(slots=2, chunk=4)
+        s.submit(list(range(10)))  # 9 tokens to prefill
+        s.submit([1, 2, 3])        # 2 tokens to prefill
+        s.admit()
+        assert s.note_prefill_dispatch() == 6  # 4 + 2
+        assert s.note_prefill_dispatch() == 4  # 4 + 0
+        assert s.note_prefill_dispatch() == 1
+        assert not s.prefill_pending()
+
+    def test_note_prefix_claim_shrinks_prefill_mirror(self):
+        s = self._sched(slots=1, chunk=4)
+        s.submit(list(range(10)))  # 9 tokens to prefill
+        s.admit()
+        s.note_prefix_claim(0, 8)  # 8 of them claimed from the cache
+        assert s.prefill_left(0) == 1
+        assert s.prefill_pending()
+        assert s.note_prefill_dispatch() == 1
+        assert list(s.ready_slots()) == [0]
+
 
 class TestBatchState:
     def test_admit_sets_invariants(self):
