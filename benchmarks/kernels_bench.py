@@ -1,11 +1,19 @@
 """Kernel/verification microbenchmarks.
 
-Two claims measured:
+Three claims measured:
 * the paper's "no additional computation cost": block verification's
   per-call overhead vs token verification at serving shapes;
 * the fused-residual roofline estimate for the Pallas kernel (bytes
   touched / HBM bandwidth on the TPU target; on CPU we report the
-  XLA-compiled reference timing — interpret-mode timings are meaningless).
+  XLA-compiled reference timing — interpret-mode timings are meaningless);
+* the paged-attention kernels (``flash_decode_paged`` /
+  ``flash_prefill_paged``): their in-grid page resolution — the KV
+  tile's pool page resolved through the scalar-prefetched page table —
+  is validated against the DENSE kernels at matched shapes (same K/V
+  content, pool pages scrambled), and timed compiled on TPU / in
+  interpret mode elsewhere (off-TPU the reported ``ref_us_per_call``
+  XLA-gather timing is the meaningful number; interpret timings only
+  prove the lowering runs).
 """
 
 from __future__ import annotations
@@ -15,8 +23,102 @@ import jax.numpy as jnp
 
 from benchmarks.common import timeit
 from repro.core import verification
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.launch.mesh import HBM_BW
+
+
+def _paged_from_dense(key, b, c, kh, hd, page):
+    """A dense (B, C) K/V cache and its paged twin: the pool holds the
+    same rows split into pages, physical ids deliberately scrambled so
+    the kernels' in-grid table resolution is actually exercised."""
+    maxp = c // page
+    kd = jax.random.normal(key, (2, b, c, kh, hd))
+    perm = jax.random.permutation(
+        jax.random.fold_in(key, 1), b * maxp
+    ).astype(jnp.int32)
+    table = perm.reshape(b, maxp)
+    pools = jnp.zeros((2, b * maxp, page, kh, hd))
+    rows = kd.reshape(2, b * maxp, page, kh, hd)
+    pools = pools.at[:, table.reshape(-1)].set(rows)
+    return kd[0], kd[1], pools[0], pools[1], table
+
+
+def run_paged(quick: bool = True):
+    """Paged-vs-dense kernel identity + timing at matched shapes
+    (ROADMAP: wire ``flash_*_paged`` into the kernel benches)."""
+    on_tpu = jax.default_backend() == "tpu"
+    interp = None if on_tpu else True  # compiled on TPU, interpret off
+    rows = []
+    shapes = [(4, 256, 8, 2, 64, 32)] if quick else [
+        (4, 256, 8, 2, 64, 32), (8, 512, 8, 4, 64, 64),
+    ]
+    key = jax.random.key(7)
+    for b, c, h, kh, hd, page in shapes:
+        key = jax.random.fold_in(key, c)
+        k1, k2 = jax.random.split(key)
+        kd, vd, k_pool, v_pool, table = _paged_from_dense(
+            k1, b, c, kh, hd, page
+        )
+        lens = jnp.asarray([c - 1 - (i * 13) % (c // 3) for i in range(b)])
+        k_pos = jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+        k_pos = jnp.where(k_pos < lens[:, None], k_pos, -1)
+
+        # decode: one query token at position lens-1
+        q1 = jax.random.normal(k2, (b, h, hd))
+        dense = ops.flash_decode(q1, kd, vd, lens - 1, k_pos)
+        paged = ops.flash_decode_paged(
+            q1, k_pool, v_pool, table, lens - 1, lens, interpret=interp,
+        )
+        err = float(jnp.max(jnp.abs(paged - dense)))
+        assert err < 2e-5, ("paged decode deviates from dense", err)
+        fn = jax.jit(lambda q: ops.flash_decode_paged(
+            q, k_pool, v_pool, table, lens - 1, lens, interpret=interp,
+        ))
+        us = timeit(lambda: jax.block_until_ready(fn(q1)))
+        rfn = jax.jit(lambda q: ref.flash_decode_paged(
+            q, k_pool, v_pool, table, lens - 1, lens
+        ))
+        rus = timeit(lambda: jax.block_until_ready(rfn(q1)))
+        rows.append({
+            "name": f"kernels/paged_decode_B{b}_C{c}_pg{page}",
+            "max_abs_diff_vs_dense": err,
+            "us_per_call": round(us, 1),
+            "ref_us_per_call": round(rus, 1),
+            "mode": "compiled" if on_tpu else "interpret",
+        })
+
+        # chunked verify/prefill: gamma+1 = 5 query tokens at positions
+        # lens-s .. lens-1; every chunk row must equal the matched dense
+        # single-token decode at its position (a causal chunk is exactly
+        # per-row decode over the shared cache).
+        s = 5
+        qs = jax.random.normal(jax.random.fold_in(k2, 1), (b, s, h, hd))
+        paged = ops.flash_prefill_paged(
+            qs, k_pool, v_pool, table, lens - s, lens, interpret=interp,
+        )
+        err = 0.0
+        for i in range(s):
+            dense = ops.flash_decode(
+                qs[:, i], kd, vd, lens - s + i, k_pos
+            )
+            err = max(err, float(jnp.max(jnp.abs(paged[:, i] - dense))))
+        assert err < 2e-5, ("paged prefill deviates from dense", err)
+        fn = jax.jit(lambda q: ops.flash_prefill_paged(
+            q, k_pool, v_pool, table, lens - s, lens, interpret=interp,
+        ))
+        us = timeit(lambda: jax.block_until_ready(fn(qs)))
+        rfn = jax.jit(lambda q: ref.flash_prefill_paged(
+            q, k_pool, v_pool, table, lens - s, lens
+        ))
+        rus = timeit(lambda: jax.block_until_ready(rfn(qs)))
+        rows.append({
+            "name": f"kernels/paged_prefill_B{b}_S{s}_C{c}_pg{page}",
+            "max_abs_diff_vs_dense": err,
+            "us_per_call": round(us, 1),
+            "ref_us_per_call": round(rus, 1),
+            "mode": "compiled" if on_tpu else "interpret",
+        })
+    return rows
 
 
 def run(quick: bool = True):

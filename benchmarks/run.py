@@ -31,6 +31,7 @@ def main() -> None:
         "greedy_table3": greedy_table3.run,  # paper Table 3 (Appendix C)
         "wallclock": wallclock.run,          # paper Table 1 (wall clock)
         "kernels": kernels_bench.run,        # kernel/verifier microbench
+        "kernels_paged": kernels_bench.run_paged,  # paged vs dense attn
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -182,6 +182,11 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
         max_new=max_new // 2,
     )
     rows.append(pc_row)
+    # Mixed cold-prompt workload: what disaggregated async prefill buys.
+    bench["async_prefill"], ap_row = _async_prefill_bench(
+        tgt, drf, tp, dp, gamma=gamma, max_new=32,
+    )
+    rows.append(ap_row)
     if results["token"][0] > 0:
         bench["block_over_token"] = {
             "wallclock_pct": (
@@ -273,6 +278,200 @@ def _prefix_cache_bench(
         "tokens_per_s": round(bench["tokens_per_s"], 1),
     }
     return bench, row
+
+
+def _async_prefill_bench(
+    tgt, drf, tp, dp, gamma: int, max_new: int,
+    n_cold: int = 4, warm_per_cold: int = 3,
+    cold_tokens: int = 160, warm_tokens: int = 8,
+    max_slots: int = 4, repeats: int = 3,
+):
+    """Serve a mixed cold-prompt workload — each long uncached prompt
+    followed by a stream of short warm ones, several times more
+    requests than decode slots — through the serial and the
+    disaggregated engine at identical configs (temperature 0, so both
+    must commit bit-identical tokens). In the serial engine every cold
+    admission squats a decode slot for its whole multi-chunk prefill
+    AND injects its chunks into the decode loop, so decode iterations
+    run with half-empty batches; the async engine prefills cold
+    prompts in the staging lane, keeping all ``max_slots`` decode
+    lanes full of ready warm work. Reports
+    decode tokens/s (aggregate + per-request mean), mean TTFT with its
+    queue/prefill/decode breakdown, the lane-interaction counters
+    (``prefill_stall_steps`` vs ``overlap_steps``), and the
+    deterministic program-dispatch counts (the async engine needs
+    FEWER decode iterations — fuller batches — and fewer prefill
+    dispatches — the staging lanes batch cold chunks the serial
+    engine's squatted decode slots serialize) — the quantities the
+    ``async_prefill`` section of ``results/BENCH_serving.json`` tracks
+    across PRs.
+
+    Timing protocol: both engines are measured in ``repeats``
+    ALTERNATING trials and every timing metric independently reports
+    its best trial (max throughput / min latency) — wall clock on
+    shared runners is noisy in ways that can dwarf the effect, and
+    best-of-N interleaved is the standard robust estimator (both
+    engines face the same environment drift). Dispatch counts and the
+    bit-identity check are trial-invariant."""
+    tok = ByteTokenizer()
+    n_warm = n_cold * warm_per_cold
+    warm_txt = generate_prompts(5, n_warm)
+    cold_txt = generate_prompts(7, n_cold)
+    prompts = []
+    wi = 0
+    for i in range(n_cold):
+        # Repeat the seed text however often its length requires —
+        # generate_prompts can emit lines as short as 8 chars, so a
+        # fixed repetition count cannot guarantee cold_tokens bytes.
+        base = tok.encode(cold_txt[i] + " ")
+        cold = (base * (cold_tokens // len(base) + 1))[:cold_tokens]
+        assert len(cold) == cold_tokens
+        prompts.append(cold)                              # cold, long
+        for _ in range(warm_per_cold):                    # warm stream
+            prompts.append(tok.encode(warm_txt[wi])[:warm_tokens])
+            wi += 1
+    engines = {}
+    for async_p in (False, True):
+        cfg = EngineConfig(
+            gamma=gamma, verifier="block", max_slots=max_slots,
+            max_len=256, temperature=0.0, max_new_tokens=max_new,
+            prefill_chunk=8, async_prefill=async_p, stage_slots=2,
+        )
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        eng.submit(prompts[0], max_new_tokens=2)  # warm compile
+        eng.run()
+        engines[async_p] = eng
+
+    def trial(async_p):
+        eng = engines[async_p]
+        eng.reset(seed=0)
+        rids = [eng.submit(p) for p in prompts]
+        res = eng.run()
+        metrics = eng.request_metrics()
+        stats = eng.last_stats
+        return {
+            "outputs": [res[r].output for r in rids],
+            "decode_tokens_per_s": stats["tokens"] / stats["wall_s"],
+            "request_decode_tps_mean": _mean(
+                [m["tokens_per_s"] for m in metrics]
+            ),
+            "ttft_mean_s": _mean([m["ttft_s"] for m in metrics]),
+            "ttft_queue_mean_s": _mean([m["ttft_queue_s"] for m in metrics]),
+            "ttft_prefill_mean_s": _mean(
+                [m["ttft_prefill_s"] for m in metrics]
+            ),
+            "ttft_decode_mean_s": _mean(
+                [m["ttft_decode_s"] for m in metrics]
+            ),
+            "decode_iterations": stats["iterations"],
+            "prefill_steps": stats["prefill_steps"],
+            "prefill_stall_steps": stats["prefill_stall_steps"],
+            "overlap_steps": stats["overlap_steps"],
+            "adoptions": stats["adoptions"],
+        }
+
+    trials = {False: [], True: []}
+    for _ in range(repeats):
+        for async_p in (False, True):
+            trials[async_p].append(trial(async_p))
+    # Per-metric robust selection: every timing metric independently
+    # takes its best trial (max for throughput, min for latency) — a
+    # single hiccup inside one engine's fastest-overall trial must not
+    # poison an unrelated gated metric.
+    t_max = ("decode_tokens_per_s", "request_decode_tps_mean")
+    t_min = ("ttft_mean_s", "ttft_queue_mean_s",
+             "ttft_prefill_mean_s", "ttft_decode_mean_s")
+    out = {}
+    for async_p in (False, True):
+        runs = trials[async_p]
+        # Deterministic quantities must not vary across trials.
+        for r in runs[1:]:
+            assert r["outputs"] == runs[0]["outputs"]
+            assert r["decode_iterations"] == runs[0]["decode_iterations"]
+            assert r["prefill_steps"] == runs[0]["prefill_steps"]
+        best = dict(runs[0])
+        for k in t_max:
+            best[k] = max(r[k] for r in runs)
+        for k in t_min:
+            best[k] = min(r[k] for r in runs)
+        out[async_p] = best
+    # The disaggregation must be invisible in the tokens (temperature 0).
+    assert out[True]["outputs"] == out[False]["outputs"], (
+        "async prefill changed committed tokens"
+    )
+    bench = {
+        "workload": {
+            "n_cold": n_cold, "n_warm": n_warm,
+            "cold_prompt_tokens": cold_tokens,
+            "warm_prompt_tokens": warm_tokens,
+            "max_new_tokens": max_new,
+            "max_slots": max_slots, "stage_slots": 2,
+        },
+        "bit_identical": True,
+        "timing_repeats": repeats,
+        "serial": {k: v for k, v in out[False].items() if k != "outputs"},
+        "async": {k: v for k, v in out[True].items() if k != "outputs"},
+        "decode_tokens_per_s_gain": (
+            out[True]["decode_tokens_per_s"]
+            / out[False]["decode_tokens_per_s"]
+        ),
+        "ttft_mean_gain": (
+            out[False]["ttft_mean_s"] / out[True]["ttft_mean_s"]
+        ),
+        # Deterministic (timing-independent) structural wins: fuller
+        # decode batches -> fewer decode iterations for the same
+        # tokens; staging lanes batch cold chunks -> fewer prefill
+        # dispatches.
+        "decode_iterations_saved": (
+            out[False]["decode_iterations"] - out[True]["decode_iterations"]
+        ),
+        "prefill_dispatches_saved": (
+            out[False]["prefill_steps"] - out[True]["prefill_steps"]
+        ),
+    }
+    row = {
+        "name": "wallclock/async_prefill",
+        "decode_tps_serial": round(out[False]["decode_tokens_per_s"], 1),
+        "decode_tps_async": round(out[True]["decode_tokens_per_s"], 1),
+        "ttft_serial_s": round(out[False]["ttft_mean_s"], 3),
+        "ttft_async_s": round(out[True]["ttft_mean_s"], 3),
+        "overlap_steps": out[True]["overlap_steps"],
+    }
+    return bench, row
+
+
+def _mean(xs):
+    xs = [x for x in xs if x is not None]
+    return sum(xs) / len(xs) if xs else None
+
+
+def run_async_smoke(train_steps: int = 120):
+    """CI smoke: train (or load) the char-LM pair, run ONLY the mixed
+    cold-prompt workload, and refresh the ``async_prefill`` section of
+    ``results/BENCH_serving.json`` in place. Fails if the async engine's
+    decode throughput under concurrent prefill regresses below the
+    serial engine's, if mean TTFT stops improving, or if the engines
+    diverge token-wise (asserted inside the bench)."""
+    tgt, drf, tp, dp = _get_models(train_steps)
+    bench_ap, row = _async_prefill_bench(tgt, drf, tp, dp, gamma=4, max_new=32)
+    # Regression-gate BEFORE touching the tracked artifact. The
+    # structural gates are deterministic (program-dispatch counts don't
+    # depend on the runner's timing noise); the timing gates use
+    # min-of-N alternating trials with a small slack factor.
+    assert bench_ap["decode_iterations_saved"] > 0, bench_ap
+    assert bench_ap["prefill_dispatches_saved"] > 0, bench_ap
+    assert bench_ap["async"]["overlap_steps"] > 0, bench_ap
+    assert bench_ap["async"]["prefill_stall_steps"] == 0, bench_ap
+    assert bench_ap["decode_tokens_per_s_gain"] >= 0.97, bench_ap
+    assert bench_ap["ttft_mean_gain"] >= 0.97, bench_ap
+    path = "results/BENCH_serving.json"
+    bench = {"bench": "serving"}
+    if os.path.exists(path):
+        with open(path) as f:
+            bench = json.load(f)
+    bench["async_prefill"] = bench_ap
+    _write_bench(bench, path)
+    return row
 
 
 def run_prefix_smoke(train_steps: int = 120):

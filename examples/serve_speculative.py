@@ -29,6 +29,11 @@ def main():
     ap.add_argument("--prompts", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--gamma", type=int, default=4)
+    ap.add_argument(
+        "--async-prefill", action="store_true",
+        help="serve through the disaggregated two-lane loop (background "
+             "prefill in staging pages, decode slots hold ready work only)",
+    )
     args = ap.parse_args()
 
     print("training / loading char-LM pair ...")
@@ -49,6 +54,7 @@ def main():
         eng = SpecEngine(tgt, drf, tp, dp, EngineConfig(
             gamma=args.gamma, verifier=verifier, max_slots=args.prompts,
             max_len=256, temperature=0.8, max_new_tokens=args.max_new,
+            async_prefill=args.async_prefill,
         ))
         eng.submit(prompts[0], max_new_tokens=2)
         eng.run()      # warm the compile caches

@@ -20,7 +20,7 @@ from repro.models import drafter_of
 from repro.models.model import Model
 from repro.serving import paging
 from repro.serving import runner as serving_runner
-from repro.serving.batch import BatchState
+from repro.serving.batch import BatchState, StageState
 from repro.serving.engine import EngineConfig
 from repro.serving.runner import StepOutputs
 from repro.training import optim
@@ -87,6 +87,12 @@ VARIANTS: dict[str, dict] = {
     # lower with the program — HLO bytes/collective accounting covers
     # the gather path, not just the dense-cache serve step.
     "paged-serve": {"serve_paged": True},
+    # Disaggregated async prefill: lower the detached background
+    # prefill program (runner.stage_prefill_body) over the staging
+    # lanes instead of the decode step — the second executable of the
+    # two-program serve loop, so its HLO bytes/collectives are
+    # accounted separately from decode's.
+    "async-prefill": {"serve_paged": True, "serve_async_stage": True},
 }
 
 
@@ -226,10 +232,12 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
     # allocator, pool sharded pages-over-data) so HLO bytes/collective
     # accounting covers both memory modes.
     paged = bool(opts.get("serve_paged", False))
+    stage_async = bool(opts.get("serve_async_stage", False))
     e_cfg = EngineConfig(
         gamma=GAMMA, verifier="block", max_slots=b, max_len=max_len,
         temperature=1.0, residual_backend="jnp", paged=paged,
         prefill_chunk=GAMMA + 1,  # page slack == the serve chunk slack
+        async_prefill=stage_async, stage_slots=b,
     )
     verify = verification.get_ctx_verifier(
         e_cfg.verifier, residual_backend=e_cfg.residual_backend
@@ -297,10 +305,40 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
             free_count=jax.ShapeDtypeStruct((), jnp.int32),
             ref=jax.ShapeDtypeStruct((page_spec.num_pages,), jnp.int32),
             cached=jax.ShapeDtypeStruct((page_spec.num_pages,), jnp.bool_),
+            staged=jax.ShapeDtypeStruct((page_spec.num_pages,), jnp.bool_),
         )
         pool_shard = paging.PagePool(
-            free_stack=rep, free_count=rep, ref=rep, cached=rep
+            free_stack=rep, free_count=rep, ref=rep, cached=rep, staged=rep
         )
+    if stage_async:
+        # The async-prefill variant lowers the DETACHED background
+        # prefill program over the staging lanes (one lane per batch
+        # row here): StageState follows the batch dim like seq_buf,
+        # the shared pool's bookkeeping stays replicated (pooled K/V
+        # itself shards pages-over-data via cache_shardings).
+        def stage_step(t_params, d_params, t_cache_, d_cache_, stage, pool):
+            return serving_runner.stage_prefill_body(
+                model, drafter, e_cfg,
+                t_params, d_params, t_cache_, d_cache_, stage, pool,
+            )
+
+        stage_specs = StageState(
+            seq_buf=jax.ShapeDtypeStruct((b, max_len), jnp.int32),
+            plen=slot_i32, pos=slot_i32,
+            active=slot_bool, ready=slot_bool,
+            page_table=table_spec, pages_used=used_spec,
+        )
+        stage_shard = StageState(
+            seq_buf=b_or_rep, plen=rep, pos=rep, active=rep, ready=rep,
+            page_table=table_shard, pages_used=rep,
+        )
+        args = (
+            _bf16_params(model), _bf16_params(drafter),
+            t_cache, d_cache, stage_specs, pool_spec,
+        )
+        shardings = (t_p, d_p, t_c, d_c, stage_shard, pool_shard)
+        out_shardings = (t_c, d_c, stage_shard, pool_shard)
+        return stage_step, args, shardings, out_shardings
     batch_specs = BatchState(
         seq_buf=jax.ShapeDtypeStruct((b, max_len), jnp.int32),
         lens=slot_i32, d_lens=slot_i32, t_pref=slot_i32,

@@ -18,6 +18,11 @@ bodies consume them):
   ``lens[s]`` inside each decode iteration;
 * ``out_start[s]`` is the prompt length — everything past it is output;
 * ``max_new[s]`` is the per-request budget used by the in-step stop check.
+
+Async-prefill engines additionally carry a :class:`StageState` — the
+background prefill lane's own per-slot bookkeeping, disjoint from
+:class:`BatchState` by construction so the decode program never
+depends on (or observes) an in-flight prefill chunk.
 """
 
 from __future__ import annotations
@@ -113,6 +118,93 @@ def release_slot(state: BatchState, slot: int) -> BatchState:
     return state._replace(
         active=state.active.at[slot].set(False),
         ready=state.ready.at[slot].set(False),
+    )
+
+
+class StageState(NamedTuple):
+    """Device-resident bookkeeping for the **async staging lane**
+    (``EngineConfig(async_prefill=True)``): the detached background
+    prefill program's own slot state, deliberately disjoint from
+    :class:`BatchState` so cold-prompt prefill never rides the decode
+    critical path. A staging slot holds one prefilling request; the
+    prefill program writes its K/V into *staged* pool pages through
+    ``page_table`` and flips ``ready`` in-program when the final chunk
+    lands. Decode cannot observe any of this: no decode slot's table
+    maps a staged page until the engine adopts the completed row
+    (table install + ``staged``-mark clear — masks flip, K/V stays
+    put). The shared :class:`~repro.serving.paging.PagePool` is NOT a
+    field — it lives in :class:`BatchState` and is threaded through
+    both programs explicitly."""
+
+    seq_buf: jax.Array     # (S, max_len) int32 — the prompt being staged
+    plen: jax.Array        # (S,) int32 — prompt length
+    pos: jax.Array         # (S,) int32 — prompt tokens consumed so far
+    active: jax.Array      # (S,) bool — staging slot holds a request
+    ready: jax.Array       # (S,) bool — final chunk landed (pos>=plen-1)
+    page_table: jax.Array  # (S, max_pages) int32 — staged pages, -1 empty
+    pages_used: jax.Array  # (S,) int32
+
+    @property
+    def num_slots(self) -> int:
+        return self.seq_buf.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.seq_buf.shape[1]
+
+
+def init_stage(
+    num_slots: int, max_len: int, page_spec: paging.PageSpec
+) -> StageState:
+    table, used = paging.init_tables(page_spec, num_slots)
+    z = jnp.zeros((num_slots,), jnp.int32)
+    f = jnp.zeros((num_slots,), bool)
+    return StageState(
+        seq_buf=jnp.zeros((num_slots, max_len), jnp.int32),
+        plen=z, pos=z, active=f, ready=f,
+        page_table=table, pages_used=used,
+    )
+
+
+def stage_slot(
+    state: StageState, sid: int, prompt_ids: list[int], prefix_len: int = 0
+) -> StageState:
+    """Stage a request into a free staging slot: the background prefill
+    program will consume ``plen - 1`` prompt tokens (the last committed
+    token is consumed by the adopting decode slot's first verify
+    chunk). A prefix-cache hit passes the claimed token count as
+    ``prefix_len`` (the claimed pages were installed into this row's
+    table by ``paging.host_claim_prefix``); a full-prefix hit or a
+    one-token prompt is ready without a single prefill dispatch."""
+    plen = len(prompt_ids)
+    assert 1 <= plen < state.max_len, (plen, state.max_len)
+    assert 0 <= prefix_len <= plen - 1, (prefix_len, plen)
+    row = jnp.zeros((state.max_len,), jnp.int32)
+    row = row.at[:plen].set(jnp.asarray(prompt_ids, jnp.int32))
+    return state._replace(
+        seq_buf=state.seq_buf.at[sid].set(row),
+        plen=state.plen.at[sid].set(plen),
+        pos=state.pos.at[sid].set(prefix_len),
+        active=state.active.at[sid].set(True),
+        ready=state.ready.at[sid].set(prefix_len >= plen - 1),
+    )
+
+
+def clear_stage_slot(state: StageState, sid: int) -> StageState:
+    """Reset a staging row after adoption: its pages now belong to the
+    adopting decode slot's table, so the row's table is zeroed WITHOUT
+    releasing anything (contrast a killed prefill, which releases via
+    ``paging.release`` first)."""
+    mp = state.page_table.shape[1]
+    return state._replace(
+        active=state.active.at[sid].set(False),
+        ready=state.ready.at[sid].set(False),
+        pos=state.pos.at[sid].set(0),
+        plen=state.plen.at[sid].set(0),
+        page_table=state.page_table.at[sid].set(
+            jnp.full((mp,), -1, jnp.int32)
+        ),
+        pages_used=state.pages_used.at[sid].set(0),
     )
 
 

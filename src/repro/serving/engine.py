@@ -20,6 +20,17 @@ Layering (one concern per module):
   step syncs only the small ``StepOutputs`` tuple; EOS/length stops are
   detected on device.
 
+With ``EngineConfig(async_prefill=True)`` the loop goes **two-lane**
+(disaggregated prefill): cold-prompt prefill moves off the decode
+critical path into a detached staging program over ``stage_slots``
+lanes, writing K/V into ``staged`` pool pages decode cannot map; each
+host iteration dispatches decode FIRST and the prefill chunk second,
+and a completed prefill is *adopted* into a free decode slot by mask
+flips (staging table install + ``staged`` clear) — never by copying
+cache. Decode slots hold only ready work, so a burst of long cold
+prompts no longer steals decode iterations from in-flight requests.
+``async_prefill=False`` keeps the single-lane loop below, bit-for-bit.
+
 A slot retired while an iteration was already in flight simply wastes
 that slot's lane for one step (its outputs are dropped); the slot's
 buffers and cache rows are reset at readmission. Verification routes the
@@ -92,6 +103,26 @@ class EngineConfig:
     # global-attention layers). ``num_paths=1`` is the single-path
     # engine, bit-for-bit.
     num_paths: int = 1
+    # Disaggregated async prefill (the staging lane): cold-prompt
+    # prefill runs in a DETACHED jitted program over its own
+    # ``stage_slots`` staging lanes, writing both models' prompt K/V
+    # into pool pages marked ``staged`` — invisible to decode, which
+    # only ever maps a staged page after the prompt's final chunk lands
+    # and the engine adopts the staging table into a decode slot (mask
+    # flips, zero K/V copies). The serve loop dispatches decode FIRST
+    # and the prefill chunk second each host iteration, so the decode
+    # program never consumes a same-iteration prefill's outputs; decode
+    # slots are fed only *ready* work (a cold prompt never squats a
+    # decode lane while it prefills), which is where the measured wins
+    # come from: fuller decode batches (fewer iterations for the same
+    # tokens) and staging lanes batching cold chunks (fewer prefill
+    # dispatches). On a single device the two programs still chain
+    # through the shared pool — true executable overlap needs the
+    # device-disaggregated split (ROADMAP). Requires paged=True and
+    # fully-paged caches. ``async_prefill=False`` keeps the serial
+    # single-lane loop, bit-for-bit.
+    async_prefill: bool = False
+    stage_slots: int = 2            # background prefill lanes
     # Cross-request prefix caching (repro.serving.paging.PrefixCache):
     # a retiring/preempted request's committed full pages park in the
     # pool's ``cached`` state, indexed by their token spans; a newly
@@ -138,12 +169,18 @@ class SpecEngine:
         self.scheduler = Scheduler(
             cfg.max_slots, cfg.max_new_tokens, cfg.prefill_chunk,
             budget=budget,
+            num_stage_slots=cfg.stage_slots if cfg.async_prefill else 0,
+        )
+        self.stage = (
+            batch_mod.init_stage(cfg.stage_slots, cfg.max_len, spec)
+            if cfg.async_prefill else None
         )
         self.prefix_cache = (
             paging.PrefixCache(spec)
             if cfg.prefix_cache and spec is not None else None
         )
         self._claims: dict[int, list] = {}  # slot -> claimed trie nodes
+        self._stage_claims: dict[int, list] = {}  # sid -> claimed nodes
         self.key = jax.random.key(seed)
         self.last_stats: dict = {}
 
@@ -174,15 +211,7 @@ class SpecEngine:
         self.t_cache = batch_mod.clear_slot_cache(self.t_cache, slot)
         self.d_cache = batch_mod.clear_slot_cache(self.d_cache, slot)
         prompt = req.serve_prompt()
-        nodes = []
-        if self.prefix_cache is not None:
-            nodes = self.prefix_cache.lookup(prompt)
-            if nodes:
-                self.prefix_cache.claim(nodes)
-                self._claims[slot] = nodes
-            else:
-                self.prefix_cache.misses += 1
-        prefix_len = len(nodes) * self.cfg.page_size
+        nodes, prefix_len = self._lookup_claim(prompt, self._claims, slot)
         self.batch = batch_mod.admit_slot(
             self.batch, slot, prompt, req.serve_max_new(),
             prefix_len=prefix_len,
@@ -198,16 +227,152 @@ class SpecEngine:
             )
             self.scheduler.note_prefix_claim(slot, prefix_len)
 
+    def _lookup_claim(self, prompt: list[int], claims: dict, key: int):
+        """Shared prefix-cache lookup + claim for a row being admitted
+        (decode slot or staging lane): pin the longest cached
+        page-aligned prefix, record the claimed trie nodes under
+        ``claims[key]``, and return ``(nodes, prefix_len)``. The caller
+        installs the physical pages into its own table
+        (``host_claim_prefix``) and notifies its lane's mirror."""
+        if self.prefix_cache is None:
+            return [], 0
+        nodes = self.prefix_cache.lookup(prompt)
+        if nodes:
+            self.prefix_cache.claim(nodes)
+            claims[key] = nodes
+        else:
+            self.prefix_cache.misses += 1
+        return nodes, len(nodes) * self.cfg.page_size
+
+    def _stage(self, sid: int, req: RequestState):
+        """Stage an admitted request into the background prefill lane:
+        write the prompt into the staging row and (prefix cache on)
+        claim the longest cached page-aligned prefix into the *staging*
+        table, so the background prefill starts at the first uncached
+        position. No decode-side state is touched."""
+        prompt = req.serve_prompt()
+        nodes, prefix_len = self._lookup_claim(
+            prompt, self._stage_claims, sid
+        )
+        self.stage = batch_mod.stage_slot(
+            self.stage, sid, prompt, prefix_len=prefix_len
+        )
+        if nodes:
+            table, used, pool = paging.host_claim_prefix(
+                self.runner.page_spec, self.stage.page_table,
+                self.stage.pages_used, self.batch.pool, sid,
+                [n.page for n in nodes],
+            )
+            self.stage = self.stage._replace(
+                page_table=table, pages_used=used
+            )
+            self.batch = self.batch._replace(pool=pool)
+            self.scheduler.note_stage_claim(sid, prefix_len)
+
+    def _adopt(self, sid: int, slot: int, req: RequestState):
+        """Fold a completed background prefill into the decode batch —
+        the ready flip. The staging row's physical pages (claimed
+        prefix + staged growth, in logical order) become the decode
+        slot's page table; their ``staged`` marks clear; ``admit_slot``
+        stages the prompt with ``prefix_len = plen - 1`` (every prompt
+        token both models needed is already consumed), so the slot is
+        decodable immediately. One small device→host sync reads the
+        staging row's page ids — the only host visibility the staging
+        lane ever needs."""
+        prompt = req.serve_prompt()
+        used = int(np.asarray(self.stage.pages_used[sid]))
+        ids = (
+            np.asarray(self.stage.page_table[sid, :used]).tolist()
+            if used else []
+        )
+        assert all(p >= 0 for p in ids), (sid, ids)
+        self._claims[slot] = self._stage_claims.pop(sid, [])
+        self.batch = batch_mod.admit_slot(
+            self.batch, slot, prompt, req.serve_max_new(),
+            prefix_len=len(prompt) - 1,
+        )
+        table, pages_used, pool = paging.host_adopt_stage(
+            self.runner.page_spec, self.batch.page_table,
+            self.batch.pages_used, self.batch.pool, slot, ids,
+        )
+        self.batch = self.batch._replace(
+            page_table=table, pages_used=pages_used, pool=pool
+        )
+        self.stage = batch_mod.clear_stage_slot(self.stage, sid)
+
+    def _cacheable_cols(self, req, prefill_left: int, claims, table_row):
+        """Shared prefix-cache parking logic for a releasing row (decode
+        slot or staging lane): drop the row's own claims, register its
+        committed **full** pages — those entirely inside ``[0,
+        consumed)``, where ``consumed`` counts tokens whose K/V both
+        models have materialized (the last committed token is only
+        consumed by the *next* chunk, and a prefilling victim stops at
+        its mirror's frontier) — in the radix index, and return the
+        ``(max_pages,)`` bool column mask of entries that must park
+        ``cached`` (None when nothing parks). Pages an
+        identical-content index entry already covers release normally
+        (no double-indexing). One small device->host sync reads the
+        physical ids backing the row's committed prefix. Callers gate on
+        ``prefix_cache is not None`` (dense engines have no page table
+        to read ids from)."""
+        self.prefix_cache.release_claims(claims)
+        committed = req.serve_prompt()
+        consumed = len(committed) - 1 - prefill_left
+        n_cache = max(consumed, 0) // self.cfg.page_size
+        if n_cache == 0:
+            return None
+        ids = np.asarray(table_row[:n_cache]).tolist()
+        assert all(p >= 0 for p in ids), ids
+        adopted = self.prefix_cache.insert(committed, ids)
+        cache_cols = np.zeros((self.runner.page_spec.max_pages,), bool)
+        cache_cols[:n_cache] = adopted
+        return cache_cols
+
+    def _kill_stage_and_cache(
+        self, sid: int, req: RequestState, prefill_left: int
+    ):
+        """Release a killed background prefill's staged pages. With the
+        prefix cache on this composes exactly like a decode-slot
+        preemption (:meth:`_release_and_cache`): the fully-written
+        pages park ``cached`` instead of freeing, so the request's
+        retry (requeued at the front) usually re-claims its own prefix
+        instead of re-prefilling it."""
+        cache_cols = None
+        if self.prefix_cache is not None:
+            cache_cols = self._cacheable_cols(
+                req, prefill_left, self._stage_claims.pop(sid, []),
+                self.stage.page_table[sid],
+            )
+        self.stage, pool = self.runner.release_stage(
+            self.stage, self.batch.pool, sid, cache_cols
+        )
+        self.batch = self.batch._replace(pool=pool)
+
     # ------------------------------------------------------------------
     # main loop
     # ------------------------------------------------------------------
 
     def run(self) -> dict[int, RequestState]:
         """Serve until queue + slots drain. Returns rid -> RequestState."""
-        sched = self.scheduler
+        if self.cfg.async_prefill:
+            return self._run_async()
+        return self._run_serial()
+
+    def _stats_init(self):
         stats = {
             "iterations": 0, "prefill_steps": 0, "prefill_tokens": 0,
             "tokens": 0, "preemptions": 0, "wall_s": 0.0,
+            # Lane-interaction counters: ``prefill_stall_steps`` counts
+            # serial-loop iterations whose decode dispatch consumed a
+            # same-iteration prefill chunk's outputs (the cost async
+            # prefill removes); ``overlap_steps`` counts async-loop
+            # iterations that co-dispatched BOTH a decode step and a
+            # background prefill chunk — both lanes made progress that
+            # iteration (on one device the executables still chain
+            # through the shared pool);
+            # ``adoptions`` counts completed background prefills folded
+            # into the decode batch by mask flips.
+            "prefill_stall_steps": 0, "overlap_steps": 0, "adoptions": 0,
             # Per-step allocation telemetry (paged engines): host-mirror
             # pool occupancy and cumulative preemptions at each decode
             # dispatch, consumed by benchmarks/wallclock.py into
@@ -221,8 +386,61 @@ class SpecEngine:
             self.prefix_cache.stats()
             if self.prefix_cache is not None else None
         )
-        t0 = time.perf_counter()
-        trace_stride = 1
+        return stats, pc0, time.perf_counter()
+
+    def _stats_finish(self, stats, pc0, t0) -> None:
+        stats["wall_s"] = time.perf_counter() - t0
+        if pc0 is not None:
+            pc = self.prefix_cache.stats()
+            # Counters are per-run deltas (the index persists across
+            # run() calls); *_pages occupancy values are absolute
+            # end-of-run gauges.
+            counters = ("hits", "misses", "claimed_tokens", "evicted_pages")
+            stats["prefix_cache"] = {
+                k: pc[k] - pc0[k] if k in counters else pc[k] for k in pc
+            }
+        self.last_stats = stats
+
+    def _trace_alloc(self, stats: dict, active_slots: int) -> None:
+        budget = self.scheduler.budget
+        if budget is None or stats["iterations"] % stats["alloc_trace_stride"]:
+            return
+        if len(stats["alloc_trace"]) >= ALLOC_TRACE_CAP:
+            stats["alloc_trace"] = _decimate_trace(stats["alloc_trace"])
+            stats["alloc_trace_stride"] *= 2
+        stats["alloc_trace"].append({
+            "step": stats["iterations"],
+            "occupancy_pages": budget.occupancy_pages(),
+            "worst_case_pages": budget.used_worst(),
+            "num_pages": budget.spec.num_pages,
+            "active_slots": active_slots,
+            "preemptions": stats["preemptions"],
+            "cached_pages": (
+                self.prefix_cache.cached_pages
+                if self.prefix_cache is not None else 0
+            ),
+        })
+
+    def _evict_cached_pressure(self) -> None:
+        """Cached-page pressure: evict LRU reclaimable pages until the
+        free stack provably covers the next dispatch's worst case
+        (claims/admissions may have shifted both sides)."""
+        if self.prefix_cache is None:
+            return
+        deficit = self.scheduler.budget.evict_deficit(
+            self.prefix_cache.reclaimable_pages()
+        )
+        if deficit > 0:
+            self.batch = self.batch._replace(
+                pool=paging.host_evict(
+                    self.runner.page_spec, self.batch.pool,
+                    self.prefix_cache.evict_lru(deficit),
+                )
+            )
+
+    def _run_serial(self) -> dict[int, RequestState]:
+        sched = self.scheduler
+        stats, pc0, t0 = self._stats_init()
         # (snapshot of live-at-dispatch slots, in-flight StepOutputs)
         pending: tuple[dict[int, RequestState], StepOutputs] | None = None
         while True:
@@ -249,20 +467,8 @@ class SpecEngine:
                     stats["preemptions"] += 1
             for slot, req in sched.admit():
                 self._admit(slot, req)
-            # Cached-page pressure: evict LRU reclaimable pages until the
-            # free stack provably covers the next dispatch's worst case
-            # (claims/admissions above may have shifted both sides).
-            if self.prefix_cache is not None:
-                deficit = sched.budget.evict_deficit(
-                    self.prefix_cache.reclaimable_pages()
-                )
-                if deficit > 0:
-                    self.batch = self.batch._replace(
-                        pool=paging.host_evict(
-                            self.runner.page_spec, self.batch.pool,
-                            self.prefix_cache.evict_lru(deficit),
-                        )
-                    )
+            self._evict_cached_pressure()
+            prefilled = False
             if sched.prefill_pending():
                 self.t_cache, self.d_cache, self.batch = (
                     self.runner.prefill_step(
@@ -272,6 +478,7 @@ class SpecEngine:
                 )
                 stats["prefill_tokens"] += sched.note_prefill_dispatch()
                 stats["prefill_steps"] += 1
+                prefilled = True
             outs = None
             snapshot = sched.ready_slots()
             if snapshot:
@@ -283,26 +490,12 @@ class SpecEngine:
                     )
                 )
                 stats["iterations"] += 1
-                budget = sched.budget
-                if budget is not None and stats["iterations"] % trace_stride == 0:
-                    if len(stats["alloc_trace"]) >= ALLOC_TRACE_CAP:
-                        stats["alloc_trace"] = _decimate_trace(
-                            stats["alloc_trace"]
-                        )
-                        trace_stride *= 2
-                        stats["alloc_trace_stride"] = trace_stride
-                    stats["alloc_trace"].append({
-                        "step": stats["iterations"],
-                        "occupancy_pages": budget.occupancy_pages(),
-                        "worst_case_pages": budget.used_worst(),
-                        "num_pages": budget.spec.num_pages,
-                        "active_slots": len(snapshot),
-                        "preemptions": stats["preemptions"],
-                        "cached_pages": (
-                            self.prefix_cache.cached_pages
-                            if self.prefix_cache is not None else 0
-                        ),
-                    })
+                if prefilled:
+                    # This decode dispatch consumes the caches a prefill
+                    # chunk just produced: the chunk sits on the decode
+                    # critical path (what async_prefill removes).
+                    stats["prefill_stall_steps"] += 1
+                self._trace_alloc(stats, len(snapshot))
             # Materialize the PREVIOUS step's outputs while the device runs
             # the one just dispatched (double buffering).
             if pending is not None:
@@ -314,17 +507,90 @@ class SpecEngine:
                 and not sched.has_work()
             ):
                 break
-        stats["wall_s"] = time.perf_counter() - t0
-        if pc0 is not None:
-            pc = self.prefix_cache.stats()
-            # Counters are per-run deltas (the index persists across
-            # run() calls); *_pages occupancy values are absolute
-            # end-of-run gauges.
-            counters = ("hits", "misses", "claimed_tokens", "evicted_pages")
-            stats["prefix_cache"] = {
-                k: pc[k] - pc0[k] if k in counters else pc[k] for k in pc
-            }
-        self.last_stats = stats
+        self._stats_finish(stats, pc0, t0)
+        return dict(sched.done)
+
+    def _run_async(self) -> dict[int, RequestState]:
+        """The disaggregated two-lane loop: decode is dispatched FIRST
+        each host iteration (its dependency chain holds only the
+        previous iteration's programs — never a same-iteration prefill
+        chunk), then the background prefill program advances the
+        staging lanes into ``staged`` pool pages decode cannot map.
+        Completed prefills are *adopted* into free decode slots at the
+        top of the next iteration: the staging table's physical pages
+        become the decode slot's table prefix and their ``staged``
+        marks clear — masks flip, no K/V moves. Decode slots therefore
+        only ever hold ready work: a burst of cold prompts prefills in
+        the staging lane while every decode lane keeps emitting."""
+        sched = self.scheduler
+        stats, pc0, t0 = self._stats_init()
+        pending: tuple[dict[int, RequestState], StepOutputs] | None = None
+        while True:
+            # Page pressure: sync the in-flight step so lengths are
+            # exact, then shed load — background prefills first (least
+            # progress; their fully-written pages park as cacheable),
+            # decode slots LIFO only if staging alone cannot cover it.
+            if sched.needs_preemption():
+                if pending is not None:
+                    self._process(*pending, stats)
+                    pending = None
+                while sched.needs_preemption():
+                    sid = sched.pick_stage_victim()
+                    if sid is not None:
+                        req = sched.stage_req[sid]
+                        left = sched.stage_prefill_left(sid)
+                        sched.kill_stage(sid)
+                        self._kill_stage_and_cache(sid, req, left)
+                        stats["preemptions"] += 1
+                        continue
+                    victim = sched.pick_victim()
+                    if victim is None:
+                        break
+                    req = sched.slot_req[victim]
+                    sched.preempt(victim)
+                    self.batch = self._release_and_cache(victim, req, 0)
+                    stats["preemptions"] += 1
+            for sid, slot, req in sched.adopt():
+                self._adopt(sid, slot, req)
+                stats["adoptions"] += 1
+            for sid, req in sched.stage_admit():
+                self._stage(sid, req)
+            self._evict_cached_pressure()
+            outs = None
+            snapshot = sched.ready_slots()
+            if snapshot:
+                self.key, sub = jax.random.split(self.key)
+                self.t_cache, self.d_cache, self.batch, outs = (
+                    self.runner.decode_step(
+                        self.t_params, self.d_params,
+                        self.t_cache, self.d_cache, self.batch, sub,
+                    )
+                )
+                stats["iterations"] += 1
+                self._trace_alloc(stats, len(snapshot))
+            if sched.stage_pending():
+                self.t_cache, self.d_cache, self.stage, pool = (
+                    self.runner.stage_prefill_step(
+                        self.t_params, self.d_params,
+                        self.t_cache, self.d_cache,
+                        self.stage, self.batch.pool,
+                    )
+                )
+                self.batch = self.batch._replace(pool=pool)
+                stats["prefill_tokens"] += sched.note_stage_prefill_dispatch()
+                stats["prefill_steps"] += 1
+                if outs is not None:
+                    stats["overlap_steps"] += 1
+            if pending is not None:
+                self._process(*pending, stats)
+            pending = (snapshot, outs) if outs is not None else None
+            if (
+                pending is None
+                and not sched.stage_pending()
+                and not sched.has_work()
+            ):
+                break
+        self._stats_finish(stats, pc0, t0)
         return dict(sched.done)
 
     def _process(
@@ -366,33 +632,15 @@ class SpecEngine:
     def _release_and_cache(
         self, slot: int, req: RequestState, prefill_left: int
     ):
-        """Release a retired/preempted slot's pages. With the prefix
-        cache on, its committed **full** pages — those entirely inside
-        ``[0, consumed)``, where ``consumed`` counts tokens whose K/V
-        both models have materialized (the last committed token is only
-        consumed by the *next* chunk, and a prefilling victim stops at
-        its mirror's frontier) — are registered in the radix index and
-        parked in the pool's ``cached`` state instead of freed. Pages an
-        identical-content index entry already covers release normally
-        (no double-indexing); the slot's own claims are dropped first."""
+        """Release a retired/preempted slot's pages, parking its
+        committed full pages in the prefix cache
+        (:meth:`_cacheable_cols`) instead of freeing them."""
         cache_cols = None
         if self.prefix_cache is not None:
-            self.prefix_cache.release_claims(self._claims.pop(slot, []))
-            committed = req.serve_prompt()
-            consumed = len(committed) - 1 - prefill_left
-            n_cache = max(consumed, 0) // self.cfg.page_size
-            if n_cache > 0:
-                # One small device->host sync per retirement: the physical
-                # ids backing the slot's committed prefix.
-                ids = np.asarray(
-                    self.batch.page_table[slot, :n_cache]
-                ).tolist()
-                assert all(p >= 0 for p in ids), (slot, ids)
-                adopted = self.prefix_cache.insert(committed, ids)
-                cache_cols = np.zeros(
-                    (self.runner.page_spec.max_pages,), bool
-                )
-                cache_cols[:n_cache] = adopted
+            cache_cols = self._cacheable_cols(
+                req, prefill_left, self._claims.pop(slot, []),
+                self.batch.page_table[slot],
+            )
         return self.runner.release_slot(self.batch, slot, cache_cols)
 
     def _finish_reason(self, req: RequestState) -> str:

@@ -53,12 +53,29 @@ Pieces:
   evicted LRU — removed from the index and pushed back onto the free
   stack — only when the budget says the next dispatch could otherwise
   run the free stack dry (:meth:`PageBudget.evict_deficit`).
+* the **staging lane** (``EngineConfig(async_prefill=True)``) — pages
+  popped by the background prefill program carry a ``staged`` mark:
+  they are referenced (ref 1, held by a *staging-lane* table, not a
+  decode slot's), hold partially-written prompt K/V, and are invisible
+  to decode — no decode slot's page table maps them until the prompt's
+  final chunk lands and the engine *adopts* the staging table into a
+  decode slot (:func:`host_adopt_stage`: table install + ``staged``
+  clear — a mask flip, never a pool copy). Staged pages are counted in
+  :class:`PageBudget` (``note_stage``) at the slot's eventual decode
+  worst case, so adoption provably never needs pages the pool cannot
+  supply.
 
 Page lifecycle (each physical page):
 
     free ──ensure──▶ referenced ──release(cache)──▶ cached ──host_evict──▶ free
     (on stack,        (ref ≥ 1)      ▲    (ref 0, off stack,   (back on stack)
-     ref 0)                          └────claim── content kept)
+     ref 0)              ▲           └────claim── content kept)
+      │                  │ host_adopt_stage (ready flip: staged → decode-
+      │                  │ visible, same physical page, zero copies)
+      └─ensure(staged)─▶ staging ──release──▶ free | cached
+         (ref 1, held by a prefilling request, invisible to decode;
+          a killed background prefill parks its fully-written pages
+          as ``cached`` — they are already indexable prompt K/V)
 
 The allocator is exercised by both models' caches with a *single* page
 table: target and drafter pools are indexed by the same physical page
@@ -84,12 +101,17 @@ class PagePool(NamedTuple):
     a cached page whose refcount reaches 0 stays OFF the free stack
     (its K/V content must survive for future claims) until the host
     evicts it (:func:`host_evict`). The stack and the cached set are
-    always disjoint."""
+    always disjoint. ``staged[p]`` marks pages held by the async
+    staging lane — referenced by a *prefilling* request's staging
+    table, invisible to every decode slot until adoption clears the
+    mark (:func:`host_adopt_stage`); staged pages are never free,
+    never cached, and never mapped by a decode slot's table."""
 
     free_stack: jax.Array  # (num_pages,) int32
     free_count: jax.Array  # () int32
     ref: jax.Array         # (num_pages,) int32
     cached: jax.Array      # (num_pages,) bool
+    staged: jax.Array      # (num_pages,) bool
 
 
 @dataclass(frozen=True)
@@ -121,9 +143,14 @@ def path_transient_pages(spec: PageSpec, gamma: int) -> int:
 
 def spec_of(cfg) -> PageSpec | None:
     """Derive the pool geometry from an engine config. ``num_pages=None``
-    fully provisions the pool (``max_slots * max_pages`` plus the forked
-    paths' transient for multi-path engines: no over-subscription,
-    admission never blocks, preemption never fires)."""
+    fully provisions the pool: ``max_slots * max_pages`` plus the forked
+    paths' transient for multi-path engines, plus — for async-prefill
+    engines — one more worst-case slot term per *staging* lane (each
+    staged request reserves its eventual decode worst case in the
+    budget, and ``PageBudget.worst_pages`` never exceeds ``max_pages +
+    fork_extra``). No over-subscription: admission never blocks,
+    preemption never fires, and the staging lane is never starved while
+    decode slots sit at their worst case."""
     if not getattr(cfg, "paged", False):
         return None
     ps = cfg.page_size
@@ -134,9 +161,13 @@ def spec_of(cfg) -> PageSpec | None:
         num_paths * path_transient_pages(spec, cfg.gamma)
         if num_paths > 1 else 0
     )
+    stage_lanes = (
+        getattr(cfg, "stage_slots", 0)
+        if getattr(cfg, "async_prefill", False) else 0
+    )
     num_pages = cfg.num_pages
     if num_pages is None:
-        num_pages = cfg.max_slots * (max_pages + fork_extra)
+        num_pages = (cfg.max_slots + stage_lanes) * (max_pages + fork_extra)
     assert num_pages >= max_pages + fork_extra, (
         f"pool of {num_pages} pages cannot hold one full-length slot "
         f"({max_pages} pages + {fork_extra} fork transient); raise "
@@ -151,6 +182,7 @@ def init_pool(spec: PageSpec) -> PagePool:
         free_count=jnp.asarray(spec.num_pages, jnp.int32),
         ref=jnp.zeros((spec.num_pages,), jnp.int32),
         cached=jnp.zeros((spec.num_pages,), bool),
+        staged=jnp.zeros((spec.num_pages,), bool),
     )
 
 
@@ -169,6 +201,8 @@ def ensure(
     pool: PagePool,
     need_len: jax.Array,    # (B,) int32 — cover positions [0, need_len)
     mask: jax.Array,        # (B,) bool — slots requesting coverage
+    *,
+    mark_staged: bool = False,
 ):
     """Grow each masked slot's page table to cover ``need_len`` tokens.
 
@@ -176,7 +210,10 @@ def ensure(
     slot. Returns ``(page_table, pages_used, pool, ok)`` where ``ok[b]``
     is False iff slot ``b`` asked for pages the pool could not supply
     (the caller must then exclude the slot from the step — the host
-    budget guarantees this never happens in the serving engine)."""
+    budget guarantees this never happens in the serving engine).
+    ``mark_staged=True`` (the background prefill program) additionally
+    stamps every granted page ``staged``: referenced by a staging-lane
+    table, invisible to decode until adoption clears the mark."""
     ps = spec.page_size
     need = jnp.clip((need_len + ps - 1) // ps, 0, spec.max_pages)
     need = jnp.where(mask, need, pages_used)
@@ -198,11 +235,14 @@ def ensure(
         jnp.where(take, ids, -1), mode="drop"
     )
     pages_used = pages_used + granted
-    ref = pool.ref.at[jnp.where(take, ids, spec.num_pages)].set(
-        1, mode="drop"
-    )
+    granted_ids = jnp.where(take, ids, spec.num_pages)
+    ref = pool.ref.at[granted_ids].set(1, mode="drop")
+    staged = pool.staged
+    if mark_staged:
+        staged = staged.at[granted_ids].set(True, mode="drop")
     pool = PagePool(
-        pool.free_stack, pool.free_count - jnp.sum(granted), ref, pool.cached
+        pool.free_stack, pool.free_count - jnp.sum(granted), ref,
+        pool.cached, staged,
     )
     return page_table, pages_used, pool, ok
 
@@ -225,8 +265,10 @@ def release(
     refcount 0 they park off-stack, content intact, until the host
     claims them again or evicts them. ``cache_cols`` marks released
     entries that should *enter* the cached state (the host registered
-    them in the prefix index in the same breath). Returns
-    ``(page_table, pages_used, pool)``."""
+    them in the prefix index in the same breath). Every released entry
+    leaves the ``staged`` state: a staging table dropping its claim
+    either frees the page or (killed background prefill, fully-written
+    page) parks it cached. Returns ``(page_table, pages_used, pool)``."""
     jj = jnp.arange(spec.max_pages)[None]
     give = mask[:, None] & (jj < pages_used[:, None]) & (page_table >= 0)
     entries = jnp.where(give, page_table, spec.num_pages)  # OOB -> drop
@@ -235,6 +277,7 @@ def release(
         cached = cached.at[
             jnp.where(give & cache_cols, page_table, spec.num_pages)
         ].set(True, mode="drop")
+    staged = pool.staged.at[entries].set(False, mode="drop")
     ref = pool.ref.at[entries].add(
         -give.astype(jnp.int32), mode="drop"
     )
@@ -251,7 +294,9 @@ def release(
     )
     page_table = jnp.where(mask[:, None], -1, page_table)
     pages_used = jnp.where(mask, 0, pages_used)
-    pool = PagePool(stack, pool.free_count + jnp.sum(freed), ref, cached)
+    pool = PagePool(
+        stack, pool.free_count + jnp.sum(freed), ref, cached, staged
+    )
     return page_table, pages_used, pool
 
 
@@ -288,9 +333,7 @@ def fork(
     ref = pool.ref.at[entries].add(
         jnp.where(mapped, num_paths - 1, 0), mode="drop"
     )
-    return path_tables, path_used, PagePool(
-        pool.free_stack, pool.free_count, ref, pool.cached
-    )
+    return path_tables, path_used, pool._replace(ref=ref)
 
 
 def cow_ensure(
@@ -383,7 +426,9 @@ def cow_ensure(
     stack = pool.free_stack.at[
         jnp.where(freed, base + idx, p_sent)
     ].set(jnp.arange(spec.num_pages), mode="drop")
-    pool = PagePool(stack, base + jnp.sum(freed), ref, pool.cached)
+    pool = PagePool(
+        stack, base + jnp.sum(freed), ref, pool.cached, pool.staged
+    )
 
     copy_src = jnp.where(cow_take, phys_w, -1)
     copy_dst = jnp.where(cow_take, cow_new, -1)
@@ -414,9 +459,7 @@ def host_claim_prefix(
     page_table = page_table.at[slot, :n].set(ids)
     pages_used = pages_used.at[slot].set(n)
     ref = pool.ref.at[ids].add(1)
-    return page_table, pages_used, PagePool(
-        pool.free_stack, pool.free_count, ref, pool.cached
-    )
+    return page_table, pages_used, pool._replace(ref=ref)
 
 
 def host_evict(spec: PageSpec, pool: PagePool, page_ids: list[int]) -> PagePool:
@@ -430,7 +473,38 @@ def host_evict(spec: PageSpec, pool: PagePool, page_ids: list[int]) -> PagePool:
     ids = jnp.asarray(page_ids, jnp.int32)
     cached = pool.cached.at[ids].set(False)
     stack = pool.free_stack.at[pool.free_count + jnp.arange(n)].set(ids)
-    return PagePool(stack, pool.free_count + n, pool.ref, cached)
+    return pool._replace(
+        free_stack=stack, free_count=pool.free_count + n, cached=cached
+    )
+
+
+def host_adopt_stage(
+    spec: PageSpec,
+    page_table: jax.Array,  # (B, max_pages) — DECODE slot tables
+    pages_used: jax.Array,  # (B,)
+    pool: PagePool,
+    slot: int,
+    page_ids: list[int],
+):
+    """Adopt a completed background prefill into decode slot ``slot``:
+    install the staging table's physical ids as the slot's table prefix
+    and clear their ``staged`` marks — the ready flip. The staging
+    lane's claim (ref 1 per page, popped by the prefill program's
+    ``ensure(mark_staged=True)``) transfers to the decode slot, so
+    refcounts are untouched and not a byte of K/V moves: the pages the
+    prefill program wrote are the pages decode will read. Runs eagerly
+    at adoption time (host-driven, like :func:`host_claim_prefix`); the
+    caller zeroes the staging row's table WITHOUT releasing it
+    (``repro.serving.batch.clear_stage_slot``). ``page_ids`` may be
+    empty (a one-token or fully-claimed prompt stages no pages)."""
+    n = len(page_ids)
+    if n == 0:
+        return page_table, pages_used, pool
+    ids = jnp.asarray(page_ids, jnp.int32)
+    page_table = page_table.at[slot, :n].set(ids)
+    pages_used = pages_used.at[slot].set(n)
+    staged = pool.staged.at[ids].set(False)
+    return page_table, pages_used, pool._replace(staged=staged)
 
 
 @dataclass
@@ -614,12 +688,20 @@ class PageBudget:
     hold :func:`path_transient_pages` fresh pages (CoW copies plus
     speculative growth). Invariant enforced by the scheduler/engine: the
     sum of worst-case pages over live slots never exceeds ``num_pages``
-    at dispatch time, so the device-side allocators cannot fail."""
+    at dispatch time, so the device-side allocators cannot fail.
+
+    The async staging lane is budgeted alongside (``stage_len``): a
+    staging slot reserves its *eventual decode* worst case from the
+    moment it is staged — the background prefill program itself writes
+    at most ``pages_for(plen - 1)`` of that — so adoption is a pure
+    key move (:meth:`note_adopt`) that cannot change ``used_worst()``
+    and provably never needs pages the pool cannot supply."""
 
     spec: PageSpec
     gamma: int
     num_paths: int = 1
     slot_len: dict[int, int] = field(default_factory=dict)
+    stage_len: dict[int, int] = field(default_factory=dict)
 
     def worst_pages(self, length: int) -> int:
         worst = self.spec.pages_for(length + 2 * (self.gamma + 1))
@@ -631,13 +713,21 @@ class PageBudget:
         return worst
 
     def used_worst(self) -> int:
-        return sum(self.worst_pages(n) for n in self.slot_len.values())
+        return (
+            sum(self.worst_pages(n) for n in self.slot_len.values())
+            + sum(self.worst_pages(n) for n in self.stage_len.values())
+        )
 
     def occupancy_pages(self) -> int:
         """Exact committed-page count across live slots — the host-lagged
         pool occupancy the per-step allocation telemetry reports (the
-        device may briefly hold up to ``used_worst()``)."""
-        return sum(self.spec.pages_for(n) for n in self.slot_len.values())
+        device may briefly hold up to ``used_worst()``). Staging lanes
+        count at full-prompt coverage — an upper bound on what their
+        background prefill has materialized so far."""
+        return (
+            sum(self.spec.pages_for(n) for n in self.slot_len.values())
+            + sum(self.spec.pages_for(n) for n in self.stage_len.values())
+        )
 
     def can_admit(self, prompt_len: int) -> bool:
         """Cached pages don't block admission: reclaimable ones are
@@ -675,3 +765,19 @@ class PageBudget:
 
     def note_release(self, slot: int) -> None:
         self.slot_len.pop(slot, None)
+
+    # -- async staging lane -------------------------------------------------
+
+    def note_stage(self, sid: int, prompt_len: int) -> None:
+        """Reserve a staging slot at its eventual decode worst case."""
+        self.stage_len[sid] = prompt_len
+
+    def note_unstage(self, sid: int) -> None:
+        """Killed background prefill: drop the staging reservation."""
+        self.stage_len.pop(sid, None)
+
+    def note_adopt(self, sid: int, slot: int) -> None:
+        """Completed prefill adopted into a decode slot: pure key move —
+        ``used_worst()`` is unchanged, so adoption can never trip the
+        preemption threshold nor fail allocation."""
+        self.slot_len[slot] = self.stage_len.pop(sid)

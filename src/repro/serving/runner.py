@@ -17,6 +17,21 @@ Two fixed-shape programs cover the whole request lifecycle:
   small :class:`StepOutputs` tuple per step and the bookkeeping arrays
   stay device-resident (see ``repro.serving.batch``).
 
+* :func:`stage_prefill_body` — the **async staging lane**
+  (``cfg.async_prefill``): a detached chunked-prefill program over the
+  engine's :class:`~repro.serving.batch.StageState` — its own slot
+  bookkeeping, disjoint from :class:`BatchState` — that writes both
+  models' prompt K/V directly into *staged* pool pages
+  (``paging.ensure(mark_staged=True)``) and flips each slot's ``ready``
+  flag in-program when the final chunk lands. Because no decode slot's
+  page table maps a staged page, :func:`decode_body` is structurally
+  blind to in-flight prefill: the engine dispatches both programs in
+  the same host iteration (decode first) and a completed prefill joins
+  the decode batch by *adoption* — table install + ``staged``-mark
+  clear, zero K/V movement. Requires fully-paged caches: pooled
+  storage is what lets prompt state written at batch index ``i`` of a
+  staging program be read at batch index ``j`` of the decode program.
+
 * :func:`decode_body_multipath` — the ``num_paths > 1`` variant: after
   the shared drafter catch-up, the slot's page table is **forked** into
   K aliased path tables (``paging.fork``), each path copy-on-writes the
@@ -61,7 +76,7 @@ from repro.models.attention import PagedKV
 from repro.models.model import Model
 from repro.models.ssm import SSMEntry
 from repro.serving import paging
-from repro.serving.batch import BatchState
+from repro.serving.batch import BatchState, StageState
 
 
 class StepOutputs(NamedTuple):
@@ -274,6 +289,86 @@ def prefill_body(
     t_pref = batch.t_pref + n
     ready = batch.ready | (batch.active & (t_pref >= batch.lens - 1))
     return t_cache, d_cache, batch._replace(t_pref=t_pref, ready=ready)
+
+
+def stage_prefill_body(
+    target: Model, drafter: Model, cfg,
+    t_params, d_params, t_cache, d_cache,
+    stage: StageState, pool: paging.PagePool,
+):
+    """Advance every staging slot by one fixed-size prompt chunk — the
+    background half of the disaggregated serve loop.
+
+    Mirrors :func:`prefill_body` over :class:`StageState` instead of
+    :class:`BatchState`: pages are popped with ``mark_staged=True`` (so
+    the staging lane's writes are provably invisible to decode until
+    adoption), both models consume up to ``cfg.prefill_chunk`` tokens
+    from ``seq_buf[pos:]`` stopping at ``plen - 1``, and a slot whose
+    final chunk lands flips ``ready`` in-program. The caches are the
+    engine's shared pytrees — fully paged by the ``async_prefill``
+    gate, so every write is a pool scatter through the *staging* table
+    and the per-slot write suppression happens at scatter time
+    (``kv_write_mask``); no commit/mask select is needed afterwards
+    (``commit_cache`` is the identity for pooled entries)."""
+    spec = paging.spec_of(cfg)
+    c = cfg.prefill_chunk
+    rem = stage.plen - 1 - stage.pos
+    pending = stage.active & ~stage.ready
+    n = jnp.where(pending, jnp.clip(rem, 0, c), 0)  # tokens this chunk
+    table, used, pool, ok = paging.ensure(
+        spec, stage.page_table, stage.pages_used, pool,
+        stage.pos + n, n > 0, mark_staged=True,
+    )
+    n = jnp.where(ok, n, 0)
+    nn = jnp.maximum(n, 1)                          # safe valid_len
+    touched = n > 0
+
+    idx = stage.pos[:, None] + jnp.arange(c)[None]
+    toks = jnp.take_along_axis(
+        stage.seq_buf, jnp.minimum(idx, stage.max_len - 1), axis=1
+    )
+
+    def advance(model, params, cache):
+        _, vcache, _ = model.apply(
+            params, toks, cache=cache, lens=stage.pos,
+            mode="verify", valid_len=nn, last_logits_only=True,
+            page_table=table, kv_write_mask=touched,
+        )
+        return vcache
+
+    t_cache = advance(target, t_params, t_cache)
+    d_cache = advance(drafter, d_params, d_cache)
+
+    pos = stage.pos + n
+    ready = stage.ready | (stage.active & (pos >= stage.plen - 1))
+    stage = stage._replace(
+        pos=pos, ready=ready, page_table=table, pages_used=used
+    )
+    return t_cache, d_cache, stage, pool
+
+
+def _release_stage_row(
+    spec, stage: StageState, pool: paging.PagePool, sid, cache_cols
+):
+    """Kill one staging row (background prefill preempted): drop its
+    page claims — entries flagged in ``cache_cols`` park ``cached``
+    (the engine registered the fully-written pages in the prefix index
+    in the same breath), the rest return to the free stack — and clear
+    the row. Adoption does NOT come through here: an adopted row's
+    pages transfer to the decode slot and only the bookkeeping resets
+    (``batch.clear_stage_slot``)."""
+    mask = jnp.arange(stage.num_slots) == sid
+    table, used, pool = paging.release(
+        spec, stage.page_table, stage.pages_used, pool, mask,
+        cache_cols=mask[:, None] & cache_cols[None, :],
+    )
+    z = jnp.zeros_like(stage.pos)
+    return stage._replace(
+        active=stage.active & ~mask, ready=stage.ready & ~mask,
+        pos=jnp.where(mask, z, stage.pos),
+        plen=jnp.where(mask, z, stage.plen),
+        page_table=table, pages_used=used,
+    ), pool
 
 
 def decode_body(
@@ -492,10 +587,12 @@ def _assert_all_paged(
     feature: str = "num_paths",
 ):
     """Multi-path serving runs K paths as flattened lanes over shared
-    page pools, and prefix-cache claims restore pooled K/V only — either
-    way every cache entry must be a :class:`PagedKV` (no dense rings,
-    SSM states or cross-attention caches, whose per-slot batch axes
-    cannot follow a fork or survive a claim)."""
+    page pools, prefix-cache claims restore pooled K/V only, and the
+    async staging lane prefills at one batch index what decode reads at
+    another — in every case each cache entry must be a
+    :class:`PagedKV` (no dense rings, SSM states or cross-attention
+    caches, whose per-slot batch axes cannot follow a fork, survive a
+    claim, or cross from the staging program to the decode program)."""
     cache = jax.eval_shape(
         lambda: model.init_cache(
             1, cfg.max_len, chunk_slack=chunk_slack, page_pool=(1, 1)
@@ -509,10 +606,11 @@ def _assert_all_paged(
         if not isinstance(e, PagedKV)
     ]
     if bad:
-        want = (
-            f"num_paths={cfg.num_paths}" if feature == "num_paths"
-            else "prefix_cache=True"
-        )
+        want = {
+            "num_paths": f"num_paths={cfg.num_paths}",
+            "prefix_cache": "prefix_cache=True",
+            "async_prefill": "async_prefill=True",
+        }[feature]
         raise ValueError(
             f"{want} needs fully-paged caches, but the "
             f"{role} model {model.cfg.name!r} has non-paged entries "
@@ -546,6 +644,28 @@ class Runner:
                     model, cfg, self.chunk_slack, role,
                     feature="prefix_cache",
                 )
+        if getattr(cfg, "async_prefill", False):
+            # The staging program's batch is the stage-slot count, not
+            # max_slots: only pooled (batch-free) K/V written there can
+            # be read back by the decode program after adoption.
+            if self.page_spec is None:
+                raise ValueError("async_prefill=True requires paged=True")
+            if getattr(cfg, "stage_slots", 0) < 1:
+                raise ValueError(
+                    "async_prefill=True needs at least one staging lane "
+                    f"(stage_slots={cfg.stage_slots})"
+                )
+            for model, role in ((target, "target"), (drafter, "drafter")):
+                _assert_all_paged(
+                    model, cfg, self.chunk_slack, role,
+                    feature="async_prefill",
+                )
+            self._stage_prefill_fn = jax.jit(
+                partial(stage_prefill_body, target, drafter, cfg)
+            )
+            self._release_stage_fn = jax.jit(
+                partial(_release_stage_row, self.page_spec)
+            )
         if getattr(cfg, "num_paths", 1) > 1:
             if self.page_spec is None:
                 raise ValueError("num_paths > 1 requires paged=True")
@@ -588,6 +708,30 @@ class Runner:
 
     def prefill_step(self, t_params, d_params, t_cache, d_cache, batch):
         return self._prefill_fn(t_params, d_params, t_cache, d_cache, batch)
+
+    def stage_prefill_step(
+        self, t_params, d_params, t_cache, d_cache, stage, pool
+    ):
+        """One background-prefill chunk over the staging lane. Returns
+        ``(t_cache, d_cache, stage, pool)``."""
+        return self._stage_prefill_fn(
+            t_params, d_params, t_cache, d_cache, stage, pool
+        )
+
+    def release_stage(
+        self, stage: StageState, pool: paging.PagePool, sid: int,
+        cache_cols=None,
+    ):
+        """Kill a staging row: release its staged pages (entries flagged
+        in ``cache_cols`` park in the prefix cache) and clear the row."""
+        spec = self.page_spec
+        if cache_cols is None:
+            cache_cols = jnp.zeros((spec.max_pages,), bool)
+        else:
+            cache_cols = jnp.asarray(cache_cols, bool)
+        return self._release_stage_fn(
+            stage, pool, jnp.asarray(sid, jnp.int32), cache_cols
+        )
 
     def decode_step(self, t_params, d_params, t_cache, d_cache, batch, key):
         return self._decode_fn(

@@ -26,8 +26,20 @@ its own prefix rather than re-prefilling it (the engine reports the
 claim via :meth:`Scheduler.note_prefix_claim`, which shrinks the
 prefill mirror).
 
-It never touches device arrays; the engine translates admissions and
-retirements into :mod:`repro.serving.batch` updates.
+Async-prefill engines (``EngineConfig(async_prefill=True)``) run the
+scheduler **two-lane**: the submit queue feeds *staging* slots (the
+background prefill program's lanes, mirrored by ``_stage_left`` exactly
+like the decode lanes' prefill mirror), and a *ready queue* — staging
+slots whose final chunk has dispatched — feeds decode slots by
+**adoption** (:meth:`adopt`): the request moves from ``stage_len`` to
+``slot_len`` in the page budget (a pure key move, so adoption can never
+fail allocation) and its decode slot admits already-``ready``. Under
+pressure the engine kills *staging* lanes first (least progress,
+:meth:`pick_stage_victim`), then preempts decode slots LIFO as before;
+either way the victim requeues at the front.
+
+It never touches device arrays; the engine translates admissions,
+adoptions and retirements into :mod:`repro.serving.batch` updates.
 """
 
 from __future__ import annotations
@@ -55,6 +67,12 @@ class RequestState:
     # requests admitted in one admit() call share the same clock reading,
     # so a timestamp tie-break silently degrades to "highest slot index".
     admit_seq: int = -1
+    # TTFT breakdown anchors (set only while first_token_t is None, so
+    # they describe the attempt that actually produced the first token;
+    # earlier preempted attempts are visible as ttft_s exceeding the
+    # three components' sum):
+    stage_t: float | None = None   # prefill started (staging/admission)
+    ready_t: float | None = None   # final prefill chunk dispatched
     first_token_t: float | None = None
     finish_t: float | None = None
     finish_reason: str | None = None
@@ -82,6 +100,35 @@ class RequestState:
         if self.first_token_t is None:
             return None
         return self.first_token_t - self.submit_t
+
+    # -- TTFT breakdown (what async prefill moves between buckets) --------
+
+    @property
+    def ttft_queue_s(self) -> float | None:
+        """Submit → prefill start (queue wait; staging admission in the
+        async engine, decode-slot admission in the serial one)."""
+        if self.first_token_t is None or self.stage_t is None:
+            return None
+        return self.stage_t - self.submit_t
+
+    @property
+    def ttft_prefill_s(self) -> float | None:
+        """Prefill start → final prompt chunk dispatched."""
+        if (
+            self.first_token_t is None
+            or self.ready_t is None
+            or self.stage_t is None
+        ):
+            return None
+        return self.ready_t - self.stage_t
+
+    @property
+    def ttft_decode_s(self) -> float | None:
+        """Prefill complete → first token materialized on the host
+        (adoption wait + first decode iterations)."""
+        if self.first_token_t is None or self.ready_t is None:
+            return None
+        return self.first_token_t - self.ready_t
 
     @property
     def tokens_per_s(self) -> float | None:
@@ -125,6 +172,7 @@ class Scheduler:
         prefill_chunk: int,
         clock=time.perf_counter,
         budget: PageBudget | None = None,
+        num_stage_slots: int = 0,
     ):
         self.num_slots = num_slots
         self.default_max_new = default_max_new
@@ -134,6 +182,12 @@ class Scheduler:
         self.queue: deque[RequestState] = deque()
         self.slot_req: list[RequestState | None] = [None] * num_slots
         self._prefill_left = [0] * num_slots
+        # Async staging lane (num_stage_slots > 0): the submit queue
+        # feeds staging slots; completed stages queue for adoption.
+        self.num_stage_slots = num_stage_slots
+        self.stage_req: list[RequestState | None] = [None] * num_stage_slots
+        self._stage_left = [0] * num_stage_slots
+        self.ready_q: deque[int] = deque()  # staged sids awaiting adoption
         self.done: dict[int, RequestState] = {}
         self._next_rid = 0
         self._admit_seq = 0
@@ -158,6 +212,22 @@ class Scheduler:
         )
         return rid
 
+    def _pop_next(self, now: float) -> RequestState:
+        """Pop the queue head and stamp the admission bookkeeping BOTH
+        lanes share: the admit clock, requeue-wait accounting for
+        resumed preemption victims, the monotonic ``admit_seq`` (LIFO
+        victim order), and the TTFT prefill-start anchor."""
+        req = self.queue.popleft()
+        req.admit_t = now
+        if req._preempt_t is not None:  # resuming after preemption
+            req.requeue_wait_s += now - req._preempt_t
+            req._preempt_t = None
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        if req.first_token_t is None:
+            req.stage_t = now
+        return req
+
     def admit(self) -> list[tuple[int, RequestState]]:
         """Fill free slots from the queue (FIFO). With a page budget,
         admission stops at the first request the pool cannot cover
@@ -171,16 +241,15 @@ class Scheduler:
                 plen = len(self.queue[0].serve_prompt())
                 if self.budget is not None and not self.budget.can_admit(plen):
                     break
-                req = self.queue.popleft()
-                req.admit_t = now
-                if req._preempt_t is not None:  # resuming after preemption
-                    req.requeue_wait_s += now - req._preempt_t
-                    req._preempt_t = None
-                req.admit_seq = self._admit_seq
-                self._admit_seq += 1
+                req = self._pop_next(now)
                 self.slot_req[slot] = req
                 # Both models must consume plen - 1 prompt tokens.
                 self._prefill_left[slot] = max(plen - 1, 0)
+                if (
+                    self._prefill_left[slot] == 0
+                    and req.first_token_t is None
+                ):
+                    req.ready_t = now
                 if self.budget is not None:
                     self.budget.note_admit(slot, plen)
                 admitted.append((slot, req))
@@ -193,6 +262,17 @@ class Scheduler:
         self._prefill_left[slot] = max(
             self._prefill_left[slot] - prefix_len, 0
         )
+        req = self.slot_req[slot]
+        if (
+            self._prefill_left[slot] == 0
+            and req is not None
+            and req.first_token_t is None
+        ):
+            # Overwrite unconditionally, like every other ready_t site:
+            # a preempted-then-resumed request whose resume is a
+            # full-prefix claim must not keep the FIRST attempt's
+            # (earlier) ready_t, or ttft_prefill_s goes negative.
+            req.ready_t = self.clock()
 
     # -- prefill mirror ----------------------------------------------------
 
@@ -208,11 +288,19 @@ class Scheduler:
         total prompt tokens consumed by the dispatch — the engine's
         prefill-volume telemetry (what prefix-cache hits shrink)."""
         consumed = 0
+        now = self.clock()
         for slot in range(self.num_slots):
-            if self.slot_req[slot] is not None:
+            req = self.slot_req[slot]
+            if req is not None:
                 left = self._prefill_left[slot]
                 consumed += min(left, self.prefill_chunk)
                 self._prefill_left[slot] = max(left - self.prefill_chunk, 0)
+                if (
+                    left > 0
+                    and self._prefill_left[slot] == 0
+                    and req.first_token_t is None
+                ):
+                    req.ready_t = now
         return consumed
 
     def prefill_left(self, slot: int) -> int:
@@ -228,6 +316,136 @@ class Scheduler:
             for slot, req in enumerate(self.slot_req)
             if req is not None and self._prefill_left[slot] == 0
         }
+
+    # -- async staging lane ------------------------------------------------
+
+    def stage_admit(self) -> list[tuple[int, RequestState]]:
+        """Fill free *staging* slots from the queue (FIFO, same
+        head-of-line budget rule as :meth:`admit` — a staging slot
+        reserves its eventual decode worst case up front, which is what
+        makes adoption infallible). Returns the new (sid, request)
+        pairs; the engine stages them on device."""
+        staged = []
+        now = self.clock()
+        for sid in range(self.num_stage_slots):
+            if self.stage_req[sid] is None and self.queue:
+                plen = len(self.queue[0].serve_prompt())
+                if self.budget is not None and not self.budget.can_admit(plen):
+                    break
+                req = self._pop_next(now)
+                self.stage_req[sid] = req
+                self._stage_left[sid] = max(plen - 1, 0)
+                if self.budget is not None:
+                    self.budget.note_stage(sid, plen)
+                self._stage_check_ready(sid)
+                staged.append((sid, req))
+        return staged
+
+    def note_stage_claim(self, sid: int, prefix_len: int) -> None:
+        """Prefix-cache hit for a just-staged slot (the async twin of
+        :meth:`note_prefix_claim`)."""
+        self._stage_left[sid] = max(self._stage_left[sid] - prefix_len, 0)
+        self._stage_check_ready(sid)
+
+    def _stage_check_ready(self, sid: int) -> None:
+        if self._stage_left[sid] == 0 and sid not in self.ready_q:
+            self.ready_q.append(sid)
+            req = self.stage_req[sid]
+            if req is not None and req.first_token_t is None:
+                req.ready_t = self.clock()
+
+    def stage_pending(self) -> bool:
+        """Any staging slot still owing prefill chunks?"""
+        return any(
+            left > 0 and self.stage_req[sid] is not None
+            for sid, left in enumerate(self._stage_left)
+        )
+
+    def note_stage_prefill_dispatch(self) -> int:
+        """Account one dispatched background-prefill chunk (the async
+        twin of :meth:`note_prefill_dispatch`): every staging slot
+        advanced by ``min(chunk, remaining)``; slots reaching zero join
+        the ready queue in sid order. Returns the prompt tokens the
+        dispatch consumed."""
+        consumed = 0
+        for sid in range(self.num_stage_slots):
+            if self.stage_req[sid] is not None:
+                left = self._stage_left[sid]
+                consumed += min(left, self.prefill_chunk)
+                self._stage_left[sid] = max(left - self.prefill_chunk, 0)
+                self._stage_check_ready(sid)
+        return consumed
+
+    def adopt(self) -> list[tuple[int, int, RequestState]]:
+        """Move completed background prefills into free decode slots
+        (ready-queue order — stage-completion FIFO). The page budget's
+        reservation transfers key-for-key, so adoption never fails and
+        never changes ``used_worst()``. Returns (sid, slot, request)
+        triples; the engine performs the device-side adoption (staged
+        table install + ``staged``-mark clear + ``admit_slot`` with the
+        full prompt already consumed)."""
+        adopted = []
+        free = [s for s, r in enumerate(self.slot_req) if r is None]
+        while self.ready_q and free:
+            sid = self.ready_q.popleft()
+            req = self.stage_req[sid]
+            assert req is not None and self._stage_left[sid] == 0, sid
+            slot = free.pop(0)
+            self.stage_req[sid] = None
+            self.slot_req[slot] = req
+            self._prefill_left[slot] = 0
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            if self.budget is not None:
+                self.budget.note_adopt(sid, slot)
+            adopted.append((sid, slot, req))
+        return adopted
+
+    def pick_stage_victim(self) -> int | None:
+        """Staging slot to kill under page pressure: most recently
+        staged first (LIFO by ``admit_seq``, like decode preemption) —
+        background prefills carry the least progress, so they die
+        before any decoding slot is preempted."""
+        live = [
+            (req.admit_seq, sid)
+            for sid, req in enumerate(self.stage_req)
+            if req is not None
+        ]
+        if not live:
+            return None
+        return max(live)[1]
+
+    def kill_stage(self, sid: int) -> RequestState:
+        """Kill a background prefill: requeue its request at the FRONT
+        (its committed progress is just the prompt — and, with the
+        prefix cache on, the engine parks its fully-written pages, so
+        the retry usually re-claims them)."""
+        req = self.stage_req[sid]
+        assert req is not None, sid
+        self.stage_req[sid] = None
+        self._stage_left[sid] = 0
+        if sid in self.ready_q:
+            self.ready_q.remove(sid)
+        if self.budget is not None:
+            self.budget.note_unstage(sid)
+        self._requeue_victim(req)
+        return req
+
+    def _requeue_victim(self, req: RequestState) -> None:
+        """Shared preemption bookkeeping for BOTH lanes: count the
+        preemption, stamp the requeue-wait anchor for victims that have
+        already emitted (the coming wait must stay out of their decode
+        ``tokens_per_s`` — the PR 4 metrics rule; a restaged victim
+        killed again mid-stage still qualifies), and requeue at the
+        FRONT so progress-holding requests resume first."""
+        req.preemptions += 1
+        if req.first_token_t is not None:
+            req._preempt_t = self.clock()
+        self.queue.appendleft(req)
+
+    def stage_prefill_left(self, sid: int) -> int:
+        """Prompt tokens staging slot ``sid`` has not yet consumed."""
+        return self._stage_left[sid]
 
     # -- retirement --------------------------------------------------------
 
@@ -273,21 +491,18 @@ class Scheduler:
         ``prompt + output`` (recompute-on-resume)."""
         req = self.slot_req[slot]
         assert req is not None, slot
-        req.preemptions += 1
-        if req.first_token_t is not None:
-            # Mid-decode victim: the coming requeue wait must not count
-            # against its decode throughput.
-            req._preempt_t = self.clock()
         self.slot_req[slot] = None
         self._prefill_left[slot] = 0
         if self.budget is not None:
             self.budget.note_release(slot)
-        self.queue.appendleft(req)
+        self._requeue_victim(req)
         return req
 
     def has_work(self) -> bool:
-        return bool(self.queue) or any(
-            r is not None for r in self.slot_req
+        return (
+            bool(self.queue)
+            or any(r is not None for r in self.slot_req)
+            or any(r is not None for r in self.stage_req)
         )
 
     # -- metrics -----------------------------------------------------------
@@ -302,6 +517,9 @@ class Scheduler:
                     "output_len": len(req.output),
                     "iterations": req.iterations,
                     "ttft_s": req.ttft_s,
+                    "ttft_queue_s": req.ttft_queue_s,
+                    "ttft_prefill_s": req.ttft_prefill_s,
+                    "ttft_decode_s": req.ttft_decode_s,
                     "tokens_per_s": req.tokens_per_s,
                     "e2e_tokens_per_s": req.e2e_tokens_per_s,
                     "preemptions": req.preemptions,

@@ -1,0 +1,680 @@
+"""Disaggregated async prefill (the staging lane) tests.
+
+Four layers:
+
+* allocator semantics of the ``staged`` page state — ``ensure(
+  mark_staged=True)`` stamps pages invisible-to-decode, adoption
+  (:func:`~repro.serving.paging.host_adopt_stage`) transfers them to a
+  decode slot's table by flipping marks (refcounts untouched, zero
+  copies), release clears the mark whether the page frees or parks
+  cached;
+* the two-lane :class:`~repro.serving.scheduler.Scheduler` — staging
+  admission, the ready queue, adoption as a pure budget key move,
+  stage kills, and the TTFT queue/prefill/decode breakdown;
+* the engine with ``async_prefill=True`` — bit-identical to the serial
+  engine at temperature 0 (concurrent mixed workloads, over-subscribed
+  pools with staged kills, prefix-cache composition) and for
+  sequential sampled runs; decode provably never maps a staged page
+  before its ready flip; lane-interaction telemetry emitted;
+* the hypothesis property form: under randomized admit / preempt /
+  adopt / retire traffic driven by the real PageBudget policy, device
+  allocation never fails, no staged page is ever referenced by a
+  decode table, and the pool never leaks.
+"""
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline/minimal env: keep deterministic cases running
+    from conftest import hypothesis_stub
+
+    given, settings, st = hypothesis_stub()
+
+from repro.configs import registry
+from repro.models import Model
+from repro.serving import batch as batch_mod
+from repro.serving import paging
+from repro.serving.engine import EngineConfig, SpecEngine
+from repro.serving.scheduler import Scheduler
+
+SPEC = paging.PageSpec(page_size=4, num_pages=16, max_pages=6)
+
+
+def _mk(num_slots=2, spec=SPEC):
+    table, used = paging.init_tables(spec, num_slots)
+    return table, used, paging.init_pool(spec)
+
+
+# ---------------------------------------------------------------------------
+# staged page state (allocator units)
+# ---------------------------------------------------------------------------
+
+
+class TestStagedPageState:
+    def test_mark_staged_stamps_granted_pages_only(self):
+        table, used, pool = _mk()
+        table, used, pool, ok = paging.ensure(
+            SPEC, table, used, pool, jnp.asarray([7, 5]),
+            jnp.asarray([True, False]), mark_staged=True,
+        )
+        assert bool(ok[0])
+        staged_ids = {int(p) for p in table[0, :2]}
+        assert np.asarray(pool.staged).sum() == 2
+        assert {p for p in range(16) if pool.staged[p]} == staged_ids
+        # plain ensure never stamps
+        table, used, pool, _ = paging.ensure(
+            SPEC, table, used, pool, jnp.asarray([7, 5]),
+            jnp.asarray([False, True]),
+        )
+        assert np.asarray(pool.staged).sum() == 2
+
+    def test_adopt_transfers_pages_without_touching_refcounts(self):
+        s_table, s_used, pool = _mk(1)
+        s_table, s_used, pool, _ = paging.ensure(
+            SPEC, s_table, s_used, pool, jnp.asarray([9]),
+            jnp.asarray([True]), mark_staged=True,
+        )
+        ids = [int(p) for p in s_table[0, :3]]
+        d_table, d_used = paging.init_tables(SPEC, 2)
+        ref_before = np.asarray(pool.ref).copy()
+        d_table, d_used, pool = paging.host_adopt_stage(
+            SPEC, d_table, d_used, pool, 1, ids
+        )
+        assert [int(p) for p in d_table[1, :3]] == ids
+        assert int(d_used[1]) == 3
+        assert not bool(jnp.any(pool.staged))            # ready flip
+        np.testing.assert_array_equal(np.asarray(pool.ref), ref_before)
+        # the adopted pages release exactly once, through the decode table
+        d_table, d_used, pool = paging.release(
+            SPEC, d_table, d_used, pool, jnp.asarray([False, True])
+        )
+        assert int(pool.free_count) == SPEC.num_pages
+        assert int(jnp.max(pool.ref)) == 0
+
+    def test_release_clears_staged_whether_freed_or_cached(self):
+        s_table, s_used, pool = _mk(1)
+        s_table, s_used, pool, _ = paging.ensure(
+            SPEC, s_table, s_used, pool, jnp.asarray([9]),
+            jnp.asarray([True]), mark_staged=True,
+        )
+        cc = np.zeros((1, SPEC.max_pages), bool)
+        cc[0, 0] = True  # one fully-written page parks cached
+        s_table, s_used, pool = paging.release(
+            SPEC, s_table, s_used, pool, jnp.asarray([True]),
+            cache_cols=jnp.asarray(cc),
+        )
+        assert not bool(jnp.any(pool.staged))
+        assert int(jnp.sum(pool.cached)) == 1
+        assert int(pool.free_count) == SPEC.num_pages - 1
+
+    def test_spec_of_reserves_staging_headroom(self):
+        """A fully-provisioned pool (num_pages=None) must cover the
+        staging lanes' worst-case reservations on top of the decode
+        slots', so async admission never starves and preemption never
+        fires — PageBudget.worst_pages never exceeds a slot term."""
+        kw = dict(gamma=3, max_slots=2, max_len=64, page_size=8)
+        serial = paging.spec_of(EngineConfig(**kw))
+        asyncp = paging.spec_of(
+            EngineConfig(**kw, async_prefill=True, stage_slots=2)
+        )
+        assert asyncp.max_pages == serial.max_pages
+        assert asyncp.num_pages == serial.num_pages + 2 * serial.max_pages
+        budget = paging.PageBudget(asyncp, gamma=3)
+        for slot in range(2):
+            budget.note_admit(slot, 63)
+        for sid in range(2):
+            assert budget.can_admit(63)   # staging lane never starved
+            budget.note_stage(sid, 63)
+        assert not budget.needs_preemption()
+
+    def test_budget_stage_accounting_and_adopt_key_move(self):
+        budget = paging.PageBudget(SPEC, gamma=3)
+        budget.note_stage(0, 9)
+        budget.note_admit(1, 9)
+        assert budget.used_worst() == 2 * budget.worst_pages(9)
+        before = budget.used_worst()
+        budget.note_adopt(0, 2)
+        assert budget.used_worst() == before  # pure key move
+        assert budget.stage_len == {}
+        assert budget.slot_len == {1: 9, 2: 9}
+        budget.note_stage(1, 5)
+        budget.note_unstage(1)
+        assert budget.used_worst() == before
+
+
+# ---------------------------------------------------------------------------
+# two-lane scheduler
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+class TestTwoLaneScheduler:
+    def _sched(self, **kw):
+        kw.setdefault("num_stage_slots", 2)
+        return Scheduler(2, 8, 4, clock=_FakeClock(), **kw)
+
+    def test_stage_admit_then_ready_then_adopt(self):
+        s = self._sched()
+        rids = [s.submit([1] * 9), s.submit([2] * 5), s.submit([3, 4])]
+        staged = s.stage_admit()
+        assert [sid for sid, _ in staged] == [0, 1]
+        assert s.stage_pending()
+        assert s.adopt() == []                 # nothing ready yet
+        s.note_stage_prefill_dispatch()        # 4 tokens: sid1 (4 left) done
+        assert list(s.ready_q) == [1]
+        s.note_stage_prefill_dispatch()        # sid0 (8 left) done
+        assert list(s.ready_q) == [1, 0]
+        adopted = s.adopt()
+        assert [(sid, slot) for sid, slot, _ in adopted] == [(1, 0), (0, 1)]
+        assert adopted[0][2].rid == rids[1]
+        assert s.ready_slots().keys() == {0, 1}
+        # freed staging slots pick up the queue tail
+        staged = s.stage_admit()
+        assert [sid for sid, _ in staged] == [0]
+        assert staged[0][1].rid == rids[2]
+        # two-token prompt: one chunk, ready next dispatch
+        s.note_stage_prefill_dispatch()
+        assert list(s.ready_q) == [0]
+        assert s.adopt() == []                 # decode slots full
+        s.retire(0, "length")
+        assert [(sid, slot) for sid, slot, _ in s.adopt()] == [(0, 0)]
+        assert not s.stage_pending()
+
+    def test_single_token_prompt_ready_at_staging(self):
+        s = self._sched()
+        s.submit([5])
+        s.stage_admit()
+        assert list(s.ready_q) == [0]
+        assert not s.stage_pending()
+
+    def test_kill_stage_requeues_front_and_drops_ready_entry(self):
+        s = self._sched()
+        r0 = s.submit([1] * 9)
+        r1 = s.submit([2] * 3)
+        s.stage_admit()
+        s.note_stage_prefill_dispatch()        # sid1 ready
+        assert list(s.ready_q) == [1]
+        victim = s.pick_stage_victim()
+        assert victim == 1                     # LIFO by admit_seq
+        req = s.kill_stage(victim)
+        assert req.rid == r1 and req.preemptions == 1
+        assert list(s.ready_q) == []
+        assert s.queue[0].rid == r1            # front of the queue
+        assert s.stage_req[1] is None
+        assert s.has_work()
+        assert s.stage_req[0].rid == r0
+
+    def test_stage_budget_gate_preserves_fifo(self):
+        spec = paging.PageSpec(page_size=4, num_pages=12, max_pages=10)
+        budget = paging.PageBudget(spec, gamma=3)
+        s = self._sched(budget=budget)
+        s.submit([1] * 30)                     # worst_pages(30) = 10
+        s.submit([2] * 3)
+        assert len(s.stage_admit()) == 1       # head staged...
+        assert len(s.stage_admit()) == 0       # ...short one must NOT overtake
+        assert s.queue[0].prompt == [2] * 3
+
+    def test_ttft_breakdown_components(self):
+        s = self._sched()
+        s.submit([1] * 9)                      # submit_t = 1
+        (sid, req), = s.stage_admit()          # stage_t = 2
+        s.note_stage_prefill_dispatch()        # 4/8 tokens: not ready
+        s.note_stage_prefill_dispatch()        # ready_t = 3
+        (_, slot, _), = s.adopt()
+        req.first_token_t = s.clock()          # 4 (engine does this)
+        req.output = [7]
+        s.retire(slot, "length")
+        assert req.ttft_queue_s == 1.0         # submit -> staged
+        assert req.ttft_prefill_s == 1.0       # staged -> ready
+        assert req.ttft_decode_s == 1.0        # ready -> first token
+        assert req.ttft_s == req.ttft_queue_s + req.ttft_prefill_s + \
+            req.ttft_decode_s
+        m = s.request_metrics(gamma=3)[0]
+        assert m["ttft_queue_s"] == 1.0
+        assert m["ttft_prefill_s"] == 1.0
+        assert m["ttft_decode_s"] == 1.0
+
+    def test_resume_full_claim_refreshes_ready_t(self):
+        """A request preempted after its prefill completed (but before
+        its first token) whose RESUME is a full-prefix cache claim must
+        refresh ready_t — keeping the first attempt's earlier anchor
+        made ttft_prefill_s negative."""
+        s = Scheduler(1, 8, 4, clock=_FakeClock())
+        s.submit([1] * 9)
+        s.admit()
+        s.note_prefill_dispatch()
+        s.note_prefill_dispatch()              # ready_t set (attempt 1)
+        first_ready = s.slot_req[0].ready_t
+        s.preempt(0)                           # requeued at the front
+        (slot, req), = s.admit()               # stage_t overwritten, later
+        s.note_prefix_claim(slot, 8)           # resume = full-prefix claim
+        assert req.ready_t > first_ready
+        req.first_token_t = s.clock()
+        req.output = [7]
+        assert req.ttft_prefill_s >= 0
+        assert req.ttft_decode_s >= 0
+
+    def test_serial_lane_ttft_breakdown(self):
+        s = Scheduler(1, 8, 4, clock=_FakeClock())
+        s.submit([1] * 9)                      # submit_t = 1
+        (slot, req), = s.admit()               # stage_t = 2
+        s.note_prefill_dispatch()              # 4/8: clock ticks, not ready
+        s.note_prefill_dispatch()              # ready_t set (8 tokens done)
+        assert req.ready_t is not None
+        prefill_s = req.ready_t - req.stage_t
+        req.first_token_t = s.clock()
+        assert req.ttft_queue_s == 1.0
+        assert req.ttft_prefill_s == prefill_s > 0
+        assert req.ttft_decode_s == req.first_token_t - req.ready_t > 0
+
+
+# ---------------------------------------------------------------------------
+# engine identity + invariants
+# ---------------------------------------------------------------------------
+
+
+def _models(name="smollm-135m", seed=0):
+    cfg = registry.smoke_config(name)
+    if cfg.n_experts:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    tgt = Model(cfg)
+    drf = Model(cfg.with_(d_model=128, d_ff=256 if cfg.d_ff else 0,
+                          name=cfg.name + "-d"))
+    kt, kd = jax.random.split(jax.random.key(seed))
+    return tgt, drf, tgt.init(kt), drf.init(kd)
+
+
+def _serve(tgt, drf, tp, dp, cfg, prompts, seed=0):
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    eng.reset(seed=seed)
+    rids = [eng.submit(p) for p in prompts]
+    res = eng.run()
+    return eng, [res[r].output for r in rids]
+
+
+def _assert_drained(eng):
+    pool = eng.batch.pool
+    cached = int(jnp.sum(pool.cached))
+    assert int(pool.free_count) + cached == pool.free_stack.shape[0]
+    assert int(jnp.max(pool.ref)) == 0 or cached > 0
+    assert not bool(jnp.any(pool.staged))
+
+
+MIXED = [
+    [5, 3, 8, 1, 2],
+    [9, 9, 2, 4, 4, 4, 7, 1, 0, 3, 2, 6, 1, 5, 2, 8, 3, 1],
+    [4, 2, 7],
+    [1, 2, 3, 4, 5, 6, 7, 8, 9, 1, 2, 3, 4, 5, 6, 7, 8, 9, 1, 2],
+    [6, 6, 1],
+    [2, 4, 8, 1, 3, 5, 7, 9, 2, 4, 8, 1, 3, 5],
+]
+
+
+class TestAsyncEngineIdentity:
+    def test_temp0_concurrent_mixed_workload_bit_identical(self):
+        """Cold long prompts interleaved with warm short ones, more
+        requests than decode slots: the two-lane engine must commit
+        exactly the serial engine's tokens, while actually exercising
+        adoption and decode/prefill overlap."""
+        tgt, drf, tp, dp = _models()
+        outs = {}
+        for async_p in (False, True):
+            cfg = EngineConfig(
+                gamma=3, verifier="block", max_slots=2, max_len=96,
+                temperature=0.0, max_new_tokens=10, prefill_chunk=4,
+                async_prefill=async_p, stage_slots=2,
+            )
+            eng, outs[async_p] = _serve(tgt, drf, tp, dp, cfg, MIXED)
+            _assert_drained(eng)
+            if async_p:
+                assert eng.last_stats["adoptions"] == len(MIXED)
+                assert eng.last_stats["overlap_steps"] > 0
+                assert eng.last_stats["prefill_stall_steps"] == 0
+            else:
+                assert eng.last_stats["prefill_stall_steps"] > 0
+        assert outs[True] == outs[False]
+
+    def test_sequential_sampled_bit_identical(self):
+        """One request at a time at a sampled temperature: the staging
+        lane consumes no PRNG, so the decode-dispatch key sequence —
+        and every sampled token — must match the serial engine."""
+        tgt, drf, tp, dp = _models(seed=3)
+        outs = {}
+        for async_p in (False, True):
+            cfg = EngineConfig(
+                gamma=3, verifier="block", max_slots=2, max_len=96,
+                temperature=0.8, max_new_tokens=10, prefill_chunk=4,
+                async_prefill=async_p,
+            )
+            eng = SpecEngine(tgt, drf, tp, dp, cfg)
+            seq = []
+            for p in (MIXED[1], MIXED[0], MIXED[3]):
+                rid = eng.submit(p)
+                seq.append(eng.run()[rid].output)
+            outs[async_p] = seq
+        assert outs[True] == outs[False]
+
+    def test_oversubscribed_pool_staged_kills_stay_lossless(self):
+        """A pool too small for the burst: the async engine sheds load
+        by killing background prefills first, and still commits the
+        serial engine's exact greedy tokens with zero leaked pages."""
+        tgt, drf, tp, dp = _models()
+        prompts = [
+            [(i * 11 + j) % tgt.cfg.vocab for j in range(20)]
+            for i in range(6)
+        ]
+        outs = {}
+        for async_p in (False, True):
+            cfg = EngineConfig(
+                gamma=3, verifier="block", max_slots=3, max_len=80,
+                temperature=0.0, max_new_tokens=40, prefill_chunk=4,
+                page_size=4, num_pages=30,
+                async_prefill=async_p, stage_slots=2,
+            )
+            eng, outs[async_p] = _serve(tgt, drf, tp, dp, cfg, prompts)
+            assert eng.last_stats["preemptions"] > 0
+            _assert_drained(eng)
+        assert outs[True] == outs[False]
+
+    def test_prefix_cache_composition_round2_hits(self):
+        """async_prefill composes with the prefix cache: a second round
+        of repeated-prefix prompts claims at *staging* time and stays
+        bit-identical to the serial prefix-cached engine."""
+        tgt, drf, tp, dp = _models()
+        pre = [7] * 20
+        prompts = [pre + [i + 1, i + 2] for i in range(4)]
+        outs, hits = {}, {}
+        for async_p in (False, True):
+            cfg = EngineConfig(
+                gamma=3, verifier="block", max_slots=2, max_len=96,
+                temperature=0.0, max_new_tokens=8, prefill_chunk=4,
+                page_size=4, prefix_cache=True,
+                async_prefill=async_p, stage_slots=2,
+            )
+            eng = SpecEngine(tgt, drf, tp, dp, cfg)
+            rounds = []
+            for _ in range(2):
+                rids = [eng.submit(p) for p in prompts]
+                res = eng.run()
+                rounds.append([res[r].output for r in rids])
+            outs[async_p] = rounds
+            hits[async_p] = eng.last_stats["prefix_cache"]["hits"]
+            _assert_drained(eng)
+        assert outs[True] == outs[False]
+        assert hits[True] > 0
+
+    def test_decode_never_maps_a_staged_page(self):
+        """The tentpole invariant, checked at every decode dispatch: the
+        pages mapped by decode slots' tables are disjoint from the
+        pool's staged set (sync per step — smoke-sized workload)."""
+        tgt, drf, tp, dp = _models()
+        cfg = EngineConfig(
+            gamma=3, verifier="block", max_slots=2, max_len=96,
+            temperature=0.0, max_new_tokens=8, prefill_chunk=4,
+            async_prefill=True, stage_slots=2,
+        )
+        eng = SpecEngine(tgt, drf, tp, dp, cfg)
+        inner = eng.runner.decode_step
+        checked = {"n": 0}
+
+        def checked_decode(tp_, dp_, tc, dc, batch, key):
+            staged = np.asarray(batch.pool.staged)
+            table = np.asarray(batch.page_table)
+            used = np.asarray(batch.pages_used)
+            active = np.asarray(batch.active)
+            for slot in range(batch.num_slots):
+                if active[slot]:
+                    ids = table[slot, : used[slot]]
+                    assert (ids >= 0).all(), (slot, ids)
+                    assert not staged[ids].any(), (slot, ids)
+            checked["n"] += 1
+            return inner(tp_, dp_, tc, dc, batch, key)
+
+        eng.runner.decode_step = checked_decode
+        for p in MIXED:
+            eng.submit(p)
+        eng.run()
+        assert checked["n"] > 0
+
+    def test_async_prefill_requires_fully_paged(self):
+        tgt, drf, tp, dp = _models("mixtral-8x22b")  # windowed layers
+        cfg = EngineConfig(
+            gamma=2, verifier="block", max_slots=1, max_len=64,
+            async_prefill=True,
+        )
+        with pytest.raises(ValueError, match="async_prefill"):
+            SpecEngine(tgt, drf, tp, dp, cfg)
+
+    def test_async_prefill_requires_paged(self):
+        tgt, drf, tp, dp = _models()
+        cfg = EngineConfig(
+            gamma=2, verifier="block", max_slots=1, max_len=64,
+            paged=False, async_prefill=True,
+        )
+        with pytest.raises(ValueError, match="paged"):
+            SpecEngine(tgt, drf, tp, dp, cfg)
+
+
+# ---------------------------------------------------------------------------
+# randomized traffic: allocation never fails, staged invisible, no leaks
+# ---------------------------------------------------------------------------
+
+
+def _pool_invariant(spec, pool):
+    free = int(pool.free_count)
+    ref = np.asarray(pool.ref)
+    cached = np.asarray(pool.cached)
+    live = int((ref > 0).sum())
+    parked = int(((ref == 0) & cached).sum())
+    assert free + live + parked == spec.num_pages, (free, live, parked)
+    assert (ref >= 0).all()
+    stack = {int(x) for x in pool.free_stack[:free]}
+    assert len(stack) == free
+    assert not stack & {p for p in range(spec.num_pages) if ref[p] > 0}
+    assert not np.asarray(pool.staged)[np.asarray(pool.cached)].any()
+
+
+def _async_traffic_lifecycle(seed: int):
+    """Randomized two-lane serving traffic driven by the REAL host
+    policy (PageBudget staging reservations, adoption as a key move,
+    stage-kill-first preemption) against the REAL allocator ops,
+    asserting the engine's three load-bearing invariants: budgeted
+    ``ensure`` never fails, no decode table ever maps a ``staged``
+    page, and the pool drains leak-free. Mirrors the async loop's
+    ordering: preempt -> adopt -> stage-admit -> decode-alloc ->
+    stage-alloc -> commit/retire."""
+    rng = np.random.RandomState(seed)
+    gamma = 3
+    chunk = 4
+    spec = paging.PageSpec(page_size=4, num_pages=40, max_pages=10)
+    max_len = 32
+    budget = paging.PageBudget(spec, gamma)
+    n_slots, n_stage = 3, 2
+    d_table, d_used = paging.init_tables(spec, n_slots)
+    s_table, s_used = paging.init_tables(spec, n_stage)
+    pool = paging.init_pool(spec)
+    queue: deque = deque()
+    live: dict[int, dict] = {}     # decode slot -> {"tokens": [...]}
+    staging: dict[int, dict] = {}  # sid -> {"tokens", "pos", "ready"}
+    ready: deque = deque()
+    admit_order: dict = {}
+    seq = 0
+
+    def staging_invariant():
+        staged = np.asarray(pool.staged)
+        dt, du = np.asarray(d_table), np.asarray(d_used)
+        for slot in live:
+            ids = dt[slot, : du[slot]]
+            assert (ids >= 0).all()
+            assert not staged[ids].any(), (seed, slot)
+        expect = set()
+        st_, su_ = np.asarray(s_table), np.asarray(s_used)
+        for sid in staging:
+            expect |= {int(p) for p in st_[sid, : su_[sid]]}
+        assert {p for p in range(spec.num_pages) if staged[p]} == expect
+
+    for _ in range(60):
+        if rng.rand() < 0.7:
+            queue.append(
+                rng.randint(0, 7, size=rng.randint(1, 18)).tolist()
+            )
+        # 1. preemption: staged LIFO first, then decode LIFO
+        while budget.needs_preemption():
+            if staging:
+                sid = max(staging, key=lambda s: admit_order[("s", s)])
+                st = staging.pop(sid)
+                queue.appendleft(st["tokens"])
+                if sid in ready:
+                    ready.remove(sid)
+                mask = jnp.arange(n_stage) == sid
+                s_table, s_used, pool = paging.release(
+                    spec, s_table, s_used, pool, mask
+                )
+                budget.note_unstage(sid)
+                admit_order.pop(("s", sid))
+            elif len(live) > 1:
+                victim = max(live, key=lambda s: admit_order[s])
+                queue.appendleft(live.pop(victim)["tokens"])
+                mask = jnp.arange(n_slots) == victim
+                d_table, d_used, pool = paging.release(
+                    spec, d_table, d_used, pool, mask
+                )
+                budget.note_release(victim)
+                admit_order.pop(victim)
+            else:
+                break
+        # 2. adoption (ready-queue FIFO into free decode slots)
+        free_slots = [s for s in range(n_slots) if s not in live]
+        while ready and free_slots:
+            sid = ready.popleft()
+            st = staging.pop(sid)
+            slot = free_slots.pop(0)
+            ids = [int(p) for p in s_table[sid, : int(s_used[sid])]]
+            d_table, d_used, pool = paging.host_adopt_stage(
+                spec, d_table, d_used, pool, slot, ids
+            )
+            s_table = s_table.at[sid].set(
+                jnp.full((spec.max_pages,), -1, jnp.int32)
+            )
+            s_used = s_used.at[sid].set(0)
+            budget.note_adopt(sid, slot)
+            live[slot] = {"tokens": st["tokens"]}
+            admit_order[slot] = seq
+            seq += 1
+            admit_order.pop(("s", sid))
+        # 3. staging admission (FIFO, budget-gated)
+        for sid in range(n_stage):
+            if sid not in staging and queue:
+                if not budget.can_admit(len(queue[0])):
+                    break
+                toks = queue.popleft()
+                staging[sid] = {"tokens": toks, "pos": 0}
+                if len(toks) <= 1:
+                    ready.append(sid)
+                budget.note_stage(sid, len(toks))
+                admit_order[("s", sid)] = seq
+                seq += 1
+        # 4. decode allocation must never fail for budgeted slots
+        lens = jnp.asarray(
+            [len(live[s]["tokens"]) if s in live else 0
+             for s in range(n_slots)], jnp.int32,
+        )
+        run = jnp.asarray([s in live for s in range(n_slots)])
+        d_table, d_used, pool, ok = paging.ensure(
+            spec, d_table, d_used, pool, lens + gamma + 1, run
+        )
+        assert bool(jnp.all(jnp.where(run, ok, True))), (
+            "decode ensure failed under budget", seed
+        )
+        # 5. staged allocation (one background chunk) must never fail
+        pos = np.zeros(n_stage, np.int32)
+        n_tok = np.zeros(n_stage, np.int32)
+        for sid, st in staging.items():
+            pos[sid] = st["pos"]
+            n_tok[sid] = min(chunk, len(st["tokens"]) - 1 - st["pos"])
+        pending = jnp.asarray(n_tok > 0)
+        s_table, s_used, pool, ok = paging.ensure(
+            spec, s_table, s_used, pool,
+            jnp.asarray(pos + n_tok), pending, mark_staged=True,
+        )
+        assert bool(jnp.all(jnp.where(pending, ok, True))), (
+            "staged ensure failed under budget", seed
+        )
+        for sid, st in staging.items():
+            st["pos"] += int(n_tok[sid])
+            if st["pos"] >= len(st["tokens"]) - 1 and sid not in ready:
+                ready.append(sid)
+        # 6. commit + retire
+        for slot in list(live):
+            st = live[slot]
+            n_new = int(rng.randint(1, gamma + 2))
+            st["tokens"].extend(rng.randint(0, 7, size=n_new).tolist())
+            budget.note_commit(slot, n_new)
+            if len(st["tokens"]) >= max_len or rng.rand() < 0.2:
+                live.pop(slot)
+                mask = jnp.arange(n_slots) == slot
+                d_table, d_used, pool = paging.release(
+                    spec, d_table, d_used, pool, mask
+                )
+                budget.note_release(slot)
+                admit_order.pop(slot)
+        _pool_invariant(spec, pool)
+        staging_invariant()
+
+    for sid in list(staging):
+        mask = jnp.arange(n_stage) == sid
+        s_table, s_used, pool = paging.release(
+            spec, s_table, s_used, pool, mask
+        )
+        staging.pop(sid)
+    for slot in list(live):
+        mask = jnp.arange(n_slots) == slot
+        d_table, d_used, pool = paging.release(
+            spec, d_table, d_used, pool, mask
+        )
+        live.pop(slot)
+    _pool_invariant(spec, pool)
+    assert int(pool.free_count) == spec.num_pages  # no leaks, ever
+    assert int(jnp.max(pool.ref)) == 0
+    assert not bool(jnp.any(pool.staged))
+
+
+class TestAsyncTrafficNeverFailsNeverLeaks:
+    def test_traffic_deterministic(self):
+        for seed in (0, 1, 2):
+            _async_traffic_lifecycle(seed)
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_traffic_property(self, seed):
+        _async_traffic_lifecycle(seed)
+
+
+class TestStageStateUnits:
+    def test_stage_slot_invariants(self):
+        spec = paging.PageSpec(page_size=4, num_pages=16, max_pages=8)
+        stage = batch_mod.init_stage(2, 32, spec)
+        stage = batch_mod.stage_slot(stage, 1, [4, 2, 7, 1], prefix_len=0)
+        assert bool(stage.active[1]) and not bool(stage.ready[1])
+        assert int(stage.plen[1]) == 4 and int(stage.pos[1]) == 0
+        # full-prefix hit stages ready immediately
+        stage = batch_mod.stage_slot(stage, 0, [5, 5, 5], prefix_len=2)
+        assert bool(stage.ready[0]) and int(stage.pos[0]) == 2
+        stage = batch_mod.clear_stage_slot(stage, 1)
+        assert not bool(stage.active[1])
+        assert int(stage.pages_used[1]) == 0
+        assert int(stage.page_table[1, 0]) == -1

@@ -33,7 +33,7 @@ def test_shape_configs_match_assignment():
 def test_variants_known():
     assert "base" in shapes.VARIANTS
     for v in ["gather-moe", "ragged-moe", "pure-dp-serve", "expert-parallel",
-              "paged-serve"]:
+              "paged-serve", "async-prefill"]:
         assert v in shapes.VARIANTS
 
 
@@ -69,6 +69,32 @@ def test_paged_serve_step_builds_page_pool_specs():
     # base variant unchanged: dense caches, no page bookkeeping
     _, args_b, _, _ = shapes.build_serve_step(model, mesh, shape, {})
     assert args_b[4].page_table is None and args_b[4].pool is None
+
+
+def test_async_prefill_variant_builds_staging_program_specs():
+    """The async-prefill dry-run variant lowers the DETACHED background
+    prefill program: its inputs are StageState + the shared pool (with
+    the ``staged`` mark array), not BatchState, and its outputs return
+    the updated staging lane — the second executable of the two-program
+    serve loop."""
+    from repro.models.model import Model
+    from repro.serving.batch import StageState
+
+    mesh = AbstractMesh((("data", 16), ("model", 16)))
+    model = Model(registry.get_config("olmo-1b"))
+    shape = shapes.SHAPES["decode_32k"]
+
+    _, args, shardings, out_shardings = shapes.build_serve_step(
+        model, mesh, shape, shapes.VARIANTS["async-prefill"]
+    )
+    stage_specs, pool_spec = args[4], args[5]
+    assert isinstance(stage_specs, StageState)
+    assert stage_specs.seq_buf.shape[0] == shape.global_batch
+    assert stage_specs.page_table is not None
+    assert pool_spec.staged.shape == pool_spec.cached.shape
+    assert isinstance(out_shardings[2], StageState)
+    # the pool rides along as an explicit output (threaded to decode)
+    assert out_shardings[3] is not None
 
 
 def test_analytic_costs_sane():
