@@ -14,6 +14,10 @@ Three claims measured:
   interpret mode elsewhere (off-TPU the reported ``ref_us_per_call``
   XLA-gather timing is the meaningful number; interpret timings only
   prove the lowering runs).
+
+``--block-shape-sweep`` additionally times the paged kernels over a
+grid of KV tile shapes (the pool page geometry) — see
+:func:`run_block_shape_sweep`.
 """
 
 from __future__ import annotations
@@ -121,6 +125,94 @@ def run_paged(quick: bool = True):
     return rows
 
 
+def run_block_shape_sweep(quick: bool = True):
+    """``--block-shape-sweep``: time the paged kernels over a grid of
+    KV tile shapes. For ``flash_decode_paged`` / ``flash_prefill_paged``
+    the KV tile IS the pool page — the grid's innermost dimension walks
+    ``page_table[b, pj]`` and each step DMAs one ``(page, hd)`` tile per
+    KV head — so the sweep serves the same cache repaged at each
+    candidate size and reports per-call latency (compiled on TPU;
+    interpret elsewhere, where the XLA-gather ``ref_us_per_call`` is the
+    meaningful number, same caveat as :func:`run_paged`). Identity vs
+    the dense kernels is asserted at every shape, so the sweep doubles
+    as coverage that the in-grid page resolution holds across tile
+    geometries (including the (8, 128) f32 min-tile floor: pages below
+    8 rows would pad the sublane dimension and are not swept)."""
+    on_tpu = jax.default_backend() == "tpu"
+    interp = None if on_tpu else True
+    b, c, h, kh, hd = (4, 256, 8, 2, 64) if quick else (8, 1024, 8, 4, 64)
+    pages = [16, 32, 64, 128] if quick else [16, 32, 64, 128, 256]
+    s = 5  # verify-chunk rows (gamma + 1) for the chunked kernel
+    key = jax.random.key(11)
+    rows = []
+    for page in pages:
+        if c % page:
+            continue
+        key = jax.random.fold_in(key, page)
+        k1, k2 = jax.random.split(key)
+        kd, vd, k_pool, v_pool, table = _paged_from_dense(
+            k1, b, c, kh, hd, page
+        )
+        lens = jnp.asarray([c - 1 - (i * 13) % (c // 3) for i in range(b)])
+        k_pos = jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+        k_pos = jnp.where(k_pos < lens[:, None], k_pos, -1)
+        q1 = jax.random.normal(k2, (b, h, hd))
+        qs = jax.random.normal(jax.random.fold_in(k2, 1), (b, s, h, hd))
+        for name, q, run_paged_fn, run_ref_fn, check in [
+            (
+                "decode", q1,
+                lambda q, p=(k_pool, v_pool, table): ops.flash_decode_paged(
+                    q, *p, lens - 1, lens, interpret=interp,
+                ),
+                lambda q, p=(k_pool, v_pool, table): ref.flash_decode_paged(
+                    q, *p, lens - 1, lens,
+                ),
+                lambda o: float(jnp.max(jnp.abs(
+                    o - ops.flash_decode(q1, kd, vd, lens - 1, k_pos)
+                ))),
+            ),
+            (
+                "prefill", qs,
+                lambda q, p=(k_pool, v_pool, table): ops.flash_prefill_paged(
+                    q, *p, lens - s, lens, interpret=interp,
+                ),
+                lambda q, p=(k_pool, v_pool, table): ref.flash_prefill_paged(
+                    q, *p, lens - s, lens,
+                ),
+                lambda o: max(
+                    float(jnp.max(jnp.abs(o[:, i] - ops.flash_decode(
+                        qs[:, i], kd, vd, lens - s + i, k_pos
+                    ))))
+                    for i in range(s)
+                ),
+            ),
+        ]:
+            err = check(run_paged_fn(q))
+            assert err < 2e-5, ("paged deviates from dense", name, page, err)
+            fn = jax.jit(run_paged_fn)
+            us = timeit(lambda: jax.block_until_ready(fn(q)))
+            rfn = jax.jit(run_ref_fn)
+            rus = timeit(lambda: jax.block_until_ready(rfn(q)))
+            rows.append({
+                "name": f"kernels/sweep_{name}_B{b}_C{c}_pg{page}",
+                "kv_tile": [page, hd],
+                "max_abs_diff_vs_dense": err,
+                "us_per_call": round(us, 1),
+                "ref_us_per_call": round(rus, 1),
+                "mode": "compiled" if on_tpu else "interpret",
+            })
+    # flag the best tile per kernel so the sweep output is directly
+    # actionable (on CPU this ranks the XLA reference, see docstring)
+    col = "us_per_call" if on_tpu else "ref_us_per_call"
+    for kind in ("decode", "prefill"):
+        best = min(
+            (r for r in rows if f"sweep_{kind}" in r["name"]),
+            key=lambda r: r[col],
+        )
+        best["best_in_sweep"] = True
+    return rows
+
+
 def run(quick: bool = True):
     rows = []
     shapes = [(8, 4, 32_000)] if quick else [
@@ -158,5 +250,19 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    for r in run(quick=False):
-        print(r)
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--block-shape-sweep", action="store_true",
+        help="sweep the paged kernels over a grid of KV tile shapes "
+             "(compiled on TPU / interpret elsewhere)",
+    )
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.block_shape_sweep:
+        for r in run_block_shape_sweep(quick=args.quick):
+            print(r)
+    else:
+        for r in run(quick=args.quick):
+            print(r)

@@ -187,6 +187,11 @@ def run(quick: bool = True, gamma: int = 4, temperature: float = 0.8):
         tgt, drf, tp, dp, gamma=gamma, max_new=32,
     )
     rows.append(ap_row)
+    # Same-burst workload: what live prefix sharing buys.
+    bench["live_share"], ls_row = _live_share_bench(
+        tgt, drf, tp, dp, gamma=gamma, max_new=24,
+    )
+    rows.append(ls_row)
     if results["token"][0] > 0:
         bench["block_over_token"] = {
             "wallclock_pct": (
@@ -440,6 +445,134 @@ def _async_prefill_bench(
     return bench, row
 
 
+def _live_share_bench(
+    tgt, drf, tp, dp, gamma: int, max_new: int,
+    n_prompts: int = 8, prompt_tokens: int = 65,
+    max_slots: int = 4, page_size: int = 8, repeats: int = 2,
+):
+    """Serve a same-burst workload — ``n_prompts`` IDENTICAL cold
+    prompts submitted together, the thundering-herd traffic pattern
+    live prefix sharing exists for — with ``live_share`` off and on,
+    through both the serial and the disaggregated engine (all four at
+    ``prefix_cache=True``, temperature 0). ``prompt_tokens - 1`` is a
+    page multiple, so the whole consumable prompt is shareable and the
+    burst costs exactly ONE prefill's worth of tokens with sharing on.
+
+    The gated quantities are deterministic program-dispatch counts:
+    prefill tokens strictly reduced in both engines (down to exactly
+    ``prompt_tokens - 1``), prefill dispatches strictly reduced in the
+    async engine (staging waves overlap decode, so the unshared engine
+    cannot reuse wave-1 pages it has not parked yet) and never
+    increased in the serial engine (serial prefill batches all slots
+    into the same dispatches, so step counts tie), and committed
+    tokens bit-identical across all four engines. p50/p95 TTFT per
+    mode (best of ``repeats`` alternating trials) is reported for the
+    trajectory, not gated — wall clock on shared runners is noisy."""
+    tok = ByteTokenizer()
+    base = tok.encode(generate_prompts(9, 1)[0] + " ")
+    prompt = (base * (prompt_tokens // len(base) + 1))[:prompt_tokens]
+    assert len(prompt) == prompt_tokens
+    assert (prompt_tokens - 1) % page_size == 0
+    engines = {}
+    for async_p in (False, True):
+        for live in (False, True):
+            cfg = EngineConfig(
+                gamma=gamma, verifier="block", max_slots=max_slots,
+                max_len=256, temperature=0.0, max_new_tokens=max_new,
+                prefill_chunk=16, page_size=page_size,
+                prefix_cache=True, live_share=live,
+                async_prefill=async_p, stage_slots=2,
+            )
+            eng = SpecEngine(tgt, drf, tp, dp, cfg)
+            eng.submit(prompt, max_new_tokens=2)  # warm compile
+            eng.run()
+            engines[async_p, live] = eng
+
+    def trial(async_p, live):
+        eng = engines[async_p, live]
+        eng.reset(seed=0)
+        rids = [eng.submit(list(prompt)) for _ in range(n_prompts)]
+        res = eng.run()
+        stats = eng.last_stats
+        ttfts = [m["ttft_s"] for m in eng.request_metrics()]
+        return {
+            "outputs": [res[r].output for r in rids],
+            "prefill_tokens": stats["prefill_tokens"],
+            "prefill_steps": stats["prefill_steps"],
+            "live_hits": stats["prefix_cache"]["live_hits"],
+            "cache_hits": stats["prefix_cache"]["hits"],
+            "decode_tokens_per_s": stats["tokens"] / stats["wall_s"],
+            "ttft_p50_s": _pctl(ttfts, 0.50),
+            "ttft_p95_s": _pctl(ttfts, 0.95),
+        }
+
+    trials = {k: [] for k in engines}
+    for _ in range(repeats):
+        for k in engines:
+            trials[k].append(trial(*k))
+    out = {}
+    for k, runs in trials.items():
+        for r in runs[1:]:  # deterministic quantities never vary
+            assert r["outputs"] == runs[0]["outputs"]
+            assert r["prefill_tokens"] == runs[0]["prefill_tokens"]
+            assert r["prefill_steps"] == runs[0]["prefill_steps"]
+        best = dict(runs[0])
+        best["decode_tokens_per_s"] = max(
+            r["decode_tokens_per_s"] for r in runs
+        )
+        for key in ("ttft_p50_s", "ttft_p95_s"):
+            best[key] = min(r[key] for r in runs)
+        out[k] = best
+    # Sharing must be invisible in the committed tokens (temperature 0).
+    first = out[False, False]["outputs"]
+    assert all(v["outputs"] == first for v in out.values()), (
+        "live sharing changed committed tokens"
+    )
+    modes = {}
+    for async_p, name in ((False, "serial"), (True, "async")):
+        ref, live = out[async_p, False], out[async_p, True]
+        modes[name] = {
+            "ref": {k: v for k, v in ref.items() if k != "outputs"},
+            "live": {k: v for k, v in live.items() if k != "outputs"},
+            "prefill_tokens_saved": (
+                ref["prefill_tokens"] - live["prefill_tokens"]
+            ),
+            "prefill_dispatches_saved": (
+                ref["prefill_steps"] - live["prefill_steps"]
+            ),
+        }
+    bench = {
+        "workload": {
+            "n_prompts": n_prompts, "prompt_tokens": prompt_tokens,
+            "identical_prompts": True, "max_new_tokens": max_new,
+            "max_slots": max_slots, "stage_slots": 2,
+            "page_size": page_size,
+        },
+        "bit_identical": True,
+        "timing_repeats": repeats,
+        # one prefill's worth for the whole burst
+        "shared_span_tokens": prompt_tokens - 1,
+        **modes,
+    }
+    row = {
+        "name": "wallclock/live_share",
+        "prefill_tokens_ref": out[False, False]["prefill_tokens"],
+        "prefill_tokens_live": out[False, True]["prefill_tokens"],
+        "async_dispatches_saved": modes["async"][
+            "prefill_dispatches_saved"
+        ],
+        "ttft_p95_live_s": round(out[False, True]["ttft_p95_s"], 3),
+    }
+    return bench, row
+
+
+def _pctl(xs, q):
+    xs = sorted(x for x in xs if x is not None)
+    if not xs:
+        return None
+    return xs[min(int(round(q * (len(xs) - 1))), len(xs) - 1)]
+
+
 def _mean(xs):
     xs = [x for x in xs if x is not None]
     return sum(xs) / len(xs) if xs else None
@@ -470,6 +603,38 @@ def run_async_smoke(train_steps: int = 120):
         with open(path) as f:
             bench = json.load(f)
     bench["async_prefill"] = bench_ap
+    _write_bench(bench, path)
+    return row
+
+
+def run_live_share_smoke(train_steps: int = 120):
+    """CI smoke: train (or load) the char-LM pair, run ONLY the
+    same-burst workload, and refresh the ``live_share`` section of
+    ``results/BENCH_serving.json`` in place. Fails if live sharing
+    stops strictly reducing prefill tokens (in either engine) down to
+    one prefill's worth for the burst, stops strictly reducing prefill
+    dispatches in the async engine (or increases them in the serial
+    one), stops hitting live spans, or perturbs committed tokens
+    (bit-identity is asserted inside the bench)."""
+    tgt, drf, tp, dp = _get_models(train_steps)
+    bench_ls, row = _live_share_bench(tgt, drf, tp, dp, gamma=4, max_new=24)
+    # Regression-gate BEFORE touching the tracked artifact; every gate
+    # is a deterministic dispatch/token count, immune to runner noise.
+    for mode in ("serial", "async"):
+        m = bench_ls[mode]
+        assert m["prefill_tokens_saved"] > 0, (mode, m)
+        assert m["live"]["prefill_tokens"] == (
+            bench_ls["shared_span_tokens"]
+        ), (mode, m)
+        assert m["prefill_dispatches_saved"] >= 0, (mode, m)
+        assert m["live"]["live_hits"] > 0, (mode, m)
+    assert bench_ls["async"]["prefill_dispatches_saved"] > 0, bench_ls
+    path = "results/BENCH_serving.json"
+    bench = {"bench": "serving"}
+    if os.path.exists(path):
+        with open(path) as f:
+            bench = json.load(f)
+    bench["live_share"] = bench_ls
     _write_bench(bench, path)
     return row
 

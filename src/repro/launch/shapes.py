@@ -325,12 +325,12 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
         stage_specs = StageState(
             seq_buf=jax.ShapeDtypeStruct((b, max_len), jnp.int32),
             plen=slot_i32, pos=slot_i32,
-            active=slot_bool, ready=slot_bool,
+            active=slot_bool, ready=slot_bool, hold=slot_bool,
             page_table=table_spec, pages_used=used_spec,
         )
         stage_shard = StageState(
             seq_buf=b_or_rep, plen=rep, pos=rep, active=rep, ready=rep,
-            page_table=table_shard, pages_used=rep,
+            hold=rep, page_table=table_shard, pages_used=rep,
         )
         args = (
             _bf16_params(model), _bf16_params(drafter),
@@ -342,13 +342,13 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
     batch_specs = BatchState(
         seq_buf=jax.ShapeDtypeStruct((b, max_len), jnp.int32),
         lens=slot_i32, d_lens=slot_i32, t_pref=slot_i32,
-        active=slot_bool, ready=slot_bool,
+        active=slot_bool, ready=slot_bool, hold=slot_bool,
         out_start=slot_i32, max_new=slot_i32,
         page_table=table_spec, pages_used=used_spec, pool=pool_spec,
     )
     batch_shard = BatchState(
         seq_buf=b_or_rep, lens=rep, d_lens=rep, t_pref=rep,
-        active=rep, ready=rep, out_start=rep, max_new=rep,
+        active=rep, ready=rep, hold=rep, out_start=rep, max_new=rep,
         page_table=table_shard, pages_used=used_shard, pool=pool_shard,
     )
     args = (

@@ -43,6 +43,13 @@ class BatchState(NamedTuple):
     t_pref: jax.Array     # (B,) int32 — prompt tokens consumed by prefill
     active: jax.Array     # (B,) bool — slot holds a live request
     ready: jax.Array      # (B,) bool — prefill complete, slot decodable
+    # hold: the slot is RIDING a live writer's prefill (live prefix
+    # sharing) — its committed prefix is being written by another row,
+    # and the engine grows its claim as the writer's chunks land. The
+    # prefill body must not touch a held row (it would redundantly
+    # re-write pages the writer owns); the engine clears the flag when
+    # the ride ends and any tail remainder prefills normally.
+    hold: jax.Array       # (B,) bool — prefill held while riding a writer
     out_start: jax.Array  # (B,) int32 — prompt length (output begins here)
     max_new: jax.Array    # (B,) int32 — per-request new-token budget
     # Paged-KV bookkeeping (None when the engine serves dense caches):
@@ -78,7 +85,7 @@ def init_batch(
         pool = paging.init_pool(page_spec)
     return BatchState(
         seq_buf=jnp.zeros((num_slots, max_len), jnp.int32),
-        lens=z, d_lens=z, t_pref=z, active=f, ready=f,
+        lens=z, d_lens=z, t_pref=z, active=f, ready=f, hold=f,
         out_start=z, max_new=z,
         page_table=table, pages_used=used, pool=pool,
     )
@@ -86,7 +93,7 @@ def init_batch(
 
 def admit_slot(
     state: BatchState, slot: int, prompt_ids: list[int], max_new: int,
-    prefix_len: int = 0,
+    prefix_len: int = 0, hold: bool = False,
 ) -> BatchState:
     """Stage a request into a free slot. With ``prefix_len = 0`` the
     models have consumed nothing yet (``t_pref = 0``) and the runner's
@@ -95,7 +102,10 @@ def admit_slot(
     claimed token count as ``prefix_len`` (page-aligned, both models'
     K/V for ``[0, prefix_len)`` already live in the claimed pool pages):
     prefill then starts at the first uncached position — a full-prefix
-    hit (``prefix_len == plen - 1``) is ready immediately."""
+    hit (``prefix_len == plen - 1``) is ready immediately. ``hold=True``
+    admits the slot as a *rider*: ``prefix_len`` is the writer's
+    committed frontier, and the engine advances it (:func:`ride_slot`)
+    as the writer's chunks land instead of letting prefill run."""
     plen = len(prompt_ids)
     assert 1 <= plen < state.max_len, (plen, state.max_len)
     assert 0 <= prefix_len <= plen - 1, (prefix_len, plen)
@@ -108,8 +118,27 @@ def admit_slot(
         t_pref=state.t_pref.at[slot].set(prefix_len),
         active=state.active.at[slot].set(True),
         ready=state.ready.at[slot].set(prefix_len >= plen - 1),
+        hold=state.hold.at[slot].set(hold and prefix_len < plen - 1),
         out_start=state.out_start.at[slot].set(plen),
         max_new=state.max_new.at[slot].set(max_new),
+    )
+
+
+def ride_slot(
+    state: BatchState, slot: int, t_pref: int, done: bool
+) -> BatchState:
+    """Advance a riding decode slot's claim frontier (live prefix
+    sharing): the engine just claimed the writer's newly committed
+    pages into this row's table, so the target-consumed counter jumps
+    to ``t_pref`` without a prefill dispatch. ``done=True`` ends the
+    ride — the hold clears and any tail remainder past ``t_pref``
+    prefills normally (the ready flag flips in-program, or here when
+    the ride covered the full ``plen - 1`` span)."""
+    ready = state.ready.at[slot].set(t_pref >= state.lens[slot] - 1)
+    return state._replace(
+        t_pref=state.t_pref.at[slot].set(t_pref),
+        ready=ready if done else state.ready,
+        hold=state.hold.at[slot].set(not done),
     )
 
 
@@ -118,6 +147,7 @@ def release_slot(state: BatchState, slot: int) -> BatchState:
     return state._replace(
         active=state.active.at[slot].set(False),
         ready=state.ready.at[slot].set(False),
+        hold=state.hold.at[slot].set(False),
     )
 
 
@@ -141,6 +171,7 @@ class StageState(NamedTuple):
     pos: jax.Array         # (S,) int32 — prompt tokens consumed so far
     active: jax.Array      # (S,) bool — staging slot holds a request
     ready: jax.Array       # (S,) bool — final chunk landed (pos>=plen-1)
+    hold: jax.Array        # (S,) bool — prefill held while riding a writer
     page_table: jax.Array  # (S, max_pages) int32 — staged pages, -1 empty
     pages_used: jax.Array  # (S,) int32
 
@@ -161,13 +192,14 @@ def init_stage(
     f = jnp.zeros((num_slots,), bool)
     return StageState(
         seq_buf=jnp.zeros((num_slots, max_len), jnp.int32),
-        plen=z, pos=z, active=f, ready=f,
+        plen=z, pos=z, active=f, ready=f, hold=f,
         page_table=table, pages_used=used,
     )
 
 
 def stage_slot(
-    state: StageState, sid: int, prompt_ids: list[int], prefix_len: int = 0
+    state: StageState, sid: int, prompt_ids: list[int], prefix_len: int = 0,
+    hold: bool = False,
 ) -> StageState:
     """Stage a request into a free staging slot: the background prefill
     program will consume ``plen - 1`` prompt tokens (the last committed
@@ -175,7 +207,9 @@ def stage_slot(
     chunk). A prefix-cache hit passes the claimed token count as
     ``prefix_len`` (the claimed pages were installed into this row's
     table by ``paging.host_claim_prefix``); a full-prefix hit or a
-    one-token prompt is ready without a single prefill dispatch."""
+    one-token prompt is ready without a single prefill dispatch.
+    ``hold=True`` stages a *rider* behind a live writer — see
+    :func:`admit_slot`."""
     plen = len(prompt_ids)
     assert 1 <= plen < state.max_len, (plen, state.max_len)
     assert 0 <= prefix_len <= plen - 1, (prefix_len, plen)
@@ -187,6 +221,22 @@ def stage_slot(
         pos=state.pos.at[sid].set(prefix_len),
         active=state.active.at[sid].set(True),
         ready=state.ready.at[sid].set(prefix_len >= plen - 1),
+        hold=state.hold.at[sid].set(hold and prefix_len < plen - 1),
+    )
+
+
+def ride_stage(
+    state: StageState, sid: int, pos: int, done: bool
+) -> StageState:
+    """Staging twin of :func:`ride_slot`: jump the consumed counter to
+    the freshly claimed frontier; ``done=True`` clears the hold (ready
+    flips here if the ride covered the whole ``plen - 1`` span, else
+    in-program when the tail remainder finishes)."""
+    ready = state.ready.at[sid].set(pos >= state.plen[sid] - 1)
+    return state._replace(
+        pos=state.pos.at[sid].set(pos),
+        ready=ready if done else state.ready,
+        hold=state.hold.at[sid].set(not done),
     )
 
 
@@ -199,6 +249,7 @@ def clear_stage_slot(state: StageState, sid: int) -> StageState:
     return state._replace(
         active=state.active.at[sid].set(False),
         ready=state.ready.at[sid].set(False),
+        hold=state.hold.at[sid].set(False),
         pos=state.pos.at[sid].set(0),
         plen=state.plen.at[sid].set(0),
         page_table=state.page_table.at[sid].set(

@@ -133,6 +133,23 @@ class EngineConfig:
     # fully-paged caches; hits cannot affect sampled distributions —
     # claimed pages hold bitwise the K/V the prefill would recompute.
     prefix_cache: bool = False
+    # Live prefix sharing + cache-aware admission: the radix index also
+    # mirrors the committed prompt spans of LIVE rows (decode slots and
+    # staging lanes), registered chunk-by-chunk as the prefill mirrors
+    # advance, so a burst of requests sharing a prefix pays for ~one
+    # prefill of the shared span instead of N — later requests pin the
+    # writer's in-use pages (refcount bump, ``paging.host_claim_live``)
+    # and, when admitted while the writer is still mid-prefill, RIDE it:
+    # the row admits held (``hold``) at the writer's committed frontier
+    # and the engine grows its claim as each chunk lands, prefilling
+    # only its own divergent tail. Admission turns cache-aware: the
+    # scheduler admits the queued request with the longest
+    # live-inclusive prefix match (aging-bounded, deterministic). Hits
+    # stay bit-identical: claimed pages are read-only under the
+    # claimer-never-writes cap and prefill consumes no PRNG, so a
+    # claimed page holds bitwise the K/V the rider would recompute.
+    # Requires prefix_cache=True.
+    live_share: bool = False
 
 
 class SpecEngine:
@@ -181,6 +198,16 @@ class SpecEngine:
         )
         self._claims: dict[int, list] = {}  # slot -> claimed trie nodes
         self._stage_claims: dict[int, list] = {}  # sid -> claimed nodes
+        # Live prefix sharing (cfg.live_share): owner keys are
+        # ("slot", i) / ("stage", i). ``_live_prompt`` maps each live
+        # row to the prompt it is serving (what register_live mirrors
+        # and _find_writer scans); ``_rides`` maps a RIDER row to its
+        # in-flight claim-behind-the-writer state.
+        self._live_on = cfg.live_share and self.prefix_cache is not None
+        self._live_prompt: dict[tuple, list[int]] = {}
+        self._rides: dict[tuple, dict] = {}
+        if self._live_on:
+            self.scheduler.match_fn = self._match_pages
         self.key = jax.random.key(seed)
         self.last_stats: dict = {}
 
@@ -207,25 +234,35 @@ class SpecEngine:
         With the prefix cache on, the longest cached page-aligned prefix
         of the (resume) prompt is claimed instead of re-prefilled: the
         claimed pages' refcounts bump, the slot's table starts with
-        them, and prefill begins at the first uncached position."""
+        them, and prefill begins at the first uncached position. With
+        live sharing on, the claimable prefix may be a live writer's
+        in-flight pages, and when the writer will commit MORE shareable
+        pages than are claimable right now the slot admits as a rider
+        (held prefill, claim grows via :meth:`_advance_rides`)."""
         self.t_cache = batch_mod.clear_slot_cache(self.t_cache, slot)
         self.d_cache = batch_mod.clear_slot_cache(self.d_cache, slot)
         prompt = req.serve_prompt()
         nodes, prefix_len = self._lookup_claim(prompt, self._claims, slot)
+        okey = ("slot", slot)
+        hold = self._maybe_ride(okey, prompt, len(nodes))
+        if hold:
+            self.scheduler.set_slot_riding(slot, True)
         self.batch = batch_mod.admit_slot(
             self.batch, slot, prompt, req.serve_max_new(),
-            prefix_len=prefix_len,
+            prefix_len=prefix_len, hold=hold,
         )
         if nodes:
-            table, used, pool = paging.host_claim_prefix(
+            table, used, pool = paging.host_claim_live(
                 self.runner.page_spec, self.batch.page_table,
                 self.batch.pages_used, self.batch.pool, slot,
-                [n.page for n in nodes],
+                self._resolve_node_ids(nodes),
             )
             self.batch = self.batch._replace(
                 page_table=table, pages_used=used, pool=pool
             )
             self.scheduler.note_prefix_claim(slot, prefix_len)
+        if self._live_on:
+            self._live_prompt[okey] = prompt
 
     def _lookup_claim(self, prompt: list[int], claims: dict, key: int):
         """Shared prefix-cache lookup + claim for a row being admitted
@@ -247,27 +284,218 @@ class SpecEngine:
     def _stage(self, sid: int, req: RequestState):
         """Stage an admitted request into the background prefill lane:
         write the prompt into the staging row and (prefix cache on)
-        claim the longest cached page-aligned prefix into the *staging*
-        table, so the background prefill starts at the first uncached
-        position. No decode-side state is touched."""
+        claim the longest cached — or, with live sharing, live —
+        page-aligned prefix into the *staging* table, so the background
+        prefill starts at the first uncached position; a rider stages
+        held (see :meth:`_admit`). No decode-side state is touched."""
         prompt = req.serve_prompt()
         nodes, prefix_len = self._lookup_claim(
             prompt, self._stage_claims, sid
         )
+        okey = ("stage", sid)
+        hold = self._maybe_ride(okey, prompt, len(nodes))
+        if hold:
+            self.scheduler.set_stage_riding(sid, True)
         self.stage = batch_mod.stage_slot(
-            self.stage, sid, prompt, prefix_len=prefix_len
+            self.stage, sid, prompt, prefix_len=prefix_len, hold=hold
         )
         if nodes:
-            table, used, pool = paging.host_claim_prefix(
+            table, used, pool = paging.host_claim_live(
                 self.runner.page_spec, self.stage.page_table,
                 self.stage.pages_used, self.batch.pool, sid,
-                [n.page for n in nodes],
+                self._resolve_node_ids(nodes),
             )
             self.stage = self.stage._replace(
                 page_table=table, pages_used=used
             )
             self.batch = self.batch._replace(pool=pool)
             self.scheduler.note_stage_claim(sid, prefix_len)
+        if self._live_on:
+            self._live_prompt[okey] = prompt
+
+    # -- live prefix sharing (cfg.live_share) --------------------------
+
+    def _find_writer(self, prompt: list[int]) -> tuple[tuple, int] | None:
+        """Best live writer to ride for ``prompt``: the non-riding live
+        row whose prompt shares the longest token LCP, as ``(owner,
+        limit_pages)`` where ``limit`` caps the ride at the smallest of
+        the LCP, the rider's own claimer-never-writes cap and the
+        writer's committed-by-prefill span (both ``plen - 1``). None
+        when no writer would yield a single full page."""
+        ps = self.cfg.page_size
+        best = None
+        for okey, wprompt in self._live_prompt.items():
+            if okey in self._rides:
+                continue  # a rider's pages are someone else's
+            lcp = 0
+            for a, b in zip(prompt, wprompt):
+                if a != b:
+                    break
+                lcp += 1
+            limit = min(lcp, len(prompt) - 1, len(wprompt) - 1) // ps
+            if limit > 0 and (best is None or limit > best[1]):
+                best = (okey, limit)
+        return best
+
+    def _maybe_ride(self, okey: tuple, prompt: list[int], have: int) -> bool:
+        """Decide claim-behind-the-writer for a row being admitted with
+        ``have`` pages already claimable from the index: if a live
+        writer will commit MORE shareable pages than that, record the
+        ride and admit the row held. The initial claim (the writer's
+        committed frontier) is installed by the caller; the ride grows
+        it as chunks land."""
+        if not self._live_on:
+            return False
+        w = self._find_writer(prompt)
+        if w is None or w[1] <= have:
+            return False
+        self._rides[okey] = {
+            "writer": w[0], "limit": w[1], "prompt": prompt,
+        }
+        return True
+
+    def _match_pages(self, prompt: list[int]) -> int:
+        """Cache-aware admission oracle (installed as the scheduler's
+        ``match_fn``): pages of ``prompt`` shareable right now (cached +
+        live-committed) or promised by a live writer's remaining
+        chunks."""
+        pages = len(self.prefix_cache.lookup(prompt))
+        w = self._find_writer(prompt)
+        if w is not None:
+            pages = max(pages, w[1])
+        return pages
+
+    def _resolve_node_ids(self, path: list, start: int = 0) -> list[int]:
+        """Physical ids backing ``path[start:]``, resolving still-live
+        nodes (``page == -1``) from their owner's device table — the
+        one host↔device sync live sharing ever does, paid only when a
+        claim actually lands (registration itself is sync-free). A
+        node's depth in the path IS its column in the owner's table
+        (the owner registered it there), and resolution memoizes into
+        ``node.page`` so later claimants reuse it."""
+        rows: dict[tuple, np.ndarray] = {}
+        out = []
+        for depth in range(start, len(path)):
+            node = path[depth]
+            if node.page < 0:
+                okey = node.owner
+                if okey not in rows:
+                    table = (
+                        self.batch.page_table if okey[0] == "slot"
+                        else self.stage.page_table
+                    )
+                    rows[okey] = np.asarray(table[okey[1]])
+                node.page = int(rows[okey][depth])
+                assert node.page >= 0, (okey, depth)
+            out.append(node.page)
+        return out
+
+    def _update_live_index(self) -> None:
+        """Mirror every non-riding live row's committed full prompt
+        pages into the radix index (insert-as-you-commit). Driven by
+        the scheduler's prefill mirrors — chunk counts are
+        deterministic, so no device sync; ``register_live`` is
+        idempotent and monotone, so re-registering after every dispatch
+        is O(pages) dict probes."""
+        ps = self.cfg.page_size
+        sched = self.scheduler
+        for slot, req in enumerate(sched.slot_req):
+            okey = ("slot", slot)
+            prompt = self._live_prompt.get(okey)
+            if req is None or prompt is None or sched.slot_riding(slot):
+                continue
+            consumed = max(len(prompt) - 1 - sched.prefill_left(slot), 0)
+            self.prefix_cache.register_live(okey, prompt, consumed // ps)
+        for sid, req in enumerate(sched.stage_req):
+            okey = ("stage", sid)
+            prompt = self._live_prompt.get(okey)
+            if req is None or prompt is None or sched.stage_riding(sid):
+                continue
+            consumed = max(
+                len(prompt) - 1 - sched.stage_prefill_left(sid), 0
+            )
+            self.prefix_cache.register_live(okey, prompt, consumed // ps)
+
+    def _advance_rides(self) -> None:
+        """Grow every rider's claim to its writer's committed frontier
+        and finish rides that are done. A ride ends when the claim
+        reaches its limit, or the writer's row is gone (retired /
+        preempted / killed — its committed pages parked ``cached``, so
+        everything claimable was claimed; the rider's hold clears and
+        its tail prefills normally). Device side: the rider's
+        ``t_pref``/``pos`` jumps to the claimed frontier
+        (``batch.ride_slot`` / ``ride_stage``); mirror side:
+        ``note_prefix_claim`` / ``note_stage_claim`` shrink the lane's
+        prefill debt."""
+        ps = self.cfg.page_size
+        spec = self.runner.page_spec
+        for okey in list(self._rides):
+            ride = self._rides[okey]
+            kind, row = okey
+            claims = self._claims if kind == "slot" else self._stage_claims
+            mine = claims.get(row, [])
+            have = len(mine)
+            path = self.prefix_cache.lookup(ride["prompt"])
+            avail = min(len(path), ride["limit"])
+            if avail > have:
+                new_nodes = path[have:avail]
+                ids = self._resolve_node_ids(path[:avail], start=have)
+                self.prefix_cache.claim(new_nodes, extend=have > 0)
+                if have == 0:
+                    claims[row] = mine = []
+                mine.extend(new_nodes)
+                if kind == "slot":
+                    table, used, pool = paging.host_claim_live(
+                        spec, self.batch.page_table,
+                        self.batch.pages_used, self.batch.pool, row,
+                        ids, start=have,
+                    )
+                    self.batch = self.batch._replace(
+                        page_table=table, pages_used=used, pool=pool
+                    )
+                    self.scheduler.note_prefix_claim(row, len(ids) * ps)
+                else:
+                    table, used, pool = paging.host_claim_live(
+                        spec, self.stage.page_table,
+                        self.stage.pages_used, self.batch.pool, row,
+                        ids, start=have,
+                    )
+                    self.stage = self.stage._replace(
+                        page_table=table, pages_used=used
+                    )
+                    self.batch = self.batch._replace(pool=pool)
+                    self.scheduler.note_stage_claim(row, len(ids) * ps)
+                have = avail
+            done = (
+                have >= ride["limit"]
+                or ride["writer"] not in self._live_prompt
+            )
+            if kind == "slot":
+                self.batch = batch_mod.ride_slot(
+                    self.batch, row, have * ps, done
+                )
+                if done:
+                    self.scheduler.set_slot_riding(row, False)
+            else:
+                self.stage = batch_mod.ride_stage(
+                    self.stage, row, have * ps, done
+                )
+                if done:
+                    self.scheduler.set_stage_riding(row, False)
+            if done:
+                del self._rides[okey]
+
+    def _drop_live_row(self, okey: tuple) -> None:
+        """Live-sharing cleanup for a releasing row: drop its live-span
+        mirror (its owned nodes were just converted to cached by the
+        release path's ``insert``), its writer registration, and — if it
+        was mid-ride as a rider — the ride itself (its claims were
+        released with the row)."""
+        if not self._live_on:
+            return
+        self.prefix_cache.release_live(okey)
+        self._live_prompt.pop(okey, None)
+        self._rides.pop(okey, None)
 
     def _adopt(self, sid: int, slot: int, req: RequestState):
         """Fold a completed background prefill into the decode batch —
@@ -287,6 +515,19 @@ class SpecEngine:
         )
         assert all(p >= 0 for p in ids), (sid, ids)
         self._claims[slot] = self._stage_claims.pop(sid, [])
+        if self._live_on:
+            # The staging row's identity moves to the decode slot:
+            # re-key its live-span registrations, its writer entry, and
+            # any ride that was following it as a writer. (It cannot
+            # itself still be a rider — a ride either completes before
+            # the row turns ready or clears its hold first.)
+            old, new = ("stage", sid), ("slot", slot)
+            self.prefix_cache.move_owner(old, new)
+            if old in self._live_prompt:
+                self._live_prompt[new] = self._live_prompt.pop(old)
+            for ride in self._rides.values():
+                if ride["writer"] == old:
+                    ride["writer"] = new
         self.batch = batch_mod.admit_slot(
             self.batch, slot, prompt, req.serve_max_new(),
             prefix_len=len(prompt) - 1,
@@ -300,7 +541,9 @@ class SpecEngine:
         )
         self.stage = batch_mod.clear_stage_slot(self.stage, sid)
 
-    def _cacheable_cols(self, req, prefill_left: int, claims, table_row):
+    def _cacheable_cols(
+        self, req, prefill_left: int, claims, table_row, owner=None,
+    ):
         """Shared prefix-cache parking logic for a releasing row (decode
         slot or staging lane): drop the row's own claims, register its
         committed **full** pages — those entirely inside ``[0,
@@ -323,7 +566,10 @@ class SpecEngine:
             return None
         ids = np.asarray(table_row[:n_cache]).tolist()
         assert all(p >= 0 for p in ids), ids
-        adopted = self.prefix_cache.insert(committed, ids)
+        # ``owner`` (live sharing): the row's own live registrations
+        # convert in place to cached nodes, so claimants riding this
+        # row outlive its release without re-claiming.
+        adopted = self.prefix_cache.insert(committed, ids, owner=owner)
         cache_cols = np.zeros((self.runner.page_spec.max_pages,), bool)
         cache_cols[:n_cache] = adopted
         return cache_cols
@@ -337,12 +583,15 @@ class SpecEngine:
         pages park ``cached`` instead of freeing, so the request's
         retry (requeued at the front) usually re-claims its own prefix
         instead of re-prefilling it."""
+        okey = ("stage", sid)
         cache_cols = None
         if self.prefix_cache is not None:
             cache_cols = self._cacheable_cols(
                 req, prefill_left, self._stage_claims.pop(sid, []),
                 self.stage.page_table[sid],
+                owner=okey if self._live_on else None,
             )
+        self._drop_live_row(okey)
         self.stage, pool = self.runner.release_stage(
             self.stage, self.batch.pool, sid, cache_cols
         )
@@ -395,7 +644,10 @@ class SpecEngine:
             # Counters are per-run deltas (the index persists across
             # run() calls); *_pages occupancy values are absolute
             # end-of-run gauges.
-            counters = ("hits", "misses", "claimed_tokens", "evicted_pages")
+            counters = (
+                "hits", "misses", "live_hits", "claimed_tokens",
+                "evicted_pages",
+            )
             stats["prefix_cache"] = {
                 k: pc[k] - pc0[k] if k in counters else pc[k] for k in pc
             }
@@ -467,6 +719,9 @@ class SpecEngine:
                     stats["preemptions"] += 1
             for slot, req in sched.admit():
                 self._admit(slot, req)
+            if self._live_on:
+                self._update_live_index()
+                self._advance_rides()
             self._evict_cached_pressure()
             prefilled = False
             if sched.prefill_pending():
@@ -479,6 +734,8 @@ class SpecEngine:
                 stats["prefill_tokens"] += sched.note_prefill_dispatch()
                 stats["prefill_steps"] += 1
                 prefilled = True
+                if self._live_on:
+                    self._update_live_index()
             outs = None
             snapshot = sched.ready_slots()
             if snapshot:
@@ -555,6 +812,9 @@ class SpecEngine:
                 stats["adoptions"] += 1
             for sid, req in sched.stage_admit():
                 self._stage(sid, req)
+            if self._live_on:
+                self._update_live_index()
+                self._advance_rides()
             self._evict_cached_pressure()
             outs = None
             snapshot = sched.ready_slots()
@@ -581,6 +841,8 @@ class SpecEngine:
                 stats["prefill_steps"] += 1
                 if outs is not None:
                     stats["overlap_steps"] += 1
+                if self._live_on:
+                    self._update_live_index()
             if pending is not None:
                 self._process(*pending, stats)
             pending = (snapshot, outs) if outs is not None else None
@@ -635,12 +897,15 @@ class SpecEngine:
         """Release a retired/preempted slot's pages, parking its
         committed full pages in the prefix cache
         (:meth:`_cacheable_cols`) instead of freeing them."""
+        okey = ("slot", slot)
         cache_cols = None
         if self.prefix_cache is not None:
             cache_cols = self._cacheable_cols(
                 req, prefill_left, self._claims.pop(slot, []),
                 self.batch.page_table[slot],
+                owner=okey if self._live_on else None,
             )
+        self._drop_live_row(okey)
         return self.runner.release_slot(self.batch, slot, cache_cols)
 
     def _finish_reason(self, req: RequestState) -> str:

@@ -53,6 +53,23 @@ Pieces:
   evicted LRU — removed from the index and pushed back onto the free
   stack — only when the budget says the next dispatch could otherwise
   run the free stack dry (:meth:`PageBudget.evict_deficit`).
+* **live prefix sharing** (:meth:`PrefixCache.register_live` +
+  :func:`host_claim_live`) — the same radix index additionally mirrors
+  the committed spans of **live** rows (decode slots and staging
+  lanes), registered at prefill-chunk granularity as the engine's
+  mirrors advance (insert-as-you-commit). A live node carries its
+  owner key instead of a parked page id; its physical id is resolved
+  lazily — one read of the owner's page table at claim time — and a
+  claimant *pins* the page where it sits (:func:`host_claim_live`:
+  refcount bump on an in-use page, free count untouched). Pinned live
+  pages are never in ``by_page``, hence structurally non-reclaimable;
+  when the owner releases, its live nodes convert in place to cached
+  nodes (``insert`` with the owner key), so claimants ride the
+  transition without ever observing a freed page. Claims obey the
+  same claimer-never-writes page-alignment cap as cached hits, and an
+  owner only ever writes at positions at or past its committed
+  frontier, so a shared live page is read-only for every party by
+  construction — live hits stay bit-identical.
 * the **staging lane** (``EngineConfig(async_prefill=True)``) — pages
   popped by the background prefill program carry a ``staged`` mark:
   they are referenced (ref 1, held by a *staging-lane* table, not a
@@ -69,9 +86,13 @@ Page lifecycle (each physical page):
 
     free ──ensure──▶ referenced ──release(cache)──▶ cached ──host_evict──▶ free
     (on stack,        (ref ≥ 1)      ▲    (ref 0, off stack,   (back on stack)
-     ref 0)              ▲           └────claim── content kept)
-      │                  │ host_adopt_stage (ready flip: staged → decode-
-      │                  │ visible, same physical page, zero copies)
+     ref 0)           ▲  │  ▲        └────claim── content kept)
+      │               │  │  └─host_claim_live── pinned (ref ≥ 2: owner +
+      │               │  ▼                      claimants; owner's release
+      │               │ (referenced ⇄ pinned)   leaves it referenced or
+      │               │                         cached, never free)
+      │               │ host_adopt_stage (ready flip: staged → decode-
+      │               │ visible, same physical page, zero copies)
       └─ensure(staged)─▶ staging ──release──▶ free | cached
          (ref 1, held by a prefilling request, invisible to decode;
           a killed background prefill parks its fully-written pages
@@ -462,6 +483,38 @@ def host_claim_prefix(
     return page_table, pages_used, pool._replace(ref=ref)
 
 
+def host_claim_live(
+    spec: PageSpec,
+    page_table: jax.Array,  # (N, max_pages) — decode OR staging tables
+    pages_used: jax.Array,  # (N,)
+    pool: PagePool,
+    row: int,
+    page_ids: list[int],
+    start: int = 0,
+):
+    """Pin a page run into row ``row``'s table at columns ``[start,
+    start + n)`` and bump each page's refcount by one — the **live**
+    twin of :func:`host_claim_prefix`. The ids may back cached nodes
+    (ref 0 → 1, the PR 4 path) or pages still mapped by a live owner's
+    table (ref ≥ 1 → pinned): either way the pages are off the free
+    stack, so the free count is untouched, and the refcount bump is
+    what keeps the page alive after the owner releases — a pinned page
+    can only reach the stack once every claimant has released too.
+    ``start > 0`` extends an earlier claim in place (claim-behind-the-
+    writer: a rider's claim grows as the writer commits chunks); the
+    caller guarantees ``pages_used[row] == start`` and that the ids
+    come from the prefix index (distinct, committed, never
+    mid-eviction)."""
+    n = len(page_ids)
+    if n == 0:
+        return page_table, pages_used, pool
+    ids = jnp.asarray(page_ids, jnp.int32)
+    page_table = page_table.at[row, start:start + n].set(ids)
+    pages_used = pages_used.at[row].set(start + n)
+    ref = pool.ref.at[ids].add(1)
+    return page_table, pages_used, pool._replace(ref=ref)
+
+
 def host_evict(spec: PageSpec, pool: PagePool, page_ids: list[int]) -> PagePool:
     """Evict cached pages: un-mark them and push them back onto the free
     stack. The caller (the engine, driven by
@@ -509,9 +562,16 @@ def host_adopt_stage(
 
 @dataclass
 class _PrefixNode:
-    """One cached page in the radix index: ``key`` is the page's
+    """One indexed page in the radix tree: ``key`` is the page's
     ``page_size``-token span, the path from the root is the full
-    page-aligned token prefix it represents."""
+    page-aligned token prefix it represents. ``owner is None`` is a
+    **cached** node — ``page`` parks in the pool's ``cached`` state.
+    ``owner is not None`` is a **live** node: the span is committed
+    K/V on a live row's table (decode slot or staging lane, keyed by
+    the engine's owner tuple), ``page`` is ``-1`` until a claimant
+    resolves it from the owner's table, and the node converts to
+    cached in place when the owner releases — never evicted while
+    live."""
 
     key: tuple[int, ...]
     page: int
@@ -519,6 +579,7 @@ class _PrefixNode:
     children: dict = field(default_factory=dict)
     claims: int = 0      # live slots currently claiming this node's path
     last_use: int = 0    # logical LRU tick
+    owner: tuple | None = None  # live-row key while the span is in flight
 
 
 class PrefixCache:
@@ -542,45 +603,80 @@ class PrefixCache:
     node claims its whole path, so ``claims`` is monotone up the tree —
     a claim-free node never has a claimed descendant, which makes the
     claim-free set downward-closed and leaf-first LRU eviction always
-    able to reclaim every claim-free page."""
+    able to reclaim every claim-free page.
+
+    **Live spans** (:meth:`register_live`): the index also mirrors the
+    committed spans of live rows, inserted as the engine's prefill
+    mirrors advance — chunk granularity, host-only, no device sync
+    (physical ids resolve lazily at claim time from the owner's
+    table). ``self.live[owner]`` is the host mirror of each owner's
+    registered nodes, in depth order. Live nodes never enter
+    ``by_page``, so eviction cannot touch a page a live table maps;
+    they convert to cached nodes in place when the owner's release
+    runs :meth:`insert` with its owner key."""
 
     def __init__(self, spec: PageSpec):
         self.spec = spec
         self.children: dict[tuple, _PrefixNode] = {}  # root level
         self.by_page: dict[int, _PrefixNode] = {}
+        # host mirror of live/staging committed spans: owner key -> the
+        # nodes that owner registered (depth order, contiguous from its
+        # first unindexed page).
+        self.live: dict[tuple, list[_PrefixNode]] = {}
         self._tick = 0
         # cumulative telemetry (engine snapshots into per-run stats)
         self.hits = 0
         self.misses = 0
         self.claimed_tokens = 0
         self.evicted_pages = 0
+        self.live_hits = 0
+
+    @staticmethod
+    def _page_keys(tokens: list[int], n_pages: int, ps: int) -> list[tuple]:
+        """Radix keys for the first ``n_pages`` page spans of ``tokens``,
+        built in ONE pass over the prefix. Walking with per-step
+        ``tuple(tokens[i*ps:(i+1)*ps])`` slices re-copied the list at
+        every level; hoisting the key construction keeps each lookup
+        O(prompt_pages) dict probes over keys materialized exactly
+        once (tuple hashes are cached per object, so the probes don't
+        re-hash the spans either)."""
+        return [
+            tuple(tokens[o:o + ps]) for o in range(0, n_pages * ps, ps)
+        ]
 
     # -- lookup / claim ----------------------------------------------------
 
     def lookup(self, tokens: list[int]) -> list[_PrefixNode]:
-        """Longest cached page-aligned prefix of ``tokens``, capped so a
-        claiming slot still prefills (and first writes) at or past
-        position ``len(tokens) - 1``."""
+        """Longest indexed page-aligned prefix of ``tokens`` — cached
+        and live nodes alike — capped so a claiming slot still prefills
+        (and first writes) at or past position ``len(tokens) - 1``."""
         ps = self.spec.page_size
         cap = max(len(tokens) - 1, 0) // ps
         path: list[_PrefixNode] = []
         children = self.children
-        for i in range(cap):
-            node = children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+        for key in self._page_keys(tokens, cap, ps):
+            node = children.get(key)
             if node is None:
                 break
             path.append(node)
             children = node.children
         return path
 
-    def claim(self, path: list[_PrefixNode]) -> None:
+    def claim(self, path: list[_PrefixNode], extend: bool = False) -> None:
         """Pin a looked-up path for a newly admitted slot (the caller
-        applies :func:`host_claim_prefix` for the device side)."""
+        applies :func:`host_claim_prefix` / :func:`host_claim_live`
+        for the device side). ``extend=True`` grows an earlier claim
+        (claim-behind-the-writer): the caller passes only the NEW
+        nodes — each carries one claim for the whole claimed run — and
+        the extension counts toward the original hit, not a new one."""
         self._tick += 1
         for node in path:
             node.claims += 1
             node.last_use = self._tick
-        self.hits += 1
+        if not extend:
+            self.hits += 1
+            if any(node.owner is not None for node in path):
+                self.live_hits += 1
         self.claimed_tokens += len(path) * self.spec.page_size
 
     def release_claims(self, path: list[_PrefixNode]) -> None:
@@ -590,19 +686,31 @@ class PrefixCache:
 
     # -- insertion (at retire / preempt) -----------------------------------
 
-    def insert(self, tokens: list[int], page_ids: list[int]) -> list[bool]:
-        """Register a retiring slot's committed full pages. Returns one
-        bool per page: True — the slot's physical page backs (or already
+    def insert(
+        self, tokens: list[int], page_ids: list[int],
+        owner: tuple | None = None,
+    ) -> list[bool]:
+        """Register a releasing row's committed full pages. Returns one
+        bool per page: True — the row's physical page backs (or already
         backed) the index node, so it must move to the ``cached`` state;
         False — a different physical page with identical content got
-        there first, and the slot's duplicate releases normally."""
+        there first, and the row's duplicate releases normally.
+
+        ``owner`` is the releasing row's live-registration key: a live
+        node it owns converts IN PLACE to a cached node (page pinned to
+        the row's physical id — which any claimant already resolved it
+        to — owner cleared, eviction-eligible once claim-free), so
+        claimants ride the owner's retirement without re-claiming. A
+        live node owned by a DIFFERENT row stays live; this row's page
+        still parks cached iff it is the very page the node resolved to
+        (the row claimed it from that owner)."""
         ps = self.spec.page_size
         adopted: list[bool] = []
         children, parent = self.children, None
         self._tick += 1
-        for i, pid in enumerate(page_ids):
+        keys = self._page_keys(tokens, len(page_ids), ps)
+        for key, pid in zip(keys, page_ids):
             pid = int(pid)
-            key = tuple(tokens[i * ps:(i + 1) * ps])
             node = children.get(key)
             if node is None:
                 node = _PrefixNode(
@@ -611,17 +719,101 @@ class PrefixCache:
                 children[key] = node
                 self.by_page[pid] = node
                 adopted.append(True)
+            elif node.owner is not None and node.owner == owner:
+                # Our own live registration retiring: convert to cached.
+                assert node.page in (-1, pid), (node.page, pid)
+                node.page = pid
+                node.owner = None
+                node.last_use = self._tick
+                self.by_page[pid] = node
+                adopted.append(True)
             else:
                 node.last_use = self._tick
                 adopted.append(node.page == pid)
             children, parent = node.children, node
         return adopted
 
+    # -- live spans (insert-as-you-commit) ---------------------------------
+
+    def register_live(
+        self, owner: tuple, tokens: list[int], n_pages: int
+    ) -> None:
+        """Mirror a live row's committed prompt span into the index:
+        nodes for page depths ``[0, n_pages)`` of ``tokens`` that are
+        not indexed yet are created as **live** nodes owned by
+        ``owner`` (page unresolved until a claimant reads the owner's
+        table). Idempotent and monotone — the engine calls it after
+        every prefill dispatch with the owner's committed full-page
+        count; spans already indexed (cached content, another owner's
+        live span, or our own earlier chunks) are traversed untouched,
+        so the first writer of a span wins and duplicates never shadow
+        it. Registered spans are always fully inside ``[0,
+        len(prompt) - 1)`` — exactly the pages the owner's release
+        will offer to :meth:`insert`, which converts ours to cached;
+        :meth:`release_live` then only drops the owner's mirror
+        entry."""
+        ps = self.spec.page_size
+        mine = self.live.setdefault(owner, [])
+        children, parent = self.children, None
+        self._tick += 1
+        for key in self._page_keys(tokens, n_pages, ps):
+            node = children.get(key)
+            if node is None:
+                node = _PrefixNode(
+                    key=key, page=-1, parent=parent,
+                    last_use=self._tick, owner=owner,
+                )
+                children[key] = node
+                mine.append(node)
+            children, parent = node.children, node
+
+    def release_live(self, owner: tuple) -> None:
+        """Drop a releasing row's live-span mirror. The row's release
+        path runs :meth:`insert` (same pages, same owner key) FIRST,
+        which converts every node the row still owned to cached — so
+        this is pure mirror cleanup. Defensive: a node somehow still
+        owned (insert skipped — e.g. the engine released without a
+        cacheable prefix) is unlinked from the tree if it is safe to
+        (claim-free, childless), since its backing page is about to be
+        freed; a claimed or interior leftover would be a bug upstream
+        and is asserted against."""
+        for node in self.live.pop(owner, []):
+            if node.owner != owner:
+                continue  # converted to cached (or re-owned) — keep
+            assert node.claims == 0 and not node.children, (
+                "live node released while claimed or interior", node.key
+            )
+            siblings = (
+                node.parent.children if node.parent else self.children
+            )
+            if siblings.get(node.key) is node:
+                del siblings[node.key]
+
+    def move_owner(self, old: tuple, new: tuple) -> None:
+        """Re-key a live owner — adoption moves a staging lane's spans
+        (and their unresolved nodes) to the decode slot that inherited
+        its table."""
+        nodes = self.live.pop(old, [])
+        for node in nodes:
+            if node.owner == old:
+                node.owner = new
+        if nodes:
+            self.live.setdefault(new, []).extend(nodes)
+
+    def live_pages(self, owner: tuple) -> int:
+        """Live nodes ``owner`` created (committed full pages of its
+        prompt span that no earlier index entry covered)."""
+        return len(self.live.get(owner, []))
+
     # -- eviction ----------------------------------------------------------
 
     def reclaimable_pages(self) -> int:
         """Cached pages with no live claimant — exactly the pages whose
-        device refcount is 0 and that :meth:`evict_lru` may reclaim."""
+        device refcount is 0 and that :meth:`evict_lru` may reclaim.
+        Live nodes are structurally excluded (never in ``by_page``):
+        their pages sit on a live table at refcount >= 1, so treating
+        them as reclaimable would let the budget double-spend pages
+        that cannot reach the free stack."""
         return sum(1 for n in self.by_page.values() if n.claims == 0)
 
     def evict_lru(self, n: int) -> list[int]:
@@ -663,14 +855,32 @@ class PrefixCache:
     def cached_pages(self) -> int:
         return len(self.by_page)
 
+    @property
+    def live_span_pages(self) -> int:
+        """Live nodes currently registered across all owners."""
+        return sum(len(nodes) for nodes in self.live.values())
+
+    def live_pinned_pages(self) -> int:
+        """Live nodes with at least one claimant — pages pinned where
+        they sit on an owner's table (device ref >= 2)."""
+        return sum(
+            1
+            for nodes in self.live.values()
+            for n in nodes
+            if n.owner is not None and n.claims > 0
+        )
+
     def stats(self) -> dict:
         return {
             "hits": self.hits,
             "misses": self.misses,
+            "live_hits": self.live_hits,
             "claimed_tokens": self.claimed_tokens,
             "cached_pages": self.cached_pages,
             "reclaimable_pages": self.reclaimable_pages(),
             "evicted_pages": self.evicted_pages,
+            "live_span_pages": self.live_span_pages,
+            "live_pinned_pages": self.live_pinned_pages(),
         }
 
 
@@ -695,7 +905,25 @@ class PageBudget:
     moment it is staged — the background prefill program itself writes
     at most ``pages_for(plen - 1)`` of that — so adoption is a pure
     key move (:meth:`note_adopt`) that cannot change ``used_worst()``
-    and provably never needs pages the pool cannot supply."""
+    and provably never needs pages the pool cannot supply.
+
+    **Live prefix sharing double-counts pinned pages — safely.** A
+    claimant of a live span budgets its FULL prompt length (its
+    ``slot_len`` includes the claimed prefix) while the owner's term
+    covers the same physical pages, so ``used_worst()`` counts a
+    pinned page once per mapping row. That is the conservative
+    direction everywhere the budget is load-bearing: ``can_admit`` /
+    ``needs_preemption`` over-estimate, and the free-stack-sufficiency
+    argument of :meth:`evict_deficit` only needs *referenced pages <=
+    used_worst()*, which double-counting can never violate. It is also
+    necessary: preempting the owner does NOT return pinned pages to
+    the stack (claimants keep them at ref >= 1), so the claimant's own
+    term must stand for them after the owner's term vanishes — which
+    it does, because the claimant's length already covers its claimed
+    prefix. Pinned pages are likewise never eviction fodder:
+    :meth:`PrefixCache.reclaimable_pages` counts only claim-free
+    CACHED nodes, so ``evict_deficit`` treats live-claimed pages as
+    non-reclaimable by construction."""
 
     spec: PageSpec
     gamma: int
@@ -723,7 +951,10 @@ class PageBudget:
         pool occupancy the per-step allocation telemetry reports (the
         device may briefly hold up to ``used_worst()``). Staging lanes
         count at full-prompt coverage — an upper bound on what their
-        background prefill has materialized so far."""
+        background prefill has materialized so far. With live prefix
+        sharing, pages pinned by multiple rows count once per mapping
+        row (an upper bound on distinct physical pages, matching
+        ``used_worst()``'s convention)."""
         return (
             sum(self.spec.pages_for(n) for n in self.slot_len.values())
             + sum(self.spec.pages_for(n) for n in self.stage_len.values())

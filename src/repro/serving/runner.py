@@ -260,7 +260,10 @@ def prefill_body(
     """
     c = cfg.prefill_chunk
     rem = batch.lens - 1 - batch.t_pref
-    pending = batch.active & ~batch.ready
+    # Held rows (riders on a live writer's prefill) consume nothing:
+    # their committed prefix is being written by another row, and the
+    # engine advances t_pref by claiming the writer's pages instead.
+    pending = batch.active & ~batch.ready & ~batch.hold
     n = jnp.where(pending, jnp.clip(rem, 0, c), 0)   # tokens this chunk
     # Pages are allocated incrementally as the prompt streams in — a
     # long-prompt slot only holds pages for what it has consumed so far.
@@ -313,7 +316,8 @@ def stage_prefill_body(
     spec = paging.spec_of(cfg)
     c = cfg.prefill_chunk
     rem = stage.plen - 1 - stage.pos
-    pending = stage.active & ~stage.ready
+    # Riders hold like in prefill_body — the engine rides the writer.
+    pending = stage.active & ~stage.ready & ~stage.hold
     n = jnp.where(pending, jnp.clip(rem, 0, c), 0)  # tokens this chunk
     table, used, pool, ok = paging.ensure(
         spec, stage.page_table, stage.pages_used, pool,
@@ -365,6 +369,7 @@ def _release_stage_row(
     z = jnp.zeros_like(stage.pos)
     return stage._replace(
         active=stage.active & ~mask, ready=stage.ready & ~mask,
+        hold=stage.hold & ~mask,
         pos=jnp.where(mask, z, stage.pos),
         plen=jnp.where(mask, z, stage.plen),
         page_table=table, pages_used=used,
@@ -644,6 +649,14 @@ class Runner:
                     model, cfg, self.chunk_slack, role,
                     feature="prefix_cache",
                 )
+        if getattr(cfg, "live_share", False):
+            # Live sharing leans on the prefix cache everywhere: live
+            # spans live in the SAME radix index, rides abort by parking
+            # the writer's committed pages cached, and live→cached
+            # conversion at release is what lets a claimant outlive its
+            # writer. Without prefix_cache none of those paths exist.
+            if not getattr(cfg, "prefix_cache", False):
+                raise ValueError("live_share=True requires prefix_cache=True")
         if getattr(cfg, "async_prefill", False):
             # The staging program's batch is the stage-slot count, not
             # max_slots: only pooled (batch-free) K/V written there can
@@ -762,7 +775,8 @@ class Runner:
 def _release_slot(spec, batch: BatchState, slot, cache_cols):
     mask = jnp.arange(batch.num_slots) == slot
     batch = batch._replace(
-        active=batch.active & ~mask, ready=batch.ready & ~mask
+        active=batch.active & ~mask, ready=batch.ready & ~mask,
+        hold=batch.hold & ~mask,
     )
     if spec is None:
         return batch

@@ -1,12 +1,32 @@
 """Host-side request lifecycle for the serving engine.
 
 The :class:`Scheduler` owns everything that is *about requests* rather
-than about tensors: the FIFO admission queue, the slot→request mapping,
+than about tensors: the admission queue, the slot→request mapping,
 retirement, preemption, and per-request metrics (TTFT, tokens/s,
 acceptance rate). It holds a host mirror of the device-resident prefill
 progress — chunk counts are deterministic, so the mirror needs no device
 sync: after each dispatched prefill step every prefilling slot has
 consumed exactly ``min(chunk, remaining)`` more prompt tokens.
+
+Admission is FIFO by default. With **cache-aware admission** (the
+engine installs ``match_fn`` when live prefix sharing is on), both
+lanes admit the queued request with the LONGEST page-aligned prefix
+match against the live-inclusive prefix index instead of the head of
+the queue — a burst sharing a prefix admits back-to-back while the
+span is hot, instead of interleaving cold prompts between the hits.
+Starvation is bounded by an aging counter: every time a request is
+overtaken its ``age`` ticks, and once it reaches ``aging_limit`` it is
+admitted before any younger request regardless of match (FIFO among
+the aged). Selection is deterministic — match pages, then age, then
+submit order — so admission order (and therefore allocation order)
+stays reproducible.
+
+**Riding** (claim-behind-the-writer): a row admitted behind a live
+writer of its own prompt prefix holds its prefill while the writer's
+chunks commit (the engine extends its claim instead). A riding row is
+excluded from the prefill mirror's dispatch accounting — the device
+program skips held rows, so the mirror must too — via
+:meth:`set_slot_riding` / :meth:`set_stage_riding`.
 
 Paged engines hand the scheduler a :class:`repro.serving.paging.PageBudget`
 — admission then goes by *free-page budget* instead of blind slot-fill:
@@ -83,6 +103,17 @@ class RequestState:
     # decode throughput (pre-first-token waits are already outside the
     # first_token_t -> finish_t window).
     requeue_wait_s: float = 0.0
+    # Requeue waits BEFORE the first token (a staged background prefill
+    # killed under pressure, or a still-prefilling decode slot
+    # preempted): accumulated separately because they land inside the
+    # submit -> stage_t window — ttft_queue_s subtracts them so a
+    # killed staging attempt's dead time isn't misattributed to queue
+    # wait (and never pollutes the post-first-token decode window that
+    # tokens_per_s corrects by requeue_wait_s).
+    pre_first_requeue_wait_s: float = 0.0
+    # Times this queued request was overtaken by cache-aware admission;
+    # at Scheduler.aging_limit it regains absolute priority.
+    age: int = 0
     _preempt_t: float | None = None
 
     def serve_prompt(self) -> list[int]:
@@ -106,10 +137,14 @@ class RequestState:
     @property
     def ttft_queue_s(self) -> float | None:
         """Submit → prefill start (queue wait; staging admission in the
-        async engine, decode-slot admission in the serial one)."""
+        async engine, decode-slot admission in the serial one), minus
+        any pre-first-token requeue waits — time between a staged kill
+        (or still-prefilling preemption) and the retry's readmission is
+        preemption dead time, not queue wait, and lives in
+        :attr:`pre_first_requeue_wait_s`."""
         if self.first_token_t is None or self.stage_t is None:
             return None
-        return self.stage_t - self.submit_t
+        return self.stage_t - self.submit_t - self.pre_first_requeue_wait_s
 
     @property
     def ttft_prefill_s(self) -> float | None:
@@ -163,7 +198,7 @@ class RequestState:
 
 
 class Scheduler:
-    """FIFO queue + slot bookkeeping + per-request metrics."""
+    """Admission queue + slot bookkeeping + per-request metrics."""
 
     def __init__(
         self,
@@ -173,6 +208,7 @@ class Scheduler:
         clock=time.perf_counter,
         budget: PageBudget | None = None,
         num_stage_slots: int = 0,
+        aging_limit: int = 8,
     ):
         self.num_slots = num_slots
         self.default_max_new = default_max_new
@@ -182,15 +218,23 @@ class Scheduler:
         self.queue: deque[RequestState] = deque()
         self.slot_req: list[RequestState | None] = [None] * num_slots
         self._prefill_left = [0] * num_slots
+        self._slot_riding = [False] * num_slots
         # Async staging lane (num_stage_slots > 0): the submit queue
         # feeds staging slots; completed stages queue for adoption.
         self.num_stage_slots = num_stage_slots
         self.stage_req: list[RequestState | None] = [None] * num_stage_slots
         self._stage_left = [0] * num_stage_slots
+        self._stage_riding = [False] * num_stage_slots
         self.ready_q: deque[int] = deque()  # staged sids awaiting adoption
         self.done: dict[int, RequestState] = {}
         self._next_rid = 0
         self._admit_seq = 0
+        # Cache-aware admission: the engine installs a prompt ->
+        # matched-pages oracle (longest page-aligned prefix claimable
+        # from the live-inclusive prefix index, including what a live
+        # writer will still commit); None keeps admission FIFO.
+        self.match_fn = None
+        self.aging_limit = aging_limit
 
     # -- submission / admission --------------------------------------------
 
@@ -212,15 +256,25 @@ class Scheduler:
         )
         return rid
 
-    def _pop_next(self, now: float) -> RequestState:
-        """Pop the queue head and stamp the admission bookkeeping BOTH
+    def _pop_at(self, idx: int, now: float) -> RequestState:
+        """Pop ``queue[idx]`` and stamp the admission bookkeeping BOTH
         lanes share: the admit clock, requeue-wait accounting for
-        resumed preemption victims, the monotonic ``admit_seq`` (LIFO
-        victim order), and the TTFT prefill-start anchor."""
-        req = self.queue.popleft()
+        resumed preemption victims (routed by whether the first token
+        has emitted — see :attr:`RequestState.pre_first_requeue_wait_s`),
+        the monotonic ``admit_seq`` (LIFO victim order), and the TTFT
+        prefill-start anchor. Requests overtaken by cache-aware
+        selection (everything in front of ``idx``) age by one."""
+        req = self.queue[idx]
+        del self.queue[idx]
+        for j in range(idx):
+            self.queue[j].age += 1
+        req.age = 0
         req.admit_t = now
-        if req._preempt_t is not None:  # resuming after preemption
-            req.requeue_wait_s += now - req._preempt_t
+        if req._preempt_t is not None:  # resuming after preemption/kill
+            if req.first_token_t is None:
+                req.pre_first_requeue_wait_s += now - req._preempt_t
+            else:
+                req.requeue_wait_s += now - req._preempt_t
             req._preempt_t = None
         req.admit_seq = self._admit_seq
         self._admit_seq += 1
@@ -228,20 +282,41 @@ class Scheduler:
             req.stage_t = now
         return req
 
+    def _select_index(self) -> int:
+        """Queue index the next admission should take. FIFO unless the
+        engine installed ``match_fn``; then: any request aged to
+        ``aging_limit`` goes first (FIFO among the aged), otherwise the
+        longest live-inclusive prefix match wins, ties broken by queue
+        order. Deterministic by construction."""
+        if self.match_fn is None or len(self.queue) <= 1:
+            return 0
+        for i, req in enumerate(self.queue):
+            if req.age >= self.aging_limit:
+                return i
+        best, best_pages = 0, -1
+        for i, req in enumerate(self.queue):
+            pages = self.match_fn(req.serve_prompt())
+            if pages > best_pages:
+                best, best_pages = i, pages
+        return best
+
     def admit(self) -> list[tuple[int, RequestState]]:
-        """Fill free slots from the queue (FIFO). With a page budget,
-        admission stops at the first request the pool cannot cover
-        (head-of-line order is preserved — no unfair overtaking by short
-        prompts). Returns the new (slot, request) pairs; the engine
-        stages them on device."""
+        """Fill free slots from the queue — FIFO, or cache-aware when
+        ``match_fn`` is installed (see :meth:`_select_index`). With a
+        page budget, admission stops at the first *selected* request the
+        pool cannot cover (the selected request keeps its claim on the
+        next free slot — no further overtaking past a budget stall).
+        Returns the new (slot, request) pairs; the engine stages them on
+        device."""
         admitted = []
         now = self.clock()
         for slot in range(self.num_slots):
             if self.slot_req[slot] is None and self.queue:
-                plen = len(self.queue[0].serve_prompt())
+                idx = self._select_index()
+                plen = len(self.queue[idx].serve_prompt())
                 if self.budget is not None and not self.budget.can_admit(plen):
                     break
-                req = self._pop_next(now)
+                req = self._pop_at(idx, now)
                 self.slot_req[slot] = req
                 # Both models must consume plen - 1 prompt tokens.
                 self._prefill_left[slot] = max(plen - 1, 0)
@@ -276,22 +351,36 @@ class Scheduler:
 
     # -- prefill mirror ----------------------------------------------------
 
+    def set_slot_riding(self, slot: int, riding: bool) -> None:
+        """Mark/unmark a decode slot as riding a live writer's prefill
+        (the device program holds its prefill; the engine grows its
+        claim instead). Riding slots are excluded from the prefill
+        mirror — they consume no chunks until the ride ends."""
+        self._slot_riding[slot] = riding
+
+    def slot_riding(self, slot: int) -> bool:
+        return self._slot_riding[slot]
+
     def prefill_pending(self) -> bool:
         return any(
-            left > 0 and self.slot_req[slot] is not None
+            left > 0
+            and self.slot_req[slot] is not None
+            and not self._slot_riding[slot]
             for slot, left in enumerate(self._prefill_left)
         )
 
     def note_prefill_dispatch(self) -> int:
         """Account one dispatched chunked-prefill step: every prefilling
-        slot advanced by ``min(chunk, remaining)`` tokens. Returns the
-        total prompt tokens consumed by the dispatch — the engine's
-        prefill-volume telemetry (what prefix-cache hits shrink)."""
+        slot advanced by ``min(chunk, remaining)`` tokens (riding slots
+        are held by the device program, so the mirror skips them too).
+        Returns the total prompt tokens consumed by the dispatch — the
+        engine's prefill-volume telemetry (what prefix-cache hits
+        shrink)."""
         consumed = 0
         now = self.clock()
         for slot in range(self.num_slots):
             req = self.slot_req[slot]
-            if req is not None:
+            if req is not None and not self._slot_riding[slot]:
                 left = self._prefill_left[slot]
                 consumed += min(left, self.prefill_chunk)
                 self._prefill_left[slot] = max(left - self.prefill_chunk, 0)
@@ -320,8 +409,8 @@ class Scheduler:
     # -- async staging lane ------------------------------------------------
 
     def stage_admit(self) -> list[tuple[int, RequestState]]:
-        """Fill free *staging* slots from the queue (FIFO, same
-        head-of-line budget rule as :meth:`admit` — a staging slot
+        """Fill free *staging* slots from the queue (FIFO or cache-aware
+        like :meth:`admit`, same budget stall rule — a staging slot
         reserves its eventual decode worst case up front, which is what
         makes adoption infallible). Returns the new (sid, request)
         pairs; the engine stages them on device."""
@@ -329,10 +418,11 @@ class Scheduler:
         now = self.clock()
         for sid in range(self.num_stage_slots):
             if self.stage_req[sid] is None and self.queue:
-                plen = len(self.queue[0].serve_prompt())
+                idx = self._select_index()
+                plen = len(self.queue[idx].serve_prompt())
                 if self.budget is not None and not self.budget.can_admit(plen):
                     break
-                req = self._pop_next(now)
+                req = self._pop_at(idx, now)
                 self.stage_req[sid] = req
                 self._stage_left[sid] = max(plen - 1, 0)
                 if self.budget is not None:
@@ -354,22 +444,31 @@ class Scheduler:
             if req is not None and req.first_token_t is None:
                 req.ready_t = self.clock()
 
+    def set_stage_riding(self, sid: int, riding: bool) -> None:
+        """Staging twin of :meth:`set_slot_riding`."""
+        self._stage_riding[sid] = riding
+
+    def stage_riding(self, sid: int) -> bool:
+        return self._stage_riding[sid]
+
     def stage_pending(self) -> bool:
-        """Any staging slot still owing prefill chunks?"""
+        """Any (non-riding) staging slot still owing prefill chunks?"""
         return any(
-            left > 0 and self.stage_req[sid] is not None
+            left > 0
+            and self.stage_req[sid] is not None
+            and not self._stage_riding[sid]
             for sid, left in enumerate(self._stage_left)
         )
 
     def note_stage_prefill_dispatch(self) -> int:
         """Account one dispatched background-prefill chunk (the async
-        twin of :meth:`note_prefill_dispatch`): every staging slot
-        advanced by ``min(chunk, remaining)``; slots reaching zero join
-        the ready queue in sid order. Returns the prompt tokens the
+        twin of :meth:`note_prefill_dispatch`): every non-riding staging
+        slot advanced by ``min(chunk, remaining)``; slots reaching zero
+        join the ready queue in sid order. Returns the prompt tokens the
         dispatch consumed."""
         consumed = 0
         for sid in range(self.num_stage_slots):
-            if self.stage_req[sid] is not None:
+            if self.stage_req[sid] is not None and not self._stage_riding[sid]:
                 left = self._stage_left[sid]
                 consumed += min(left, self.prefill_chunk)
                 self._stage_left[sid] = max(left - self.prefill_chunk, 0)
@@ -394,6 +493,11 @@ class Scheduler:
             self.stage_req[sid] = None
             self.slot_req[slot] = req
             self._prefill_left[slot] = 0
+            # A ride that completed exactly at the prompt frontier can
+            # leave the row ready while still flagged; the flag moves
+            # with the request (the engine re-keys the ride itself).
+            self._slot_riding[slot] = self._stage_riding[sid]
+            self._stage_riding[sid] = False
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
             if self.budget is not None:
@@ -424,6 +528,7 @@ class Scheduler:
         assert req is not None, sid
         self.stage_req[sid] = None
         self._stage_left[sid] = 0
+        self._stage_riding[sid] = False
         if sid in self.ready_q:
             self.ready_q.remove(sid)
         if self.budget is not None:
@@ -433,14 +538,17 @@ class Scheduler:
 
     def _requeue_victim(self, req: RequestState) -> None:
         """Shared preemption bookkeeping for BOTH lanes: count the
-        preemption, stamp the requeue-wait anchor for victims that have
-        already emitted (the coming wait must stay out of their decode
-        ``tokens_per_s`` — the PR 4 metrics rule; a restaged victim
-        killed again mid-stage still qualifies), and requeue at the
-        FRONT so progress-holding requests resume first."""
+        preemption, stamp the requeue-wait anchor unconditionally —
+        :meth:`_pop_at` routes the coming wait to ``requeue_wait_s``
+        for victims that have already emitted (kept out of their decode
+        ``tokens_per_s`` — the PR 4 metrics rule) and to
+        ``pre_first_requeue_wait_s`` for pre-first-token victims (a
+        killed staging attempt, a still-prefilling preemption) so
+        ``ttft_queue_s`` doesn't absorb kill→re-stage dead time — and
+        requeue at the FRONT so progress-holding requests resume
+        first."""
         req.preemptions += 1
-        if req.first_token_t is not None:
-            req._preempt_t = self.clock()
+        req._preempt_t = self.clock()
         self.queue.appendleft(req)
 
     def stage_prefill_left(self, sid: int) -> int:
@@ -458,6 +566,7 @@ class Scheduler:
         self.done[req.rid] = req
         self.slot_req[slot] = None
         self._prefill_left[slot] = 0
+        self._slot_riding[slot] = False
         if self.budget is not None:
             self.budget.note_release(slot)
         return req
@@ -493,6 +602,7 @@ class Scheduler:
         assert req is not None, slot
         self.slot_req[slot] = None
         self._prefill_left[slot] = 0
+        self._slot_riding[slot] = False
         if self.budget is not None:
             self.budget.note_release(slot)
         self._requeue_victim(req)

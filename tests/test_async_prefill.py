@@ -281,6 +281,37 @@ class TestTwoLaneScheduler:
         assert req.ttft_prefill_s == prefill_s > 0
         assert req.ttft_decode_s == req.first_token_t - req.ready_t > 0
 
+    def test_staged_kill_wait_routed_out_of_ttft_queue(self):
+        """The dead time between a staged kill and the retry's
+        re-staging must accumulate in ``pre_first_requeue_wait_s`` —
+        subtracted from ``ttft_queue_s`` (whose ``stage_t`` anchor
+        restarts at the retry, so prefill time isn't double-counted
+        across the two staging attempts) and kept out of the
+        post-first-token ``requeue_wait_s`` that ``tokens_per_s``
+        corrects by."""
+        s = Scheduler(1, 8, 4, clock=_FakeClock(), num_stage_slots=1)
+        s.submit([1] * 9)                      # submit_t = 1
+        (sid, req), = s.stage_admit()          # stage_t = 2
+        s.note_stage_prefill_dispatch()        # 4/8 tokens staged
+        s.kill_stage(sid)                      # _preempt_t = 3
+        s.clock()                              # 4: queue sits while the
+        s.clock()                              # 5: pool stays tight
+        (sid2, req2), = s.stage_admit()        # re-staged at 6
+        assert req2 is req
+        assert req.pre_first_requeue_wait_s == 3.0   # kill(3) -> restage(6)
+        assert req.requeue_wait_s == 0.0       # decode correction untouched
+        assert req.stage_t == 6.0              # anchor restarted
+        s.note_stage_prefill_dispatch()        # 4/8 of attempt 2
+        s.note_stage_prefill_dispatch()        # ready_t = 7
+        s.adopt()
+        req.first_token_t = s.clock()          # 8
+        assert req.ttft_queue_s == 2.0         # NOT inflated by the kill
+        assert req.ttft_prefill_s == 1.0       # attempt 2 only
+        assert req.ttft_s == (
+            req.ttft_queue_s + req.ttft_prefill_s + req.ttft_decode_s
+            + req.pre_first_requeue_wait_s
+        )
+
 
 # ---------------------------------------------------------------------------
 # engine identity + invariants
