@@ -18,6 +18,13 @@ Three claims measured:
 ``--block-shape-sweep`` additionally times the paged kernels over a
 grid of KV tile shapes (the pool page geometry) — see
 :func:`run_block_shape_sweep`.
+
+``--compiled-json PATH`` (e.g. ``results/BENCH_kernels.json``) writes a
+machine-readable record of the sweep: execution mode
+(compiled-vs-interpret and which timing column is meaningful there),
+every candidate KV tile / page geometry with its timings, and the
+best-shape selection per kernel — so the chosen page geometry is a
+tracked artifact, not a console line.
 """
 
 from __future__ import annotations
@@ -249,6 +256,43 @@ def run(quick: bool = True):
     return rows
 
 
+def write_compiled_json(path: str, quick: bool = True) -> dict:
+    """``--compiled-json``: run the KV-tile sweep and persist it. The
+    document records the execution mode (so a reader never compares
+    interpret-mode numbers against compiled ones), the timing column
+    that is meaningful on this backend, every swept page geometry, and
+    the per-kernel best shape."""
+    import json
+    import os
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows = run_block_shape_sweep(quick=quick)
+    doc = {
+        "bench": "kernels",
+        "backend": jax.default_backend(),
+        "mode": "compiled" if on_tpu else "interpret",
+        "timing_column": "us_per_call" if on_tpu else "ref_us_per_call",
+        "rows": rows,
+        "best": {
+            kind: {
+                "name": r["name"],
+                "kv_tile": r["kv_tile"],
+                "page": r["kv_tile"][0],
+                "us_per_call": r["us_per_call"],
+                "ref_us_per_call": r["ref_us_per_call"],
+            }
+            for kind in ("decode", "prefill")
+            for r in rows
+            if r.get("best_in_sweep") and f"sweep_{kind}" in r["name"]
+        },
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -258,9 +302,19 @@ if __name__ == "__main__":
         help="sweep the paged kernels over a grid of KV tile shapes "
              "(compiled on TPU / interpret elsewhere)",
     )
+    ap.add_argument(
+        "--compiled-json", metavar="PATH",
+        help="run the KV-tile sweep and write mode + per-shape timings "
+             "+ best-shape selection as JSON (e.g. "
+             "results/BENCH_kernels.json)",
+    )
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    if args.block_shape_sweep:
+    if args.compiled_json:
+        doc = write_compiled_json(args.compiled_json, quick=args.quick)
+        print(f"wrote {args.compiled_json}: mode={doc['mode']}, "
+              f"best={doc['best']}")
+    elif args.block_shape_sweep:
         for r in run_block_shape_sweep(quick=args.quick):
             print(r)
     else:

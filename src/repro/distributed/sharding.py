@@ -191,6 +191,47 @@ def cache_shardings(model: Model, mesh: Mesh, cache, shard_seq: bool = False,
     )
 
 
+def carve_pods(mesh, prefill_data: int):
+    """Split a 2-D ``("data", "model")`` mesh into a (prefill pod,
+    decode pod) pair along the data axis: the first ``prefill_data``
+    data-rows keep every model column and become the prefill pod, the
+    remaining rows the decode pod. Works on a concrete :class:`Mesh`
+    (rows of ``mesh.devices`` are physically disjoint device groups —
+    the serving engine places the staging executable on one and the
+    decode executable on the other) and on an
+    :class:`~jax.sharding.AbstractMesh` (the launch dry-run lowers each
+    pod's program against its reduced abstract geometry without
+    touching device state). Both pods inherit the axis names, so every
+    per-pod sharding spec in this module (:func:`param_shardings`,
+    :func:`cache_shardings`, ...) applies unchanged — per-pod sharding
+    is just the same rules over a smaller data axis."""
+    from jax.sharding import AbstractMesh
+
+    n_data = mesh.shape["data"]
+    if not 0 < prefill_data < n_data:
+        raise ValueError(
+            f"prefill_data={prefill_data} must split data={n_data} "
+            "into two non-empty pods"
+        )
+    if set(mesh.axis_names) != {"data", "model"}:
+        raise ValueError(
+            f"carve_pods needs a ('data', 'model') mesh, got "
+            f"{mesh.axis_names}"
+        )
+    n_model = mesh.shape["model"]
+    if isinstance(mesh, AbstractMesh):
+        return (
+            AbstractMesh((("data", prefill_data), ("model", n_model))),
+            AbstractMesh((("data", n_data - prefill_data),
+                          ("model", n_model))),
+        )
+    devs = mesh.devices.reshape(n_data, n_model)
+    return (
+        Mesh(devs[:prefill_data], ("data", "model")),
+        Mesh(devs[prefill_data:], ("data", "model")),
+    )
+
+
 def batch_sharding(mesh: Mesh) -> NamedSharding:
     dax = data_axes(mesh)
     return NamedSharding(mesh, P(dax if len(dax) > 1 else dax[0]))

@@ -16,6 +16,38 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_disaggregated_meshes(
+    n_prefill: int, *, model: int = 1, devices=None
+):
+    """Carve the device set into a (prefill mesh, decode mesh) pair for
+    ``EngineConfig(disaggregated=True)``: the first ``n_prefill``
+    devices become the prefill pod, the rest the decode pod, each
+    reshaped ``(pod_size // model, model)`` over ``("data", "model")``
+    axes. The two pods are disjoint by construction, so the staging
+    prefill executable and the decode executable never contend for a
+    chip — the N:M prefill:decode provisioning ratio is just
+    ``n_prefill`` against the remainder."""
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devices = list(jax.devices() if devices is None else devices)
+    if not 0 < n_prefill < len(devices):
+        raise ValueError(
+            f"n_prefill={n_prefill} must split {len(devices)} devices "
+            "into two non-empty pods"
+        )
+    pods = []
+    for group in (devices[:n_prefill], devices[n_prefill:]):
+        if len(group) % model:
+            raise ValueError(
+                f"pod of {len(group)} devices not divisible by "
+                f"model={model}"
+            )
+        arr = np.asarray(group).reshape(len(group) // model, model)
+        pods.append(Mesh(arr, ("data", "model")))
+    return tuple(pods)
+
+
 # TPU v5e hardware constants used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12       # per chip
 HBM_BW = 819e9                 # bytes/s per chip

@@ -93,6 +93,15 @@ VARIANTS: dict[str, dict] = {
     # two-program serve loop, so its HLO bytes/collectives are
     # accounted separately from decode's.
     "async-prefill": {"serve_paged": True, "serve_async_stage": True},
+    # Device-disaggregated prefill: carve the mesh into a prefill pod
+    # and a decode pod (sharding.carve_pods along the data axis) and
+    # lower the staging executable AGAINST THE PREFILL POD ONLY, over
+    # the prefill pod's own (smaller) page pool — the decode pod
+    # dispatches zero prefill programs by construction, which
+    # test_launch asserts structurally off the returned shardings.
+    "disagg-prefill": {
+        "serve_paged": True, "serve_async_stage": True, "serve_disagg": True,
+    },
 }
 
 
@@ -233,16 +242,28 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
     # accounting covers both memory modes.
     paged = bool(opts.get("serve_paged", False))
     stage_async = bool(opts.get("serve_async_stage", False))
+    disagg = bool(opts.get("serve_disagg", False))
     e_cfg = EngineConfig(
         gamma=GAMMA, verifier="block", max_slots=b, max_len=max_len,
         temperature=1.0, residual_backend="jnp", paged=paged,
         prefill_chunk=GAMMA + 1,  # page slack == the serve chunk slack
-        async_prefill=stage_async, stage_slots=b,
+        async_prefill=stage_async, stage_slots=b, disaggregated=disagg,
     )
     verify = verification.get_ctx_verifier(
         e_cfg.verifier, residual_backend=e_cfg.residual_backend
     )
     page_spec = paging.spec_of(e_cfg)
+    if disagg:
+        # The disagg variant lowers the PREFILL POD's executable: carve
+        # the pods (1/4 of the data axis prefills — an 8/24 split on the
+        # fake 32-device mesh) and size everything to the prefill pod's
+        # own staging pool. The decode pod's program is exactly the
+        # paged-serve step on its own submesh — nothing prefill-shaped
+        # lowers there.
+        page_spec = paging.stage_spec_of(e_cfg)
+        mesh, _decode_mesh = shd.carve_pods(
+            mesh, max(1, mesh.shape["data"] // 4)
+        )
     page_pool = (
         (page_spec.num_pages, page_spec.page_size)
         if page_spec is not None else None
@@ -318,7 +339,7 @@ def build_serve_step(model: Model, mesh, shape: ShapeCfg, opts=None):
         # itself shards pages-over-data via cache_shardings).
         def stage_step(t_params, d_params, t_cache_, d_cache_, stage, pool):
             return serving_runner.stage_prefill_body(
-                model, drafter, e_cfg,
+                model, drafter, e_cfg, page_spec,
                 t_params, d_params, t_cache_, d_cache_, stage, pool,
             )
 

@@ -31,6 +31,14 @@ cache. Decode slots hold only ready work, so a burst of long cold
 prompts no longer steals decode iterations from in-flight requests.
 ``async_prefill=False`` keeps the single-lane loop below, bit-for-bit.
 
+Adding ``disaggregated=True`` splits the two lanes across DEVICE pods:
+the staging lanes get their own page pool + cache pair committed to a
+prefill device group, the decode batch lives on a decode group, and
+adoption becomes an explicit asynchronous page transfer (jitted pack on
+the prefill pod → ``jax.device_put`` → jitted unpack on the decode
+pod), overlapped with decode and gated so a decode slot never maps an
+un-arrived page. Bit-identical to ``async_prefill=True``.
+
 A slot retired while an iteration was already in flight simply wastes
 that slot's lane for one step (its outputs are dropped); the slot's
 buffers and cache rows are reset at readmission. Verification routes the
@@ -150,6 +158,32 @@ class EngineConfig:
     # claimed page holds bitwise the K/V the rider would recompute.
     # Requires prefix_cache=True.
     live_share: bool = False
+    # Device-disaggregated prefill (requires async_prefill=True): the
+    # staging lanes get their OWN page pool and cache pair
+    # (``paging.stage_spec_of``), committed to a prefill device group,
+    # while the decode batch/caches live on a decode group — the two
+    # executables stop chaining through a shared pool, so background
+    # prefill truly overlaps decode. Adoption becomes an explicit page
+    # TRANSFER instead of PR 5's mask flip: a jitted pack gathers the
+    # staged pages into a compact ``(n_pages, page, n_kv, hd)`` buffer
+    # on the prefill pod, ``jax.device_put`` ships it (dispatched
+    # asynchronously, overlapped with decode), and a jitted unpack
+    # allocates decode-pool pages and scatters the buffer in. A
+    # transfer-inflight gate keeps a ready lane out of the decode batch
+    # until its transfer has been dispatched; because the unpack
+    # CONSUMES the device_put results before installing the table,
+    # decode can never map an un-arrived page (per-device program order
+    # + data dependencies — a dataflow fact, not a host-timing one).
+    # Bit-identical to ``async_prefill=True`` on a single process:
+    # prefill consumes no PRNG and transfers move K/V bitwise.
+    disaggregated: bool = False
+    # Pod placement: None (defaults — prefill pod = jax.devices()[-1],
+    # decode pod = jax.devices()[0]), a single jax.Device, a device
+    # list, or a Mesh (see launch.mesh.make_disaggregated_meshes /
+    # distributed.sharding.carve_pods); only the group's first device
+    # anchors the single-process engine's placement.
+    prefill_mesh: object | None = None
+    decode_mesh: object | None = None
 
 
 class SpecEngine:
@@ -183,15 +217,56 @@ class SpecEngine:
             paging.PageBudget(spec, cfg.gamma, num_paths=cfg.num_paths)
             if spec is not None else None
         )
+        self._disagg = bool(cfg.disaggregated) and spec is not None
+        stage_budget = (
+            paging.PageBudget(self.runner.stage_spec, cfg.gamma)
+            if self._disagg else None
+        )
         self.scheduler = Scheduler(
             cfg.max_slots, cfg.max_new_tokens, cfg.prefill_chunk,
             budget=budget,
             num_stage_slots=cfg.stage_slots if cfg.async_prefill else 0,
+            stage_budget=stage_budget,
         )
         self.stage = (
-            batch_mod.init_stage(cfg.stage_slots, cfg.max_len, spec)
+            batch_mod.init_stage(
+                cfg.stage_slots, cfg.max_len, self.runner.stage_spec
+            )
             if cfg.async_prefill else None
         )
+        # Disaggregated: the prefill pod owns its own pool + cache pair
+        # and a params replica; every stage-side pytree is COMMITTED to
+        # the prefill device and every decode-side one to the decode
+        # device, so jit placement (computation follows committed
+        # inputs) pins the two executables to their pods.
+        if self._disagg:
+            self._prefill_dev, self._decode_dev = self._pod_devices()
+            self.stage_pool = jax.device_put(
+                paging.init_pool(self.runner.stage_spec), self._prefill_dev
+            )
+            t_sc, d_sc = self.runner.init_stage_caches()
+            self.t_stage_cache = jax.device_put(t_sc, self._prefill_dev)
+            self.d_stage_cache = jax.device_put(d_sc, self._prefill_dev)
+            self.t_params_stage = jax.device_put(
+                self.t_params, self._prefill_dev
+            )
+            self.d_params_stage = jax.device_put(
+                self.d_params, self._prefill_dev
+            )
+            self.stage = jax.device_put(self.stage, self._prefill_dev)
+            self.t_params = jax.device_put(self.t_params, self._decode_dev)
+            self.d_params = jax.device_put(self.d_params, self._decode_dev)
+            self.t_cache = jax.device_put(self.t_cache, self._decode_dev)
+            self.d_cache = jax.device_put(self.d_cache, self._decode_dev)
+            self.batch = jax.device_put(self.batch, self._decode_dev)
+        # In-flight page transfers: sid -> {"n", "t_packed", "d_packed"}
+        # (the adoption gate — a ready lane adopts only once its entry
+        # exists, i.e. its pack + device_put chain has been dispatched);
+        # ``_transfer_log`` records ("dispatch"|"adopt", sid, loop_iter)
+        # tuples for the ordering invariants the tests assert.
+        self._transfers: dict[int, dict] = {}
+        self._transfer_log: list[tuple] = []
+        self._loop_iter = 0
         self.prefix_cache = (
             paging.PrefixCache(spec)
             if cfg.prefix_cache and spec is not None else None
@@ -206,10 +281,39 @@ class SpecEngine:
         self._live_on = cfg.live_share and self.prefix_cache is not None
         self._live_prompt: dict[tuple, list[int]] = {}
         self._rides: dict[tuple, dict] = {}
-        if self._live_on:
+        if self._live_on and not self._disagg:
+            # Disaggregated staging lanes cannot claim (disjoint id
+            # spaces — see _stage), so cache-aware admission would
+            # reorder the queue for zero benefit; staging stays FIFO.
             self.scheduler.match_fn = self._match_pages
         self.key = jax.random.key(seed)
         self.last_stats: dict = {}
+
+    def _pod_devices(self):
+        """Resolve ``(prefill device, decode device)`` from the config's
+        mesh args — each may be None, a single :class:`jax.Device`, a
+        device sequence, or a Mesh; only the first device anchors
+        placement in the single-process engine. Defaults pick opposite
+        ends of ``jax.devices()`` so a fake multi-device CPU split
+        (``--xla_force_host_platform_device_count``) disaggregates for
+        real, while one device degenerates to same-device transfers
+        (still bit-identical, exercising the full pack/ship/unpack
+        path)."""
+
+        def first(arg, default):
+            if arg is None:
+                return default
+            devs = getattr(arg, "devices", None)  # Mesh
+            if devs is not None:
+                return np.asarray(devs).flat[0]
+            if isinstance(arg, (list, tuple)):
+                return arg[0]
+            return arg
+        devs = jax.devices()
+        return (
+            first(self.cfg.prefill_mesh, devs[-1]),
+            first(self.cfg.decode_mesh, devs[0]),
+        )
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -287,8 +391,19 @@ class SpecEngine:
         claim the longest cached — or, with live sharing, live —
         page-aligned prefix into the *staging* table, so the background
         prefill starts at the first uncached position; a rider stages
-        held (see :meth:`_admit`). No decode-side state is touched."""
+        held (see :meth:`_admit`). No decode-side state is touched.
+
+        Disaggregated: claims, rides and live registration are all
+        skipped — the prefix index holds DECODE-pool page ids, and a
+        staging table on the prefill pod must never map them (two
+        disjoint physical id spaces). Shareable rows become visible to
+        the index only after adoption lands their pages in the decode
+        pool (:meth:`_adopt_disagg`), so every claim resolves to
+        post-transfer decode-pool ids by construction."""
         prompt = req.serve_prompt()
+        if self._disagg:
+            self.stage = batch_mod.stage_slot(self.stage, sid, prompt)
+            return
         nodes, prefix_len = self._lookup_claim(
             prompt, self._stage_claims, sid
         )
@@ -506,7 +621,13 @@ class SpecEngine:
         token both models needed is already consumed), so the slot is
         decodable immediately. One small device→host sync reads the
         staging row's page ids — the only host visibility the staging
-        lane ever needs."""
+        lane ever needs.
+
+        Disaggregated engines take :meth:`_adopt_disagg` instead — the
+        pools are disjoint, so adoption installs the TRANSFERRED pages,
+        not the staging table."""
+        if self._disagg:
+            return self._adopt_disagg(sid, slot, req)
         prompt = req.serve_prompt()
         used = int(np.asarray(self.stage.pages_used[sid]))
         ids = (
@@ -540,6 +661,79 @@ class SpecEngine:
             page_table=table, pages_used=pages_used, pool=pool
         )
         self.stage = batch_mod.clear_stage_slot(self.stage, sid)
+
+    def _adopt_disagg(self, sid: int, slot: int, req: RequestState):
+        """Disaggregated adoption: complete the page transfer dispatched
+        by :meth:`_dispatch_transfers`. The scheduler's gate guarantees
+        the transfer entry exists; the unpack program allocates the
+        slot's decode-pool pages and scatters the shipped buffers in —
+        because it CONSUMES the ``device_put`` results, the installed
+        table provably never maps an un-arrived page (data dependency,
+        not host timing). The staging row's source pages then return to
+        the PREFILL pool's free stack; no host sync anywhere (the page
+        count is deterministic: claims are disabled under disagg, so
+        ``n = pages_for(plen - 1)``)."""
+        prompt = req.serve_prompt()
+        tr = self._transfers.pop(sid)
+        self.batch = batch_mod.admit_slot(
+            self.batch, slot, prompt, req.serve_max_new(),
+            prefix_len=len(prompt) - 1,
+        )
+        if tr["n"]:
+            self.t_cache, self.d_cache, self.batch = (
+                self.runner.unpack_stage(
+                    tr["n"], self.t_cache, self.d_cache, self.batch,
+                    slot, tr["t_packed"], tr["d_packed"],
+                )
+            )
+        self.stage, self.stage_pool = self.runner.release_stage(
+            self.stage, self.stage_pool, sid
+        )
+        if self._live_on:
+            # First index visibility AFTER the transfer: the row's live
+            # spans now resolve to decode-pool ids via batch.page_table.
+            self._live_prompt[("slot", slot)] = prompt
+        self._transfer_log.append(("adopt", sid, self._loop_iter))
+
+    def _dispatch_transfers(self, stats: dict) -> None:
+        """Ship every ready-but-not-yet-dispatched staging lane's pages
+        to the decode pod: a jitted pack gathers the lane's ``n`` staged
+        pages into compact ``(G, n, page, n_kv, hd)`` buffers on the
+        prefill pod, ``jax.device_put`` ships them, and the entry lands
+        in ``_transfers`` — the adoption gate. Everything here is an
+        async dispatch (the page-id slice is a lazy device view, ``n``
+        is host-deterministic), so the transfer overlaps the decode
+        iterations that run until a decode slot frees up."""
+        sched = self.scheduler
+        spec = self.runner.stage_spec
+        for sid in sched.ready_q:
+            if sid in self._transfers:
+                continue
+            plen = len(sched.stage_req[sid].serve_prompt())
+            n = spec.pages_for(plen - 1) if plen > 1 else 0
+            entry: dict = {"n": n}
+            if n:
+                page_ids = self.stage.page_table[sid, :n]
+                t_packed = self.runner.pack_stage(
+                    self.t_stage_cache, page_ids
+                )
+                d_packed = self.runner.pack_stage(
+                    self.d_stage_cache, page_ids
+                )
+                entry["t_packed"] = jax.device_put(
+                    t_packed, self._decode_dev
+                )
+                entry["d_packed"] = jax.device_put(
+                    d_packed, self._decode_dev
+                )
+                stats["transfers"] += 1
+                stats["transfer_bytes"] += int(sum(
+                    leaf.nbytes
+                    for pk in (t_packed, d_packed)
+                    for leaf in jax.tree.leaves(pk)
+                ))
+            self._transfers[sid] = entry
+            self._transfer_log.append(("dispatch", sid, self._loop_iter))
 
     def _cacheable_cols(
         self, req, prefill_left: int, claims, table_row, owner=None,
@@ -582,7 +776,19 @@ class SpecEngine:
         preemption (:meth:`_release_and_cache`): the fully-written
         pages park ``cached`` instead of freeing, so the request's
         retry (requeued at the front) usually re-claims its own prefix
-        instead of re-prefilling it."""
+        instead of re-prefilling it.
+
+        Disaggregated: never park — the pages are PREFILL-pool ids and
+        the prefix index is a decode-pool structure; injecting them
+        would hand later claimants pages from the wrong device's pool.
+        Any in-flight transfer entry is dropped too (its buffers were
+        shipped but will simply never be unpacked)."""
+        if self._disagg:
+            self._transfers.pop(sid, None)
+            self.stage, self.stage_pool = self.runner.release_stage(
+                self.stage, self.stage_pool, sid
+            )
+            return
         okey = ("stage", sid)
         cache_cols = None
         if self.prefix_cache is not None:
@@ -620,8 +826,12 @@ class SpecEngine:
             # iteration (on one device the executables still chain
             # through the shared pool);
             # ``adoptions`` counts completed background prefills folded
-            # into the decode batch by mask flips.
+            # into the decode batch (mask flips — or, disaggregated,
+            # completed page transfers); ``transfers``/``transfer_bytes``
+            # count the disaggregated pack→ship→unpack dispatches and
+            # the bytes they moved (0 in every other mode).
             "prefill_stall_steps": 0, "overlap_steps": 0, "adoptions": 0,
+            "transfers": 0, "transfer_bytes": 0,
             # Per-step allocation telemetry (paged engines): host-mirror
             # pool occupancy and cumulative preemptions at each decode
             # dispatch, consumed by benchmarks/wallclock.py into
@@ -778,7 +988,14 @@ class SpecEngine:
         become the decode slot's table prefix and their ``staged``
         marks clear — masks flip, no K/V moves. Decode slots therefore
         only ever hold ready work: a burst of cold prompts prefills in
-        the staging lane while every decode lane keeps emitting."""
+        the staging lane while every decode lane keeps emitting.
+
+        Disaggregated (``cfg.disaggregated``): the same loop shape, but
+        the staging dispatch runs on the prefill pod's own
+        params/caches/pool, completed lanes' pages ship asynchronously
+        at the bottom of each iteration (:meth:`_dispatch_transfers`),
+        and adoption — gated on the transfer having been dispatched —
+        unpacks them into the decode pool instead of flipping masks."""
         sched = self.scheduler
         stats, pc0, t0 = self._stats_init()
         pending: tuple[dict[int, RequestState], StepOutputs] | None = None
@@ -792,7 +1009,16 @@ class SpecEngine:
                     self._process(*pending, stats)
                     pending = None
                 while sched.needs_preemption():
-                    sid = sched.pick_stage_victim()
+                    # Disaggregated: killing a staging lane frees
+                    # PREFILL-pool pages, which cannot relieve decode
+                    # pressure — go straight for decode victims unless
+                    # the stage pool itself is over (never, when fully
+                    # provisioned).
+                    sid = (
+                        sched.pick_stage_victim()
+                        if not self._disagg or sched.stage_budget_over()
+                        else None
+                    )
                     if sid is not None:
                         req = sched.stage_req[sid]
                         left = sched.stage_prefill_left(sid)
@@ -807,7 +1033,9 @@ class SpecEngine:
                     sched.preempt(victim)
                     self.batch = self._release_and_cache(victim, req, 0)
                     stats["preemptions"] += 1
-            for sid, slot, req in sched.adopt():
+            for sid, slot, req in sched.adopt(
+                gate=self._transfers.__contains__ if self._disagg else None
+            ):
                 self._adopt(sid, slot, req)
                 stats["adoptions"] += 1
             for sid, req in sched.stage_admit():
@@ -829,20 +1057,41 @@ class SpecEngine:
                 stats["iterations"] += 1
                 self._trace_alloc(stats, len(snapshot))
             if sched.stage_pending():
-                self.t_cache, self.d_cache, self.stage, pool = (
-                    self.runner.stage_prefill_step(
-                        self.t_params, self.d_params,
-                        self.t_cache, self.d_cache,
-                        self.stage, self.batch.pool,
+                if self._disagg:
+                    # The prefill pod's OWN params/caches/pool: the
+                    # staging executable runs device-disjoint from the
+                    # decode dispatch above — true overlap, not two
+                    # programs chained through one pool.
+                    (
+                        self.t_stage_cache, self.d_stage_cache,
+                        self.stage, self.stage_pool,
+                    ) = self.runner.stage_prefill_step(
+                        self.t_params_stage, self.d_params_stage,
+                        self.t_stage_cache, self.d_stage_cache,
+                        self.stage, self.stage_pool,
                     )
-                )
-                self.batch = self.batch._replace(pool=pool)
+                else:
+                    self.t_cache, self.d_cache, self.stage, pool = (
+                        self.runner.stage_prefill_step(
+                            self.t_params, self.d_params,
+                            self.t_cache, self.d_cache,
+                            self.stage, self.batch.pool,
+                        )
+                    )
+                    self.batch = self.batch._replace(pool=pool)
                 stats["prefill_tokens"] += sched.note_stage_prefill_dispatch()
                 stats["prefill_steps"] += 1
                 if outs is not None:
                     stats["overlap_steps"] += 1
                 if self._live_on:
                     self._update_live_index()
+            if self._disagg:
+                # Ship newly-ready lanes' pages now (decode for this
+                # iteration is already in flight — transfers overlap
+                # it); the lanes adopt at the top of the next iteration,
+                # exactly when the mask-flip path would have adopted.
+                self._dispatch_transfers(stats)
+                self._loop_iter += 1
             if pending is not None:
                 self._process(*pending, stats)
             pending = (snapshot, outs) if outs is not None else None

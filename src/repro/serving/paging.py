@@ -163,15 +163,24 @@ def path_transient_pages(spec: PageSpec, gamma: int) -> int:
 
 
 def spec_of(cfg) -> PageSpec | None:
-    """Derive the pool geometry from an engine config. ``num_pages=None``
-    fully provisions the pool: ``max_slots * max_pages`` plus the forked
-    paths' transient for multi-path engines, plus — for async-prefill
-    engines — one more worst-case slot term per *staging* lane (each
-    staged request reserves its eventual decode worst case in the
-    budget, and ``PageBudget.worst_pages`` never exceeds ``max_pages +
+    """Derive the *decode* pool geometry from an engine config.
+    ``num_pages=None`` fully provisions the pool: ``max_slots *
+    max_pages`` plus the forked paths' transient for multi-path engines,
+    plus — for shared-pool async-prefill engines — one more worst-case
+    slot term per *staging* lane (each staged request reserves its
+    eventual decode worst case in the budget, and
+    ``PageBudget.worst_pages`` never exceeds ``max_pages +
     fork_extra``). No over-subscription: admission never blocks,
     preemption never fires, and the staging lane is never starved while
-    decode slots sit at their worst case."""
+    decode slots sit at their worst case.
+
+    Under ``disaggregated=True`` the staging lanes write a SEPARATE pool
+    on the prefill pod (:func:`stage_spec_of`), so the decode pool drops
+    the staging term: an adoption transfers the staged pages' K/V into
+    decode pages freshly allocated out of THIS pool, and the scheduler
+    charges the decode budget (``note_admit``) before the transfer's
+    unpack program dispatches — the ``max_slots`` worst-case terms alone
+    keep that allocation provably never-fail."""
     if not getattr(cfg, "paged", False):
         return None
     ps = cfg.page_size
@@ -184,7 +193,8 @@ def spec_of(cfg) -> PageSpec | None:
     )
     stage_lanes = (
         getattr(cfg, "stage_slots", 0)
-        if getattr(cfg, "async_prefill", False) else 0
+        if getattr(cfg, "async_prefill", False)
+        and not getattr(cfg, "disaggregated", False) else 0
     )
     num_pages = cfg.num_pages
     if num_pages is None:
@@ -195,6 +205,34 @@ def spec_of(cfg) -> PageSpec | None:
         f"num_pages or shrink max_len"
     )
     return PageSpec(page_size=ps, num_pages=num_pages, max_pages=max_pages)
+
+
+def stage_spec_of(cfg) -> PageSpec | None:
+    """Geometry of the *staging* pool the prefill pod owns under
+    ``disaggregated=True``. Shared-pool engines (``async_prefill=True``
+    alone) return :func:`spec_of` — staging lanes allocate out of the
+    decode pool and adoption is a mask flip, so there is only one
+    geometry. Disaggregated engines get a second, physically separate
+    pool sized ``stage_slots * max_pages``: page size and ``max_pages``
+    match the decode spec exactly (tables and the prefill program are
+    geometry-compatible across pods; only the pool page-id spaces
+    differ), and one worst-case term per lane makes staging-lane
+    allocation never-fail by the same clamping argument —
+    ``pages_for(length) <= max_pages`` for any length the admission
+    gate accepts."""
+    if not getattr(cfg, "paged", False):
+        return None
+    if not getattr(cfg, "async_prefill", False):
+        return None
+    if not getattr(cfg, "disaggregated", False):
+        return spec_of(cfg)
+    base = spec_of(cfg)
+    stage_lanes = max(1, getattr(cfg, "stage_slots", 1))
+    return PageSpec(
+        page_size=base.page_size,
+        num_pages=stage_lanes * base.max_pages,
+        max_pages=base.max_pages,
+    )
 
 
 def init_pool(spec: PageSpec) -> PagePool:
@@ -1010,5 +1048,19 @@ class PageBudget:
     def note_adopt(self, sid: int, slot: int) -> None:
         """Completed prefill adopted into a decode slot: pure key move —
         ``used_worst()`` is unchanged, so adoption can never trip the
-        preemption threshold nor fail allocation."""
+        preemption threshold nor fail allocation.
+
+        This shared-pool form only applies when staging lanes and decode
+        slots draw from ONE pool. Disaggregated engines track two
+        budgets (one per pool) and adoption is a *cross-pool move*: the
+        scheduler charges the decode budget via ``note_admit(slot,
+        plen)`` BEFORE the transfer's unpack program (which allocates
+        the destination pages) is dispatched, and releases the prefill
+        budget via the stage budget's ``note_unstage(sid)`` once the
+        staged source pages are freed — so "allocation never fails"
+        stays provable on both pools independently: the decode pool by
+        its admission gate (``can_admit`` checked at adoption), the
+        prefill pool because a lane's worst case is clamped to
+        ``max_pages`` and the stage pool holds ``stage_slots *
+        max_pages`` pages."""
         self.slot_len[slot] = self.stage_len.pop(sid)

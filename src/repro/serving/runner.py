@@ -295,7 +295,7 @@ def prefill_body(
 
 
 def stage_prefill_body(
-    target: Model, drafter: Model, cfg,
+    target: Model, drafter: Model, cfg, spec: paging.PageSpec,
     t_params, d_params, t_cache, d_cache,
     stage: StageState, pool: paging.PagePool,
 ):
@@ -312,8 +312,13 @@ def stage_prefill_body(
     gate, so every write is a pool scatter through the *staging* table
     and the per-slot write suppression happens at scatter time
     (``kv_write_mask``); no commit/mask select is needed afterwards
-    (``commit_cache`` is the identity for pooled entries)."""
-    spec = paging.spec_of(cfg)
+    (``commit_cache`` is the identity for pooled entries).
+
+    ``spec`` is the pool geometry this program allocates out of —
+    ``paging.spec_of`` for the shared-pool engine,
+    ``paging.stage_spec_of`` under ``disaggregated=True`` where the
+    caches/pool live on the prefill pod and this executable never
+    touches decode-pod state."""
     c = cfg.prefill_chunk
     rem = stage.plen - 1 - stage.pos
     # Riders hold like in prefill_body — the engine rides the writer.
@@ -358,9 +363,11 @@ def _release_stage_row(
     page claims — entries flagged in ``cache_cols`` park ``cached``
     (the engine registered the fully-written pages in the prefix index
     in the same breath), the rest return to the free stack — and clear
-    the row. Adoption does NOT come through here: an adopted row's
-    pages transfer to the decode slot and only the bookkeeping resets
-    (``batch.clear_stage_slot``)."""
+    the row. Shared-pool adoption does NOT come through here: an
+    adopted row's pages transfer to the decode slot and only the
+    bookkeeping resets (``batch.clear_stage_slot``). DISAGGREGATED
+    adoption does: after the pack program copies the staged K/V out,
+    the prefill-pool source pages are dead and this releases them."""
     mask = jnp.arange(stage.num_slots) == sid
     table, used, pool = paging.release(
         spec, stage.page_table, stage.pages_used, pool, mask,
@@ -374,6 +381,64 @@ def _release_stage_row(
         plen=jnp.where(mask, z, stage.plen),
         page_table=table, pages_used=used,
     ), pool
+
+
+def _pack_stage_pages(cache, page_ids: jax.Array):
+    """Prefill-pod half of a disaggregated adoption transfer: gather the
+    ``n`` staged pages named by ``page_ids`` out of every pool leaf into
+    compact ``(G, n, page, n_kv, hd)`` buffers. The result is what the
+    engine ``jax.device_put``s to the decode pod — only the adopted
+    prompt's K/V crosses the interconnect, never the pool. Shapes are
+    keyed on ``n`` (the staged page count), so the jit cache holds one
+    tiny gather program per distinct prompt page count."""
+
+    def one(leaf: PagedKV) -> PagedKV:
+        return PagedKV(k=leaf.k[:, page_ids], v=leaf.v[:, page_ids])
+
+    return jax.tree.map(
+        one, cache, is_leaf=lambda x: isinstance(x, PagedKV)
+    )
+
+
+def _unpack_stage_pages(
+    spec: paging.PageSpec, n: int,
+    t_cache, d_cache, batch: BatchState, slot, t_packed, d_packed,
+):
+    """Decode-pod half of a disaggregated adoption transfer: allocate
+    ``n`` fresh pages for ``slot`` out of the DECODE pool and scatter
+    the transferred buffers into them. Consuming the ``device_put``
+    results as inputs is what makes "decode never maps an un-arrived
+    page" a dataflow fact: this program cannot execute before the
+    transfer lands, and no decode dispatch can map the new pages before
+    this program (same device, program order) has installed them. The
+    scheduler charges the decode budget before dispatching, so the
+    ensure provably succeeds; a failed ensure (unreachable) drops the
+    scatter instead of corrupting live pages, mirroring
+    :func:`_ensure_pages`."""
+    mask = jnp.arange(batch.num_slots) == slot
+    need = jnp.full((batch.num_slots,), n * spec.page_size, jnp.int32)
+    table, used, pool, ok = paging.ensure(
+        spec, batch.page_table, batch.pages_used, batch.pool, need, mask
+    )
+    ids = table[slot, :n]
+    dst = jnp.where(ids >= 0, ids, jnp.iinfo(jnp.int32).max)  # drop
+
+    def scatter(cache, packed):
+        def one(leaf: PagedKV, buf: PagedKV) -> PagedKV:
+            return PagedKV(
+                k=leaf.k.at[:, dst].set(buf.k, mode="drop"),
+                v=leaf.v.at[:, dst].set(buf.v, mode="drop"),
+            )
+
+        return jax.tree.map(
+            one, cache, packed,
+            is_leaf=lambda x: isinstance(x, PagedKV),
+        )
+
+    t_cache = scatter(t_cache, t_packed)
+    d_cache = scatter(d_cache, d_packed)
+    batch = batch._replace(page_table=table, pages_used=used, pool=pool)
+    return t_cache, d_cache, batch
 
 
 def decode_body(
@@ -634,6 +699,16 @@ class Runner:
         assert target.cfg.vocab == drafter.cfg.vocab
         self.target, self.drafter, self.cfg = target, drafter, cfg
         self.page_spec = paging.spec_of(cfg)
+        self.stage_spec = paging.stage_spec_of(cfg)
+        if getattr(cfg, "disaggregated", False):
+            # Disaggregation is a placement refinement of async prefill:
+            # the SAME staging executable, on its own device group over
+            # its own pool, with adoption swapped from a mask flip to a
+            # pack -> device_put -> unpack transfer.
+            if not getattr(cfg, "async_prefill", False):
+                raise ValueError(
+                    "disaggregated=True requires async_prefill=True"
+                )
         self.verify = verification.get_ctx_verifier(
             cfg.verifier, residual_backend=cfg.residual_backend
         )
@@ -673,11 +748,20 @@ class Runner:
                     model, cfg, self.chunk_slack, role,
                     feature="async_prefill",
                 )
+            # Staging allocates out of stage_spec's pool: the decode
+            # pool itself for the shared-pool engine, the prefill pod's
+            # own pool when disaggregated.
             self._stage_prefill_fn = jax.jit(
-                partial(stage_prefill_body, target, drafter, cfg)
+                partial(stage_prefill_body, target, drafter, cfg,
+                        self.stage_spec)
             )
             self._release_stage_fn = jax.jit(
-                partial(_release_stage_row, self.page_spec)
+                partial(_release_stage_row, self.stage_spec)
+            )
+            self._pack_stage_fn = jax.jit(_pack_stage_pages)
+            self._unpack_stage_fn = jax.jit(
+                partial(_unpack_stage_pages, self.page_spec),
+                static_argnums=0,
             )
         if getattr(cfg, "num_paths", 1) > 1:
             if self.page_spec is None:
@@ -719,6 +803,41 @@ class Runner:
         )
         return t_cache, d_cache
 
+    def init_stage_caches(self, dtype=jnp.float32):
+        """Disaggregated engines only: the prefill pod's own cache pair,
+        pooled over the staging spec's (smaller) page space. The batch
+        dim is ``stage_slots`` — the staging executable's lane count —
+        and only pooled K/V matters (fully-paged is asserted above), so
+        the per-slot dense entries the models also allocate are inert."""
+        cfg = self.cfg
+        spec = self.stage_spec
+        pool = (spec.num_pages, spec.page_size)
+        t_cache = self.target.init_cache(
+            cfg.stage_slots, cfg.max_len, dtype,
+            chunk_slack=self.chunk_slack, page_pool=pool,
+        )
+        d_cache = self.drafter.init_cache(
+            cfg.stage_slots, cfg.max_len, dtype,
+            chunk_slack=self.chunk_slack, page_pool=pool,
+        )
+        return t_cache, d_cache
+
+    def pack_stage(self, cache, page_ids):
+        """Gather staged pages into a compact transfer buffer (runs on
+        whichever device holds ``cache`` — the prefill pod)."""
+        return self._pack_stage_fn(cache, jnp.asarray(page_ids, jnp.int32))
+
+    def unpack_stage(
+        self, n: int, t_cache, d_cache, batch, slot, t_packed, d_packed
+    ):
+        """Allocate ``n`` decode-pool pages for ``slot`` and scatter the
+        transferred buffers into them (runs on the decode pod). Returns
+        ``(t_cache, d_cache, batch)``."""
+        return self._unpack_stage_fn(
+            n, t_cache, d_cache, batch, jnp.asarray(slot, jnp.int32),
+            t_packed, d_packed,
+        )
+
     def prefill_step(self, t_params, d_params, t_cache, d_cache, batch):
         return self._prefill_fn(t_params, d_params, t_cache, d_cache, batch)
 
@@ -736,8 +855,12 @@ class Runner:
         cache_cols=None,
     ):
         """Kill a staging row: release its staged pages (entries flagged
-        in ``cache_cols`` park in the prefix cache) and clear the row."""
-        spec = self.page_spec
+        in ``cache_cols`` park in the prefix cache) and clear the row.
+        Disaggregated adoptions also come through here (no cache_cols):
+        once the pack program has read the staged pages, the source
+        copies return to the PREFILL pool's free stack — the decode-pod
+        copies installed by the unpack are the surviving ones."""
+        spec = self.stage_spec
         if cache_cols is None:
             cache_cols = jnp.zeros((spec.max_pages,), bool)
         else:

@@ -93,6 +93,7 @@ class RequestState:
     # three components' sum):
     stage_t: float | None = None   # prefill started (staging/admission)
     ready_t: float | None = None   # final prefill chunk dispatched
+    adopt_t: float | None = None   # adopted into a decode slot (async)
     first_token_t: float | None = None
     finish_t: float | None = None
     finish_reason: str | None = None
@@ -158,12 +159,29 @@ class RequestState:
         return self.ready_t - self.stage_t
 
     @property
-    def ttft_decode_s(self) -> float | None:
-        """Prefill complete → first token materialized on the host
-        (adoption wait + first decode iterations)."""
+    def ttft_transfer_s(self) -> float | None:
+        """Prefill complete → adopted into a decode slot: the adoption
+        wait plus (disaggregated engines) the staged pages' pack →
+        device_put → unpack transfer, which this anchor attributes
+        explicitly instead of letting it silently inflate
+        ``ttft_decode_s`` (the PR 6 staged-kill attribution rule).
+        0.0 for rows that never adopt (the serial engine, or a resumed
+        victim re-admitted straight into a decode slot)."""
         if self.first_token_t is None or self.ready_t is None:
             return None
-        return self.first_token_t - self.ready_t
+        if self.adopt_t is None:
+            return 0.0
+        return self.adopt_t - self.ready_t
+
+    @property
+    def ttft_decode_s(self) -> float | None:
+        """Decode-slot entry → first token materialized on the host
+        (first decode iterations; adoption/transfer wait lives in
+        :attr:`ttft_transfer_s`)."""
+        if self.first_token_t is None or self.ready_t is None:
+            return None
+        anchor = self.adopt_t if self.adopt_t is not None else self.ready_t
+        return self.first_token_t - anchor
 
     @property
     def tokens_per_s(self) -> float | None:
@@ -209,12 +227,21 @@ class Scheduler:
         budget: PageBudget | None = None,
         num_stage_slots: int = 0,
         aging_limit: int = 8,
+        stage_budget: PageBudget | None = None,
     ):
         self.num_slots = num_slots
         self.default_max_new = default_max_new
         self.prefill_chunk = prefill_chunk
         self.clock = clock
         self.budget = budget
+        # Disaggregated engines split the accounting: ``budget`` covers
+        # the decode pod's pool, ``stage_budget`` the prefill pod's.
+        # Staging then charges stage_budget only, and adoption becomes a
+        # cross-pool move (decode ``note_admit`` + stage ``note_unstage``)
+        # gated by the decode pool's ``can_admit`` — unlike the shared
+        # pool, the decode side holds no up-front reservation for staged
+        # rows, so adoption CAN stall (head-blocking, FIFO-preserving).
+        self.stage_budget = stage_budget
         self.queue: deque[RequestState] = deque()
         self.slot_req: list[RequestState | None] = [None] * num_slots
         self._prefill_left = [0] * num_slots
@@ -280,6 +307,10 @@ class Scheduler:
         self._admit_seq += 1
         if req.first_token_t is None:
             req.stage_t = now
+            # The retry's adoption (if any) re-stamps this; a resumed
+            # victim admitted straight into a decode slot stays None
+            # (ttft_transfer_s = 0).
+            req.adopt_t = None
         return req
 
     def _select_index(self) -> int:
@@ -416,17 +447,21 @@ class Scheduler:
         pairs; the engine stages them on device."""
         staged = []
         now = self.clock()
+        # Disaggregated: staging admission goes by the PREFILL pod's
+        # budget (fully provisioned per lane, so it never stalls); the
+        # decode pool is charged later, at adoption.
+        sb = self.stage_budget if self.stage_budget is not None else self.budget
         for sid in range(self.num_stage_slots):
             if self.stage_req[sid] is None and self.queue:
                 idx = self._select_index()
                 plen = len(self.queue[idx].serve_prompt())
-                if self.budget is not None and not self.budget.can_admit(plen):
+                if sb is not None and not sb.can_admit(plen):
                     break
                 req = self._pop_at(idx, now)
                 self.stage_req[sid] = req
                 self._stage_left[sid] = max(plen - 1, 0)
-                if self.budget is not None:
-                    self.budget.note_stage(sid, plen)
+                if sb is not None:
+                    sb.note_stage(sid, plen)
                 self._stage_check_ready(sid)
                 staged.append((sid, req))
         return staged
@@ -475,20 +510,40 @@ class Scheduler:
                 self._stage_check_ready(sid)
         return consumed
 
-    def adopt(self) -> list[tuple[int, int, RequestState]]:
+    def adopt(self, gate=None) -> list[tuple[int, int, RequestState]]:
         """Move completed background prefills into free decode slots
-        (ready-queue order — stage-completion FIFO). The page budget's
-        reservation transfers key-for-key, so adoption never fails and
-        never changes ``used_worst()``. Returns (sid, slot, request)
-        triples; the engine performs the device-side adoption (staged
-        table install + ``staged``-mark clear + ``admit_slot`` with the
-        full prompt already consumed)."""
+        (ready-queue order — stage-completion FIFO). Shared-pool async:
+        the page budget's reservation transfers key-for-key
+        (``note_adopt``), so adoption never fails and never changes
+        ``used_worst()``. Disaggregated (``stage_budget`` installed):
+        adoption is a cross-pool move — the decode pool is charged its
+        worst case here (``note_admit``, gated by ``can_admit``: the
+        decode side holds no reservation for staged rows) and the
+        prefill pool released (``note_unstage``); both stalls
+        head-block, preserving ready-queue FIFO. ``gate(sid) -> bool``
+        (the engine's transfer-arrival check) also head-blocks: a lane
+        whose staged pages are still in flight must not map into a
+        decode slot. Returns (sid, slot, request) triples; the engine
+        performs the device-side adoption (staged table install +
+        ``staged``-mark clear — or, disaggregated, the packed-page
+        unpack — plus ``admit_slot`` with the full prompt already
+        consumed)."""
         adopted = []
         free = [s for s, r in enumerate(self.slot_req) if r is None]
+        now = None
         while self.ready_q and free:
-            sid = self.ready_q.popleft()
+            sid = self.ready_q[0]
+            if gate is not None and not gate(sid):
+                break
             req = self.stage_req[sid]
             assert req is not None and self._stage_left[sid] == 0, sid
+            if (
+                self.stage_budget is not None
+                and self.budget is not None
+                and not self.budget.can_admit(len(req.serve_prompt()))
+            ):
+                break
+            self.ready_q.popleft()
             slot = free.pop(0)
             self.stage_req[sid] = None
             self.slot_req[slot] = req
@@ -500,7 +555,15 @@ class Scheduler:
             self._stage_riding[sid] = False
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
-            if self.budget is not None:
+            if req.first_token_t is None:
+                if now is None:
+                    now = self.clock()
+                req.adopt_t = now
+            if self.stage_budget is not None:
+                if self.budget is not None:
+                    self.budget.note_admit(slot, len(req.serve_prompt()))
+                self.stage_budget.note_unstage(sid)
+            elif self.budget is not None:
                 self.budget.note_adopt(sid, slot)
             adopted.append((sid, slot, req))
         return adopted
@@ -531,8 +594,9 @@ class Scheduler:
         self._stage_riding[sid] = False
         if sid in self.ready_q:
             self.ready_q.remove(sid)
-        if self.budget is not None:
-            self.budget.note_unstage(sid)
+        sb = self.stage_budget if self.stage_budget is not None else self.budget
+        if sb is not None:
+            sb.note_unstage(sid)
         self._requeue_victim(req)
         return req
 
@@ -574,7 +638,20 @@ class Scheduler:
     # -- preemption (paged engines) ----------------------------------------
 
     def needs_preemption(self) -> bool:
-        return self.budget is not None and self.budget.needs_preemption()
+        return (
+            self.budget is not None and self.budget.needs_preemption()
+        ) or self.stage_budget_over()
+
+    def stage_budget_over(self) -> bool:
+        """Disaggregated prefill-pod pool over budget? (Never fires when
+        the stage pool is fully provisioned — ``stage_slots *
+        max_pages`` covers every lane's clamped worst case — but the
+        engine's kill-stage-first preemption rule keys off it so an
+        under-provisioned prefill pod still degrades gracefully.)"""
+        return (
+            self.stage_budget is not None
+            and self.stage_budget.needs_preemption()
+        )
 
     def pick_victim(self) -> int | None:
         """Slot to preempt when the pool runs dry: the most recently
@@ -629,6 +706,7 @@ class Scheduler:
                     "ttft_s": req.ttft_s,
                     "ttft_queue_s": req.ttft_queue_s,
                     "ttft_prefill_s": req.ttft_prefill_s,
+                    "ttft_transfer_s": req.ttft_transfer_s,
                     "ttft_decode_s": req.ttft_decode_s,
                     "tokens_per_s": req.tokens_per_s,
                     "e2e_tokens_per_s": req.e2e_tokens_per_s,

@@ -240,12 +240,14 @@ class TestTwoLaneScheduler:
         s.retire(slot, "length")
         assert req.ttft_queue_s == 1.0         # submit -> staged
         assert req.ttft_prefill_s == 1.0       # staged -> ready
-        assert req.ttft_decode_s == 1.0        # ready -> first token
+        assert req.ttft_transfer_s == 1.0      # ready -> adopted
+        assert req.ttft_decode_s == 1.0        # adopted -> first token
         assert req.ttft_s == req.ttft_queue_s + req.ttft_prefill_s + \
-            req.ttft_decode_s
+            req.ttft_transfer_s + req.ttft_decode_s
         m = s.request_metrics(gamma=3)[0]
         assert m["ttft_queue_s"] == 1.0
         assert m["ttft_prefill_s"] == 1.0
+        assert m["ttft_transfer_s"] == 1.0
         assert m["ttft_decode_s"] == 1.0
 
     def test_resume_full_claim_refreshes_ready_t(self):
@@ -308,8 +310,8 @@ class TestTwoLaneScheduler:
         assert req.ttft_queue_s == 2.0         # NOT inflated by the kill
         assert req.ttft_prefill_s == 1.0       # attempt 2 only
         assert req.ttft_s == (
-            req.ttft_queue_s + req.ttft_prefill_s + req.ttft_decode_s
-            + req.pre_first_requeue_wait_s
+            req.ttft_queue_s + req.ttft_prefill_s + req.ttft_transfer_s
+            + req.ttft_decode_s + req.pre_first_requeue_wait_s
         )
 
 

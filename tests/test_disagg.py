@@ -1,0 +1,425 @@
+"""Device-disaggregated prefill (prefill pod / decode pod) tests.
+
+Four layers:
+
+* split-pool specs + cross-pool budget — under ``disaggregated=True``
+  the decode pool drops the staging headroom term
+  (``paging.spec_of``), the prefill pod gets its own fully-provisioned
+  pool (``paging.stage_spec_of``: stage_slots * max_pages), and
+  adoption becomes a cross-pool budget move (decode ``note_admit`` +
+  stage ``note_unstage``) that preserves both pools' never-fail
+  invariants;
+* the pack/unpack transfer kernels — gathering a staging row's pages
+  into a compact buffer and scattering it into freshly-allocated
+  decode-pool pages must land bitwise the same K/V the shared-pool
+  mask-flip adoption exposes;
+* the engine with ``disaggregated=True`` — bit-identical to
+  ``async_prefill=True`` (and the serial engine) at temperature 0 on
+  concurrent mixed workloads, for sequential sampled runs, on
+  over-subscribed pools under preemption, and composed with the prefix
+  cache / live sharing; the decode pod dispatches ZERO prefill
+  programs (asserted structurally by poisoning the decode-lane prefill
+  entry points); transfer telemetry emitted and deterministic;
+* the property form: under randomized prompt traffic, no adoption ever
+  completes before its transfer was dispatched (the in-flight gate),
+  outputs stay identical to the shared-pool engine, and BOTH pools
+  drain leak-free.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline/minimal env: keep deterministic cases running
+    from conftest import hypothesis_stub
+
+    given, settings, st = hypothesis_stub()
+
+from test_async_prefill import MIXED, _assert_drained, _models, _serve
+
+from repro.serving import batch as batch_mod
+from repro.serving import paging
+from repro.serving import runner as runner_mod
+from repro.serving.engine import EngineConfig, SpecEngine
+
+
+def _cfg(mode, **kw):
+    base = dict(
+        gamma=3, verifier="block", max_slots=2, max_len=96,
+        temperature=0.0, max_new_tokens=10, prefill_chunk=4,
+        async_prefill=mode != "serial", stage_slots=2,
+        disaggregated=mode == "disagg",
+    )
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _assert_stage_drained(eng):
+    pool = eng.stage_pool
+    assert int(pool.free_count) == pool.free_stack.shape[0]
+    assert int(jnp.max(pool.ref)) == 0
+    assert not bool(jnp.any(pool.staged))
+
+
+def _assert_transfer_log_gates_adoption(eng):
+    """Every adoption must follow its own transfer dispatch at a
+    STRICTLY earlier loop iteration — the host-visible face of the
+    never-maps-an-un-arrived-page guarantee (the device-side half is
+    the unpack's data dependency on the device_put results)."""
+    dispatched = {}
+    adoptions = 0
+    for event, sid, it in eng._transfer_log:
+        if event == "dispatch":
+            dispatched[sid] = it
+        else:
+            assert sid in dispatched, (sid, eng._transfer_log)
+            assert it > dispatched.pop(sid), (sid, eng._transfer_log)
+            adoptions += 1
+    assert adoptions == eng.last_stats["adoptions"]
+
+
+def _poison_decode_lane_prefill(eng):
+    """Structural decode-pod assertion: the decode-lane prefill entry
+    points must never be dispatched by a disaggregated run (all prompt
+    consumption happens in the staging executable on the prefill pod)."""
+
+    def boom(*_a, **_k):
+        raise AssertionError("decode-lane prefill dispatched under disagg")
+
+    eng.runner.prefill_step = boom
+    eng.runner._prefill_fn = boom
+
+
+# ---------------------------------------------------------------------------
+# split-pool specs + cross-pool budget
+# ---------------------------------------------------------------------------
+
+
+class TestSplitPoolSpecs:
+    KW = dict(gamma=3, max_slots=2, max_len=64, page_size=8, stage_slots=3)
+
+    def test_decode_pool_drops_staging_term(self):
+        serial = paging.spec_of(EngineConfig(**self.KW))
+        shared = paging.spec_of(
+            EngineConfig(async_prefill=True, **self.KW)
+        )
+        disagg = paging.spec_of(
+            EngineConfig(async_prefill=True, disaggregated=True, **self.KW)
+        )
+        # shared pool reserves headroom for the staging lanes; the
+        # disaggregated decode pool is exactly the serial pool
+        assert shared.num_pages > serial.num_pages
+        assert disagg.num_pages == serial.num_pages
+        assert disagg.page_size == shared.page_size
+        assert disagg.max_pages == shared.max_pages
+
+    def test_stage_spec_fully_provisions_lanes(self):
+        cfg = EngineConfig(async_prefill=True, disaggregated=True, **self.KW)
+        stage = paging.stage_spec_of(cfg)
+        dec = paging.spec_of(cfg)
+        assert stage.num_pages == cfg.stage_slots * dec.max_pages
+        # same page geometry: staging tables stay table-compatible with
+        # decode tables, only the physical id space differs
+        assert stage.page_size == dec.page_size
+        assert stage.max_pages == dec.max_pages
+        # shared-pool engines stage out of the decode pool itself
+        shared_cfg = EngineConfig(async_prefill=True, **self.KW)
+        assert paging.stage_spec_of(shared_cfg) == paging.spec_of(shared_cfg)
+        assert paging.stage_spec_of(EngineConfig(**self.KW)) is None
+
+    def test_cross_pool_adoption_move_preserves_both_budgets(self):
+        cfg = EngineConfig(async_prefill=True, disaggregated=True, **self.KW)
+        dec = paging.PageBudget(paging.spec_of(cfg), cfg.gamma)
+        stage = paging.PageBudget(paging.stage_spec_of(cfg), cfg.gamma)
+        plen = 20
+        assert stage.can_admit(plen)
+        stage.note_stage(1, plen)
+        worst = stage.used_worst()
+        assert worst > 0 and dec.used_worst() == 0
+        # the engine's adoption order: charge decode BEFORE the unpack
+        # dispatch, release the prefill pool after
+        assert dec.can_admit(plen)
+        dec.note_admit(0, plen)
+        stage.note_unstage(1)
+        assert stage.used_worst() == 0
+        assert dec.used_worst() == worst  # same worst-case, new pool
+        dec.note_release(0)
+        assert dec.used_worst() == 0
+
+    def test_stage_pool_never_blocks_staging(self):
+        """The prefill pod is provisioned for every lane's clamped worst
+        case simultaneously — staging admission can never stall on the
+        stage budget (adoption is where decode pressure applies)."""
+        cfg = EngineConfig(async_prefill=True, disaggregated=True, **self.KW)
+        spec = paging.stage_spec_of(cfg)
+        b = paging.PageBudget(spec, cfg.gamma)
+        for sid in range(cfg.stage_slots):
+            assert b.can_admit(cfg.max_len - 1)
+            b.note_stage(sid, cfg.max_len - 1)
+        assert not b.needs_preemption()
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack transfer round-trip
+# ---------------------------------------------------------------------------
+
+
+SPEC = paging.PageSpec(page_size=4, num_pages=12, max_pages=5)
+STAGE_SPEC = paging.PageSpec(page_size=4, num_pages=10, max_pages=5)
+
+
+def _synthetic_pool_cache(spec, seed):
+    """A PagedKV-bearing cache pytree whose pool holds distinguishable
+    per-page content."""
+    k = jax.random.normal(
+        jax.random.key(seed), (1, spec.num_pages, spec.page_size, 2, 3)
+    )
+    v = k * 2.0 + 1.0
+    return {"layer": runner_mod.PagedKV(k=k, v=v)}
+
+
+class TestPackUnpackRoundTrip:
+    def test_transfer_matches_mask_flip_content(self):
+        """Pack n staged pages, 'ship' them, unpack into fresh
+        decode-pool pages: the decode slot must see bitwise the K/V the
+        shared-pool mask flip would have exposed (same logical pages,
+        different physical ids)."""
+        n = 3
+        stage_cache = _synthetic_pool_cache(STAGE_SPEC, 0)
+        # stage row owns pages [7, 2, 5] in the PREFILL pool
+        staged_ids = jnp.asarray([7, 2, 5], jnp.int32)
+
+        t_packed = runner_mod._pack_stage_pages(stage_cache, staged_ids)
+        assert t_packed["layer"].k.shape == (1, n, 4, 2, 3)
+        np.testing.assert_array_equal(
+            np.asarray(t_packed["layer"].k),
+            np.asarray(stage_cache["layer"].k[:, staged_ids]),
+        )
+
+        # decode side: empty slot, zeroed pool content
+        batch = batch_mod.init_batch(2, 24, SPEC)
+        zeros = jax.tree.map(
+            jnp.zeros_like, _synthetic_pool_cache(SPEC, 1)
+        )
+        t_cache, d_cache, batch = runner_mod._unpack_stage_pages(
+            SPEC, n, zeros, jax.tree.map(jnp.zeros_like, zeros),
+            batch, jnp.asarray(1, jnp.int32), t_packed, t_packed,
+        )
+        assert int(batch.pages_used[1]) == n
+        new_ids = np.asarray(batch.page_table[1, :n])
+        assert (new_ids >= 0).all()
+        # round-trip identity: decode pool content at the NEW ids ==
+        # prefill pool content at the staged ids
+        np.testing.assert_array_equal(
+            np.asarray(t_cache["layer"].k[:, new_ids]),
+            np.asarray(stage_cache["layer"].k[:, staged_ids]),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(t_cache["layer"].v[:, new_ids]),
+            np.asarray(stage_cache["layer"].v[:, staged_ids]),
+        )
+        # pool accounting: n pages allocated, refcounted once
+        assert int(batch.pool.free_count) == SPEC.num_pages - n
+        assert int(jnp.sum(batch.pool.ref)) == n
+
+    def test_unpack_untouched_rows_and_pages_stay_zero(self):
+        n = 2
+        stage_cache = _synthetic_pool_cache(STAGE_SPEC, 2)
+        packed = runner_mod._pack_stage_pages(
+            stage_cache, jnp.asarray([1, 4], jnp.int32)
+        )
+        batch = batch_mod.init_batch(2, 24, SPEC)
+        zeros = jax.tree.map(jnp.zeros_like, _synthetic_pool_cache(SPEC, 1))
+        t_cache, _, batch = runner_mod._unpack_stage_pages(
+            SPEC, n, zeros, zeros, batch, jnp.asarray(0, jnp.int32),
+            packed, packed,
+        )
+        ids = set(np.asarray(batch.page_table[0, :n]).tolist())
+        rest = [p for p in range(SPEC.num_pages) if p not in ids]
+        assert not np.asarray(t_cache["layer"].k[:, rest]).any()
+        assert int(batch.pages_used[1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine identity + telemetry
+# ---------------------------------------------------------------------------
+
+
+class TestDisaggEngineIdentity:
+    def test_temp0_concurrent_mixed_workload_tri_identical(self):
+        """Serial ≡ shared-pool async ≡ disaggregated, greedy tokens
+        bit-for-bit, with the disagg engine moving every adoption over
+        an explicit transfer and dispatching ZERO decode-lane prefill
+        programs."""
+        tgt, drf, tp, dp = _models()
+        outs, iters = {}, {}
+        for mode in ("serial", "async", "disagg"):
+            eng = SpecEngine(tgt, drf, tp, dp, _cfg(mode))
+            if mode == "disagg":
+                _poison_decode_lane_prefill(eng)
+            eng.reset(seed=0)
+            rids = [eng.submit(p) for p in MIXED]
+            res = eng.run()
+            outs[mode] = [res[r].output for r in rids]
+            iters[mode] = eng.last_stats["iterations"]
+            _assert_drained(eng)
+            if mode == "disagg":
+                _assert_stage_drained(eng)
+                _assert_transfer_log_gates_adoption(eng)
+                assert eng.last_stats["adoptions"] == len(MIXED)
+                # every multi-token prompt shipped exactly one transfer
+                assert eng.last_stats["transfers"] == len(MIXED)
+                assert eng.last_stats["transfer_bytes"] > 0
+            else:
+                assert eng.last_stats["transfers"] == 0
+                assert eng.last_stats["transfer_bytes"] == 0
+        assert outs["serial"] == outs["async"] == outs["disagg"]
+        # page transfers replace mask flips without costing decode
+        # iterations (adoption timing is identical by construction)
+        assert iters["disagg"] <= iters["async"]
+
+    def test_sequential_sampled_identical(self):
+        """Sampled decoding, one request at a time: the PRNG stream and
+        every commit must match the shared-pool engine exactly."""
+        tgt, drf, tp, dp = _models()
+        outs = {}
+        for mode in ("async", "disagg"):
+            seq = []
+            eng = SpecEngine(
+                tgt, drf, tp, dp, _cfg(mode, temperature=1.0)
+            )
+            eng.reset(seed=11)
+            for p in (MIXED[1], MIXED[0], MIXED[3]):
+                rid = eng.submit(p)
+                seq.append(eng.run()[rid].output)
+            outs[mode] = seq
+        assert outs["async"] == outs["disagg"]
+
+    def test_oversubscribed_pool_preemption_stays_lossless(self):
+        """A pool too small for the burst: the disaggregated engine
+        sheds decode load (stage kills cannot relieve decode-pool
+        pressure — different pools) and still commits the serial
+        engine's exact greedy tokens with zero leaked pages in BOTH
+        pools."""
+        tgt, drf, tp, dp = _models()
+        prompts = [
+            [(i * 11 + j) % tgt.cfg.vocab for j in range(20)]
+            for i in range(5)
+        ]
+        outs, iters = {}, {}
+        for mode in ("serial", "async", "disagg"):
+            cfg = _cfg(
+                mode, max_slots=3, max_len=80, max_new_tokens=40,
+                page_size=4, num_pages=30,
+            )
+            eng, outs[mode] = _serve(tgt, drf, tp, dp, cfg, prompts)
+            iters[mode] = eng.last_stats["iterations"]
+            _assert_drained(eng)
+            if mode == "disagg":
+                _assert_stage_drained(eng)
+                _assert_transfer_log_gates_adoption(eng)
+        assert outs["serial"] == outs["async"] == outs["disagg"]
+        # staging no longer charges the decode pool before adoption, so
+        # the disagg engine cannot need MORE decode iterations
+        assert iters["disagg"] <= iters["async"]
+
+    @pytest.mark.parametrize(
+        "extra",
+        [dict(prefix_cache=True), dict(prefix_cache=True, live_share=True)],
+        ids=["prefix-cache", "live-share"],
+    )
+    def test_cache_composition_outputs_identical(self, extra):
+        """Prefix cache / live sharing compose: the disagg engine skips
+        staging-lane claims (disjoint id spaces) but must still commit
+        identical greedy tokens, with every post-adoption index entry
+        resolving to decode-pool ids."""
+        tgt, drf, tp, dp = _models()
+        prompts = MIXED + MIXED[:2]  # repeats make the cache matter
+        outs = {}
+        for mode in ("async", "disagg"):
+            eng, outs[mode] = _serve(
+                tgt, drf, tp, dp, _cfg(mode, **extra), prompts
+            )
+            _assert_drained(eng)
+            if mode == "disagg":
+                _assert_stage_drained(eng)
+                num_pages = eng.runner.page_spec.num_pages
+                for nodes in eng._claims.values():
+                    assert all(0 <= n.page < num_pages for n in nodes)
+        assert outs["async"] == outs["disagg"]
+
+    def test_transfer_telemetry_and_ttft_breakdown(self):
+        tgt, drf, tp, dp = _models()
+        eng, _ = _serve(tgt, drf, tp, dp, _cfg("disagg"), MIXED)
+        stats = eng.last_stats
+        transfers0 = stats["transfers"]
+        bytes0 = stats["transfer_bytes"]
+        assert transfers0 == len(MIXED) and bytes0 > 0
+        for m in eng.request_metrics():
+            assert m["ttft_transfer_s"] is not None
+            assert m["ttft_transfer_s"] >= 0.0
+            assert m["ttft_s"] == pytest.approx(
+                m["ttft_queue_s"] + m["ttft_prefill_s"]
+                + m["ttft_transfer_s"] + m["ttft_decode_s"]
+            )
+        # transfer counts are deterministic run-to-run
+        eng.reset(seed=0)
+        for p in MIXED:
+            eng.submit(p)
+        eng.run()
+        assert eng.last_stats["transfers"] == transfers0
+        assert eng.last_stats["transfer_bytes"] == bytes0
+
+    def test_disaggregated_requires_async_prefill(self):
+        tgt, drf, tp, dp = _models()
+        with pytest.raises(ValueError, match="async_prefill"):
+            SpecEngine(
+                tgt, drf, tp, dp,
+                EngineConfig(disaggregated=True, async_prefill=False),
+            )
+
+    def test_explicit_pod_devices_accepted(self):
+        """prefill_mesh / decode_mesh accept a device, a device list,
+        or None — identity must hold regardless of placement."""
+        tgt, drf, tp, dp = _models()
+        devs = jax.devices()
+        cfg = _cfg(
+            "disagg", prefill_mesh=[devs[-1]], decode_mesh=devs[0]
+        )
+        eng, outs = _serve(tgt, drf, tp, dp, cfg, MIXED[:3])
+        _, ref = _serve(tgt, drf, tp, dp, _cfg("async"), MIXED[:3])
+        assert outs == ref
+        assert eng._prefill_dev == devs[-1]
+        assert eng._decode_dev == devs[0]
+
+
+# ---------------------------------------------------------------------------
+# property: the in-flight gate under randomized traffic
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_transfer_gate_property(seed):
+    """Randomized prompt traffic through the REAL disaggregated engine:
+    no adoption ever completes before its transfer was dispatched at a
+    strictly earlier loop iteration, outputs match the shared-pool
+    engine token-for-token, and both pools drain leak-free."""
+    rng = np.random.RandomState(seed)
+    tgt, drf, tp, dp = _models()
+    prompts = [
+        rng.randint(0, tgt.cfg.vocab, size=rng.randint(1, 24)).tolist()
+        for _ in range(rng.randint(2, 7))
+    ]
+    outs = {}
+    for mode in ("async", "disagg"):
+        cfg = _cfg(mode, max_new_tokens=int(rng.randint(4, 12)))
+        eng, outs[mode] = _serve(tgt, drf, tp, dp, cfg, prompts)
+        _assert_drained(eng)
+        if mode == "disagg":
+            _assert_stage_drained(eng)
+            _assert_transfer_log_gates_adoption(eng)
+    assert outs["async"] == outs["disagg"]

@@ -33,7 +33,7 @@ def test_shape_configs_match_assignment():
 def test_variants_known():
     assert "base" in shapes.VARIANTS
     for v in ["gather-moe", "ragged-moe", "pure-dp-serve", "expert-parallel",
-              "paged-serve", "async-prefill"]:
+              "paged-serve", "async-prefill", "disagg-prefill"]:
         assert v in shapes.VARIANTS
 
 
@@ -95,6 +95,63 @@ def test_async_prefill_variant_builds_staging_program_specs():
     assert isinstance(out_shardings[2], StageState)
     # the pool rides along as an explicit output (threaded to decode)
     assert out_shardings[3] is not None
+
+
+def test_disagg_prefill_variant_lowers_staging_on_prefill_pod_only():
+    """The disagg-prefill dry-run variant carves the 32-device mesh into
+    an 8-device prefill pod and a 24-device decode pod
+    (``sharding.carve_pods``) and lowers the staging executable against
+    the PREFILL pod only, over the prefill pod's own staging pool
+    (``paging.stage_spec_of``: stage_slots * max_pages pages). Every
+    sharding the program binds references the carved 8-device submesh —
+    the structural form of "the decode pod dispatches zero prefill
+    programs": nothing in the staging executable can place work on the
+    other 24 devices."""
+    from repro.models.model import Model
+    from repro.serving.batch import StageState
+
+    mesh = AbstractMesh((("data", 4), ("model", 8)))  # 32 fake devices
+    model = Model(registry.get_config("olmo-1b"))
+    shape = shapes.SHAPES["decode_32k"]
+
+    _, args, shardings, out_shardings = shapes.build_serve_step(
+        model, mesh, shape, shapes.VARIANTS["disagg-prefill"]
+    )
+    stage_specs, pool_spec = args[4], args[5]
+    assert isinstance(stage_specs, StageState)
+    meshes = {
+        s.mesh for s in jax.tree.leaves((shardings, out_shardings))
+        if hasattr(s, "mesh")
+    }
+    assert len(meshes) == 1, "one pod, one mesh"
+    (pod,) = meshes
+    assert dict(pod.shape) == {"data": 1, "model": 8}  # 8 of 32 devices
+    # the prefill pod allocates out of its OWN pool, fully provisioned
+    # per staging lane (stage_slots * max_pages) — not the decode pool
+    assert pool_spec.free_stack.shape[0] == (
+        stage_specs.page_table.shape[0] * stage_specs.page_table.shape[1]
+    )
+    # the shared-pool async variant sizes its pool differently (decode
+    # slots + staging headroom over the full mesh) — the two programs
+    # provably bind different pools
+    _, args_a, _, _ = shapes.build_serve_step(
+        model, mesh, shape, shapes.VARIANTS["async-prefill"]
+    )
+    assert args_a[5].free_stack.shape[0] != pool_spec.free_stack.shape[0]
+
+
+def test_carve_pods_abstract_and_validation():
+    from repro.distributed import sharding as shd
+
+    mesh = AbstractMesh((("data", 4), ("model", 8)))
+    pre, dec = shd.carve_pods(mesh, 1)
+    assert dict(pre.shape) == {"data": 1, "model": 8}
+    assert dict(dec.shape) == {"data": 3, "model": 8}
+    import pytest
+    with pytest.raises(ValueError):
+        shd.carve_pods(mesh, 4)  # empty decode pod
+    with pytest.raises(ValueError):
+        shd.carve_pods(mesh, 0)  # empty prefill pod
 
 
 def test_analytic_costs_sane():
