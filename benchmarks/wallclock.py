@@ -17,10 +17,13 @@ skip training.
 from __future__ import annotations
 
 import json
+import math
 import os
+import time
 import zlib
 
 import jax
+import numpy as np
 
 from repro.configs import registry
 from repro.data import pipeline
@@ -29,6 +32,11 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models import Model
 from repro.serving.baseline import autoregressive_decode
 from repro.serving.engine import EngineConfig, SpecEngine
+from repro.serving.frontend import (
+    ServingFrontend,
+    _poisson_arrivals,
+    replay_open_loop,
+)
 from repro.training import checkpoint
 from repro.training import train as training
 from repro.training.optim import OptConfig
@@ -842,6 +850,180 @@ def run_prefix_smoke(train_steps: int = 120):
         with open(path) as f:
             bench = json.load(f)
     bench["prefix_cache"] = bench_pc
+    _write_bench(bench, path)
+    return row
+
+
+def _openloop_bench(
+    tgt, drf, tp, dp,
+    gamma: int = 4,
+    max_new: int = 24,
+    n_requests: int = 30,
+    mean_interarrival_s: float = 0.004,
+    slo_ttft_s: float = 2.0,
+    seed: int = 0,
+):
+    """Open-loop Poisson traffic through the continuous-batching front
+    end (ISSUE 8's tentpole workload) in two phases:
+
+    1. **Identity gate** — the same prompt set served batch-submitted
+       vs streamed through :class:`ServingFrontend` with staggered
+       arrivals, temperature 0: committed tokens must be bit-identical
+       (the front end changes WHEN requests enter the scheduler, never
+       what the verifiers commit).
+    2. **Tail latency under load** — a seeded Poisson arrival schedule
+       (mean interarrival far below the CPU service rate, so the queue
+       saturates) with two priority classes mapped onto two tenants:
+       ``gold`` (priority 0, fair-share weight 2) is every third
+       arrival, ``free`` (priority 1, weight 1) the rest. Reports
+       p50/p99/mean TTFT per class and overall, plus
+       goodput-under-SLO: output tokens from requests whose TTFT met
+       ``slo_ttft_s``, per wall-clock second, with the attainment
+       fraction.
+
+    Open-loop means arrivals never wait for service — exactly the
+    regime where strict classes must hold gold's tail down while free
+    traffic queues."""
+    tok = ByteTokenizer()
+    prompts = [
+        tok.encode(t)[:16] for t in generate_prompts(11, n_requests)
+    ]
+    cfg = EngineConfig(
+        gamma=gamma, verifier="block", max_slots=4, max_len=128,
+        temperature=0.0, max_new_tokens=max_new, prefill_chunk=8,
+        async_prefill=True, stage_slots=2,
+    )
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    eng.submit(prompts[0], max_new_tokens=2)
+    eng.run()  # warm the compile caches outside every timed window
+
+    # -- phase 1: streamed ≡ batch bit-identity -------------------------
+    eng.reset(seed=seed)
+    rids = [eng.submit(list(p)) for p in prompts]
+    ref_out = [eng.run()[r].output for r in rids]
+    eng.reset(seed=seed)
+    fe = ServingFrontend(eng, tokenizer=tok).start()
+    handles = []
+    for i, p in enumerate(prompts):
+        handles.append(fe.submit(list(p)))
+        if i % 3 == 0:
+            time.sleep(0.002)  # arrive mid-flight, not as one batch
+    res = fe.drain()
+    streamed_out = [res[h.rid].output for h in handles]
+    bit_identical = streamed_out == ref_out
+
+    # -- phase 2: Poisson open loop, two classes / two tenants ----------
+    rng = np.random.default_rng(seed)
+    arrivals = _poisson_arrivals(rng, n_requests, mean_interarrival_s)
+    tenant_of = [
+        "gold" if i % 3 == 0 else "free" for i in range(n_requests)
+    ]
+    requests = [
+        {
+            "prompt": list(prompts[i]),
+            "priority": 0 if tenant_of[i] == "gold" else 1,
+            "tenant": tenant_of[i],
+        }
+        for i in range(n_requests)
+    ]
+    eng.reset(seed=seed)
+    fe = ServingFrontend(
+        eng, tokenizer=tok, tenant_weights={"gold": 2.0, "free": 1.0}
+    ).start()
+    t0 = time.perf_counter()
+    handles = replay_open_loop(fe, requests, arrivals)
+    res = fe.drain()
+    wall = time.perf_counter() - t0
+    by_rid = {h.rid: tenant for h, tenant in zip(handles, tenant_of)}
+
+    metrics = eng.request_metrics()
+    classes = {}
+    for tenant in ("gold", "free"):
+        ttfts = [
+            m["ttft_s"] for m in metrics if by_rid[m["rid"]] == tenant
+        ]
+        classes[tenant] = {
+            "n": len(ttfts),
+            "ttft_p50_s": _pctl(ttfts, 0.50),
+            "ttft_p99_s": _pctl(ttfts, 0.99),
+            "ttft_mean_s": _mean(ttfts),
+        }
+    all_ttfts = [m["ttft_s"] for m in metrics]
+    in_slo = [
+        m for m in metrics
+        if m["ttft_s"] is not None and m["ttft_s"] <= slo_ttft_s
+    ]
+    goodput = sum(m["output_len"] for m in in_slo) / wall
+    bench_ol = {
+        "workload": {
+            "n_requests": n_requests,
+            "mean_interarrival_s": mean_interarrival_s,
+            "arrival_span_s": arrivals[-1],
+            "max_new_tokens": max_new,
+            "gamma": gamma,
+            "max_slots": cfg.max_slots,
+            "slo_ttft_s": slo_ttft_s,
+            "tenant_weights": {"gold": 2.0, "free": 1.0},
+            "seed": seed,
+        },
+        "bit_identical": bit_identical,
+        "wall_s": wall,
+        # Saturation factor >> 1 means service took far longer than the
+        # arrival span — the queue genuinely built up, so the per-class
+        # tail comparison below measures scheduling, not idle latency.
+        "saturation_factor": wall / max(arrivals[-1], 1e-9),
+        "completed": len(metrics),
+        "ttft_p50_s": _pctl(all_ttfts, 0.50),
+        "ttft_p99_s": _pctl(all_ttfts, 0.99),
+        "ttft_mean_s": _mean(all_ttfts),
+        "classes": classes,
+        "goodput_tokens_per_s": goodput,
+        "slo_attainment": len(in_slo) / max(len(metrics), 1),
+        "tokens_per_s": sum(m["output_len"] for m in metrics) / wall,
+    }
+    row = {
+        "name": "wallclock/openloop",
+        "bit_identical": bit_identical,
+        "ttft_p50_s": bench_ol["ttft_p50_s"],
+        "ttft_p99_s": bench_ol["ttft_p99_s"],
+        "gold_ttft_p99_s": classes["gold"]["ttft_p99_s"],
+        "free_ttft_p99_s": classes["free"]["ttft_p99_s"],
+        "goodput_tokens_per_s": round(goodput, 1),
+        "slo_attainment": round(bench_ol["slo_attainment"], 3),
+    }
+    return bench_ol, row
+
+
+def run_openloop_smoke(train_steps: int = 120):
+    """CI smoke: train (or load) the char-LM pair, run the open-loop
+    Poisson workload through the continuous-batching front end, and
+    refresh the ``openloop`` section of ``results/BENCH_serving.json``
+    in place. Fails if streamed submission stops being bit-identical to
+    batch submission at temperature 0, if any recorded TTFT percentile
+    is missing/non-finite, if every request stopped completing, or if
+    the high-priority tenant's p99 TTFT stops beating best-effort
+    traffic under saturation (the whole point of the class tier)."""
+    tgt, drf, tp, dp = _get_models(train_steps)
+    bench_ol, row = _openloop_bench(tgt, drf, tp, dp)
+    # Regression-gate BEFORE touching the tracked artifact.
+    assert bench_ol["bit_identical"] is True, bench_ol
+    assert bench_ol["completed"] == bench_ol["workload"]["n_requests"], bench_ol
+    for section in [bench_ol] + list(bench_ol["classes"].values()):
+        for k in ("ttft_p50_s", "ttft_p99_s"):
+            v = section[k]
+            assert v is not None and math.isfinite(v) and v >= 0, (k, section)
+    assert bench_ol["saturation_factor"] > 1.5, bench_ol
+    assert (
+        bench_ol["classes"]["gold"]["ttft_p99_s"]
+        < bench_ol["classes"]["free"]["ttft_p99_s"]
+    ), bench_ol["classes"]
+    assert bench_ol["goodput_tokens_per_s"] >= 0, bench_ol
+    path = "results/BENCH_serving.json"
+    bench = {"bench": "serving"}
+    if os.path.exists(path):
+        with open(path) as f:
+            bench = json.load(f)
+    bench["openloop"] = bench_ol
     _write_bench(bench, path)
     return row
 

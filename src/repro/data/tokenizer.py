@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import codecs
+
 import numpy as np
 
 PAD_ID = 256
@@ -27,3 +29,26 @@ class ByteTokenizer:
     def decode(self, ids) -> str:
         ids = [int(i) for i in np.asarray(ids).reshape(-1) if int(i) < 256]
         return bytes(ids).decode("utf-8", errors="replace")
+
+
+class IncrementalDetokenizer:
+    """Streaming counterpart of :meth:`ByteTokenizer.decode`: feed
+    committed token ids as they arrive, get back the longest decodable
+    text suffix. A multi-byte UTF-8 sequence split across streaming
+    deltas stays buffered until its continuation bytes land — a naive
+    per-delta ``bytes.decode`` would emit replacement chars mid-glyph.
+    Specials (BOS/EOS/PAD, ids >= 256) are dropped, matching
+    ``decode``. One instance per streamed request; feeds must arrive in
+    commit order (the front end's emit callback guarantees this)."""
+
+    def __init__(self, errors: str = "replace"):
+        self._decoder = codecs.getincrementaldecoder("utf-8")(errors)
+
+    def feed(self, ids) -> str:
+        data = bytes(int(i) for i in ids if 0 <= int(i) < 256)
+        return self._decoder.decode(data, False)
+
+    def flush(self) -> str:
+        """Final call: decode any buffered incomplete tail (per the
+        error policy) and reset for reuse."""
+        return self._decoder.decode(b"", True)

@@ -1,10 +1,19 @@
-"""Serving: scheduler → batch-state → runner → verification → kernels.
+"""Serving: frontend → scheduler → batch-state → runner → verification
+→ kernels.
 
 Public surface: :class:`SpecEngine` (facade preserving ``submit()`` /
-``run()``), its :class:`EngineConfig`, and the layer classes for callers
-that compose them directly (the launch dry-run uses the runner bodies)."""
+``run()``, plus ``serve()`` with continuous-batching hooks),
+:class:`ServingFrontend` (the open-stream start/submit/stream/drain
+front end over one engine), :class:`EngineConfig`, and the layer
+classes for callers that compose them directly (the launch dry-run uses
+the runner bodies)."""
 
-from repro.serving.batch import BatchState, init_batch  # noqa: F401
+from repro.serving.batch import (  # noqa: F401
+    BatchState, committed_frontier, init_batch,
+)
 from repro.serving.engine import EngineConfig, SpecEngine  # noqa: F401
+from repro.serving.frontend import (  # noqa: F401
+    RequestHandle, ServingFrontend, StreamDelta, replay_open_loop,
+)
 from repro.serving.runner import Runner, StepOutputs  # noqa: F401
 from repro.serving.scheduler import RequestState, Scheduler  # noqa: F401

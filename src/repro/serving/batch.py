@@ -91,6 +91,22 @@ def init_batch(
     )
 
 
+def committed_frontier(state: BatchState) -> jax.Array:
+    """Per-slot count of OUTPUT tokens committed since the slot's
+    current admission, ``max(lens - out_start, 0)`` — the device-side
+    streaming frontier. Every counted token was committed by a verifier
+    (nothing speculative: draft tokens live only inside the decode
+    body's transient buffers, never in ``seq_buf``/``lens``). For a
+    first-admission slot ``out_start`` is the original prompt length and
+    this equals the host mirror ``len(req.output)`` once the step
+    materializes; a preemption-resumed slot re-admits with ``prompt +
+    output`` as its prompt, so its frontier counts post-resume output
+    only (total committed output is then ``lens - len(req.prompt)``).
+    Either way a streaming front end's ``emitted`` cursor never passes
+    the committed count — streamed tokens are committed tokens."""
+    return jnp.maximum(state.lens - state.out_start, 0)
+
+
 def admit_slot(
     state: BatchState, slot: int, prompt_ids: list[int], max_new: int,
     prefix_len: int = 0, hold: bool = False,

@@ -288,6 +288,11 @@ class SpecEngine:
             self.scheduler.match_fn = self._match_pages
         self.key = jax.random.key(seed)
         self.last_stats: dict = {}
+        # Continuous-batching hooks, installed per-serve by serve();
+        # None ⇒ classic batch-mode run-to-completion.
+        self._pump_cb = None
+        self._emit_cb = None
+        self._idle_cb = None
 
     def _pod_devices(self):
         """Resolve ``(prefill device, decode device)`` from the config's
@@ -319,7 +324,13 @@ class SpecEngine:
     # request lifecycle
     # ------------------------------------------------------------------
 
-    def submit(self, prompt_ids: list[int], max_new_tokens: int | None = None) -> int:
+    def submit(
+        self,
+        prompt_ids: list[int],
+        max_new_tokens: int | None = None,
+        priority: int = 0,
+        tenant: str = "default",
+    ) -> int:
         if not 1 <= len(prompt_ids) < self.cfg.max_len:
             raise ValueError(
                 f"prompt length {len(prompt_ids)} must be in "
@@ -327,7 +338,9 @@ class SpecEngine:
             )
         if max_new_tokens is not None and max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        return self.scheduler.submit(prompt_ids, max_new_tokens)
+        return self.scheduler.submit(
+            prompt_ids, max_new_tokens, priority=priority, tenant=tenant
+        )
 
     def _admit(self, slot: int, req: RequestState):
         """Stage an admitted request: zero the slot's cache rows (chunked
@@ -612,7 +625,9 @@ class SpecEngine:
         self._live_prompt.pop(okey, None)
         self._rides.pop(okey, None)
 
-    def _adopt(self, sid: int, slot: int, req: RequestState):
+    def _adopt(
+        self, sid: int, slot: int, req: RequestState, stats: dict | None = None
+    ):
         """Fold a completed background prefill into the decode batch —
         the ready flip. The staging row's physical pages (claimed
         prefix + staged growth, in logical order) become the decode
@@ -627,7 +642,7 @@ class SpecEngine:
         pools are disjoint, so adoption installs the TRANSFERRED pages,
         not the staging table."""
         if self._disagg:
-            return self._adopt_disagg(sid, slot, req)
+            return self._adopt_disagg(sid, slot, req, stats)
         prompt = req.serve_prompt()
         used = int(np.asarray(self.stage.pages_used[sid]))
         ids = (
@@ -662,7 +677,9 @@ class SpecEngine:
         )
         self.stage = batch_mod.clear_stage_slot(self.stage, sid)
 
-    def _adopt_disagg(self, sid: int, slot: int, req: RequestState):
+    def _adopt_disagg(
+        self, sid: int, slot: int, req: RequestState, stats: dict | None = None
+    ):
         """Disaggregated adoption: complete the page transfer dispatched
         by :meth:`_dispatch_transfers`. The scheduler's gate guarantees
         the transfer entry exists; the unpack program allocates the
@@ -672,9 +689,18 @@ class SpecEngine:
         not host timing). The staging row's source pages then return to
         the PREFILL pool's free stack; no host sync anywhere (the page
         count is deterministic: claims are disabled under disagg, so
-        ``n = pages_for(plen - 1)``)."""
+        ``n = pages_for(plen - 1)``).
+
+        Transfer telemetry (``stats["transfers"]`` / ``transfer_bytes``)
+        is counted HERE, not at dispatch: a staging lane killed while
+        its transfer is in flight drops the ``_transfers`` entry without
+        adopting, and counting at dispatch over-reported those dead
+        shipments (and double-counted the retry's re-shipment)."""
         prompt = req.serve_prompt()
         tr = self._transfers.pop(sid)
+        if stats is not None and tr["n"]:
+            stats["transfers"] += 1
+            stats["transfer_bytes"] += tr["bytes"]
         self.batch = batch_mod.admit_slot(
             self.batch, slot, prompt, req.serve_max_new(),
             prefix_len=len(prompt) - 1,
@@ -695,7 +721,7 @@ class SpecEngine:
             self._live_prompt[("slot", slot)] = prompt
         self._transfer_log.append(("adopt", sid, self._loop_iter))
 
-    def _dispatch_transfers(self, stats: dict) -> None:
+    def _dispatch_transfers(self) -> None:
         """Ship every ready-but-not-yet-dispatched staging lane's pages
         to the decode pod: a jitted pack gathers the lane's ``n`` staged
         pages into compact ``(G, n, page, n_kv, hd)`` buffers on the
@@ -726,8 +752,10 @@ class SpecEngine:
                 entry["d_packed"] = jax.device_put(
                     d_packed, self._decode_dev
                 )
-                stats["transfers"] += 1
-                stats["transfer_bytes"] += int(sum(
+                # Sized here (the packed buffers are in hand) but
+                # counted into stats only at adoption — see
+                # _adopt_disagg; a killed lane's shipment never counts.
+                entry["bytes"] = int(sum(
                     leaf.nbytes
                     for pk in (t_packed, d_packed)
                     for leaf in jax.tree.leaves(pk)
@@ -809,9 +837,49 @@ class SpecEngine:
 
     def run(self) -> dict[int, RequestState]:
         """Serve until queue + slots drain. Returns rid -> RequestState."""
-        if self.cfg.async_prefill:
-            return self._run_async()
-        return self._run_serial()
+        return self.serve()
+
+    def serve(self, pump=None, emit=None, idle=None) -> dict[int, RequestState]:
+        """Run the service loop with optional continuous-batching hooks
+        (all None ⇒ classic batch-submit run-to-completion, bit-identical
+        to :meth:`run` before the hooks existed — an idle iteration
+        dispatches nothing and so consumes no PRNG state).
+
+        ``pump()`` is called at the top of every loop iteration (and
+        while idling) on the SERVICE thread — the front end drains its
+        ingress there via :meth:`submit`, so JAX state is only ever
+        touched from one thread. It returns False once the front end has
+        been closed to new requests (drain), which lets the loop
+        quiesce. ``emit(req, tokens, finished)`` fires from
+        :meth:`_process` with each request's newly committed tokens —
+        the committed-token frontier, never a speculative/uncommitted
+        token. ``idle()`` blocks briefly when the engine has no work and
+        pump produced none (the front end parks on a wake event instead
+        of hot-spinning)."""
+        self._pump_cb, self._emit_cb, self._idle_cb = pump, emit, idle
+        try:
+            if self.cfg.async_prefill:
+                return self._run_async()
+            return self._run_serial()
+        finally:
+            self._pump_cb = self._emit_cb = self._idle_cb = None
+
+    def _service_wait(self) -> bool:
+        """Idle/quiesce path, reached when the loop has fully drained:
+        keep pumping (and idling between pumps) until new work arrives
+        (True — keep serving) or the front end closes with nothing left
+        (False — quiesce and return). Batch mode (no pump) quiesces
+        immediately."""
+        if self._pump_cb is None:
+            return False
+        while True:
+            accepting = self._pump_cb()
+            if self.scheduler.has_work():
+                return True
+            if not accepting:
+                return False
+            if self._idle_cb is not None:
+                self._idle_cb()
 
     def _stats_init(self):
         stats = {
@@ -906,6 +974,11 @@ class SpecEngine:
         # (snapshot of live-at-dispatch slots, in-flight StepOutputs)
         pending: tuple[dict[int, RequestState], StepOutputs] | None = None
         while True:
+            # Continuous batching: drain the front end's ingress before
+            # admission, so requests that arrived while the previous
+            # iteration's programs ran are eligible this iteration.
+            if self._pump_cb is not None:
+                self._pump_cb()
             # Page pressure (over-subscribed pools only): when the live
             # slots' conservative worst case outgrows the pool, sync the
             # in-flight step so lengths are exact, then preempt newest
@@ -972,6 +1045,7 @@ class SpecEngine:
                 pending is None
                 and not sched.prefill_pending()
                 and not sched.has_work()
+                and not self._service_wait()
             ):
                 break
         self._stats_finish(stats, pc0, t0)
@@ -1000,6 +1074,8 @@ class SpecEngine:
         stats, pc0, t0 = self._stats_init()
         pending: tuple[dict[int, RequestState], StepOutputs] | None = None
         while True:
+            if self._pump_cb is not None:
+                self._pump_cb()
             # Page pressure: sync the in-flight step so lengths are
             # exact, then shed load — background prefills first (least
             # progress; their fully-written pages park as cacheable),
@@ -1036,7 +1112,7 @@ class SpecEngine:
             for sid, slot, req in sched.adopt(
                 gate=self._transfers.__contains__ if self._disagg else None
             ):
-                self._adopt(sid, slot, req)
+                self._adopt(sid, slot, req, stats)
                 stats["adoptions"] += 1
             for sid, req in sched.stage_admit():
                 self._stage(sid, req)
@@ -1090,7 +1166,7 @@ class SpecEngine:
                 # iteration is already in flight — transfers overlap
                 # it); the lanes adopt at the top of the next iteration,
                 # exactly when the mask-flip path would have adopted.
-                self._dispatch_transfers(stats)
+                self._dispatch_transfers()
                 self._loop_iter += 1
             if pending is not None:
                 self._process(*pending, stats)
@@ -1099,6 +1175,7 @@ class SpecEngine:
                 pending is None
                 and not sched.stage_pending()
                 and not sched.has_work()
+                and not self._service_wait()
             ):
                 break
         self._stats_finish(stats, pc0, t0)
@@ -1139,6 +1216,17 @@ class SpecEngine:
                 # silently dropped from throughput accounting.
                 stats["tokens"] += len(req.output)
                 self.batch = self._release_and_cache(slot, req, 0)
+            # Streaming: hand the front end everything newly committed
+            # since the last emit. ``output`` only ever extends (the
+            # committed frontier is monotone — preemption recomputes but
+            # never truncates), so the cursor slice is exactly the fresh
+            # committed tokens; emitting after retirement means a final
+            # delta observes finish_t/finish_reason already stamped.
+            if self._emit_cb is not None:
+                fresh = req.output[req.emitted:]
+                if fresh or req.finished:
+                    req.emitted = len(req.output)
+                    self._emit_cb(req, fresh, req.finished)
 
     def _release_and_cache(
         self, slot: int, req: RequestState, prefill_left: int

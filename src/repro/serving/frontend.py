@@ -1,0 +1,360 @@
+"""Continuous-batching serving front end.
+
+Turns the batch-submit :class:`~repro.serving.engine.SpecEngine` into an
+open-stream service (the SGLang-JAX shape: tokenizer → scheduler →
+detokenizer, with only the scheduler on the critical path):
+
+    fe = ServingFrontend(engine, tokenizer=ByteTokenizer(),
+                         tenant_weights={"gold": 2.0})
+    fe.start()                                   # service loop spins up
+    h = fe.submit("prompt", priority=0, tenant="gold")
+    for delta in fe.stream(h):                   # per-token streaming
+        print(delta.text, end="")
+    results = fe.drain()                         # quiesce + join
+
+Threading model — exactly two kinds of thread touch the front end:
+
+* **Caller threads** run :meth:`submit` (tokenization happens HERE, off
+  the scheduler's critical path), :meth:`stream`/:meth:`result`
+  (incremental detokenization happens here too), and :meth:`drain`.
+  They never touch JAX state; they only append to the ingress list
+  under a lock and park on per-request queues/events.
+* **The service thread** (spawned by :meth:`start`) runs
+  ``engine.serve(pump, emit, idle)``. All JAX dispatch, all scheduler
+  mutation, and all engine state stay on this one thread: ``pump``
+  drains the ingress into ``engine.submit`` at the top of every loop
+  iteration, ``emit`` fans each request's newly *committed* tokens out
+  to its handle's event queue (the committed-token frontier — a
+  streamed token is never speculative and never rolls back), and
+  ``idle`` parks on a wake event when there is neither work nor
+  ingress, so an idle service loop costs ~nothing.
+
+Losslessness is untouched: the front end only changes WHEN
+``engine.submit`` is called, never what the verifiers commit. At
+temperature 0 a streamed open-loop arrival schedule is bit-identical to
+batch submission; at sampled temperatures, sequential submission is
+bit-identical to sequential batch runs (the PRNG advances once per
+decode dispatch with live work — idle pump/wait iterations dispatch
+nothing and consume no key splits). ``tests/test_frontend.py`` pins
+both.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.serving.scheduler import RequestState
+
+
+@dataclass
+class StreamDelta:
+    """One streaming event: the tokens committed since the previous
+    event for this request (possibly several — speculative decoding
+    commits blocks, so deltas arrive in E[tau]-sized bursts), plus the
+    incrementally detokenized text when the front end has a tokenizer
+    (the longest newly decodable UTF-8 suffix; multi-byte glyphs split
+    across deltas surface once complete)."""
+
+    rid: int
+    tokens: list[int]
+    finished: bool
+    text: str | None = None
+
+
+@dataclass
+class RequestHandle:
+    """A submitted request's streaming endpoint. Created by
+    :meth:`ServingFrontend.submit`; consumed via
+    :meth:`ServingFrontend.stream` or :meth:`ServingFrontend.result`."""
+
+    prompt_ids: list[int]
+    max_new_tokens: int | None
+    priority: int
+    tenant: str
+    rid: int | None = None          # assigned by the service thread
+    state: RequestState | None = None  # set when the request finishes
+    events: queue.Queue = field(default_factory=queue.Queue)
+    done: threading.Event = field(default_factory=threading.Event)
+
+
+class ServingFrontend:
+    """start()/submit()/stream()/drain() lifecycle around one engine.
+
+    ::
+
+        caller threads                   service thread
+        --------------                   --------------
+        submit(text)
+          tokenize ──► ingress ──wake──► pump() ─► engine.submit()
+                                         ┌──────────────────────┐
+        stream(h) ◄── h.events ◄─ emit() ┤ double-buffered       │
+          detokenize                     │ admit/prefill/decode  │
+                                         └──────────────────────┘
+        drain() ──close──► wake ───────► quiesce ─► results
+
+    ``tenant_weights`` maps tenant name → fair-share weight, applied to
+    the engine's scheduler at :meth:`start` (and live via
+    :meth:`set_tenant_weight`).
+    """
+
+    def __init__(
+        self,
+        engine,
+        tokenizer=None,
+        tenant_weights: dict[str, float] | None = None,
+        idle_wait_s: float = 0.002,
+    ):
+        self.engine = engine
+        self.tokenizer = tokenizer
+        self.tenant_weights = dict(tenant_weights or {})
+        self.idle_wait_s = idle_wait_s
+        self._lock = threading.Lock()
+        self._ingress: deque[RequestHandle] = deque()
+        self._by_rid: dict[int, RequestHandle] = {}
+        self._wake = threading.Event()
+        self._closed = True  # not accepting until start()
+        self._thread: threading.Thread | None = None
+        self._results: dict[int, RequestState] | None = None
+        self._error: BaseException | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "ServingFrontend":
+        if self.running:
+            raise RuntimeError("front end is already running")
+        for tenant, weight in self.tenant_weights.items():
+            self.engine.scheduler.set_tenant_weight(tenant, weight)
+        self._results = None
+        self._error = None
+        self._wake.clear()
+        with self._lock:
+            self._closed = False
+        self._thread = threading.Thread(
+            target=self._serve, name="spec-frontend", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def __enter__(self) -> "ServingFrontend":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.drain()
+        else:  # don't mask the caller's exception with a drain timeout
+            with self._lock:
+                self._closed = True
+            self._wake.set()
+
+    def drain(self, timeout_s: float | None = None) -> dict[int, RequestState]:
+        """Stop accepting new requests, serve everything already
+        submitted to completion, join the service thread, and return
+        ``rid -> RequestState`` for every finished request."""
+        with self._lock:
+            self._closed = True
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout_s)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"service loop did not quiesce within {timeout_s}s"
+                )
+            self._thread = None
+        if self._error is not None:
+            raise RuntimeError("service loop failed") from self._error
+        return dict(self._results or {})
+
+    def _serve(self) -> None:
+        try:
+            self._results = self.engine.serve(
+                pump=self._pump, emit=self._emit, idle=self._idle
+            )
+        except BaseException as exc:  # noqa: BLE001 — surface to callers
+            self._error = exc
+            with self._lock:
+                self._closed = True
+                orphans = list(self._ingress) + list(self._by_rid.values())
+                self._ingress.clear()
+                self._by_rid.clear()
+            for h in orphans:  # fail waiters instead of hanging them
+                h.done.set()
+                h.events.put(None)
+
+    # -- ingress (caller threads) ------------------------------------------
+
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int | None = None,
+        priority: int = 0,
+        tenant: str = "default",
+    ) -> RequestHandle:
+        """Enqueue a request while the loop runs. ``prompt`` may be text
+        (tokenized here, in the caller's thread) or token ids. Returns
+        immediately with a :class:`RequestHandle`."""
+        if isinstance(prompt, str):
+            if self.tokenizer is None:
+                raise ValueError("text prompt needs a tokenizer")
+            prompt_ids = self.tokenizer.encode(prompt)
+        else:
+            prompt_ids = [int(t) for t in prompt]
+        # Validate in the caller's thread so a bad request fails its
+        # submitter, not the shared service loop.
+        if not 1 <= len(prompt_ids) < self.engine.cfg.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt_ids)} must be in "
+                f"[1, max_len={self.engine.cfg.max_len})"
+            )
+        if max_new_tokens is not None and max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}"
+            )
+        handle = RequestHandle(
+            prompt_ids=prompt_ids,
+            max_new_tokens=max_new_tokens,
+            priority=priority,
+            tenant=tenant,
+        )
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    "front end is not accepting requests "
+                    "(start() it, or it is already draining)"
+                )
+            self._ingress.append(handle)
+        self._wake.set()
+        return handle
+
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Adjust a tenant's fair-share weight; effective from the next
+        admission (the scheduler reads weights at pop time)."""
+        if weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        self.tenant_weights[tenant] = float(weight)
+        self.engine.scheduler.set_tenant_weight(tenant, weight)
+
+    # -- service-thread hooks ----------------------------------------------
+
+    def _pump(self) -> bool:
+        """Engine hook (service thread): drain the ingress into the
+        scheduler. Returns whether the front end still accepts new
+        requests — False lets the engine quiesce once drained."""
+        with self._lock:
+            batch = list(self._ingress)
+            self._ingress.clear()
+            accepting = not self._closed
+        for h in batch:
+            h.rid = self.engine.submit(
+                h.prompt_ids, h.max_new_tokens,
+                priority=h.priority, tenant=h.tenant,
+            )
+            self._by_rid[h.rid] = h
+        return accepting
+
+    def _emit(self, req: RequestState, tokens: list[int], finished: bool) -> None:
+        """Engine hook (service thread): fan newly committed tokens out
+        to the request's handle."""
+        h = self._by_rid.get(req.rid)
+        if h is None:
+            return
+        if finished:
+            h.state = req
+            del self._by_rid[req.rid]
+        h.events.put(StreamDelta(rid=req.rid, tokens=tokens, finished=finished))
+        if finished:
+            h.done.set()
+
+    def _idle(self) -> None:
+        """Engine hook (service thread): nothing to do — park until a
+        submit/drain wakes us (bounded, so a wake racing the clear is
+        only ever one timeout late)."""
+        self._wake.wait(self.idle_wait_s)
+        self._wake.clear()
+
+    # -- egress (caller threads) -------------------------------------------
+
+    def stream(self, handle: RequestHandle, timeout_s: float = 120.0):
+        """Yield :class:`StreamDelta` events for one request as its
+        tokens commit, detokenizing incrementally when the front end has
+        a tokenizer. Terminates after the ``finished`` delta. ``timeout_s``
+        bounds the wait BETWEEN deltas, not the whole stream."""
+        from repro.data.tokenizer import IncrementalDetokenizer
+
+        detok = IncrementalDetokenizer() if self.tokenizer is not None else None
+        while True:
+            try:
+                delta = handle.events.get(timeout=timeout_s)
+            except queue.Empty:
+                raise TimeoutError(
+                    f"no stream delta within {timeout_s}s "
+                    f"(rid={handle.rid})"
+                ) from None
+            if delta is None:  # service loop died — surface its error
+                raise RuntimeError("service loop failed") from self._error
+            if detok is not None:
+                delta.text = detok.feed(delta.tokens)
+                if delta.finished:
+                    delta.text += detok.flush()
+            yield delta
+            if delta.finished:
+                return
+
+    def result(
+        self, handle: RequestHandle, timeout_s: float | None = None
+    ) -> RequestState:
+        """Block until one request finishes; return its final state.
+        (Streaming events remain queued on the handle — result() and
+        stream() compose.)"""
+        if not handle.done.wait(timeout_s):
+            raise TimeoutError(f"request rid={handle.rid} not finished")
+        if handle.state is None:
+            raise RuntimeError("service loop failed") from self._error
+        return handle.state
+
+    def text(self, handle: RequestHandle, timeout_s: float | None = None) -> str:
+        """Convenience: block for completion, return the decoded output."""
+        state = self.result(handle, timeout_s)
+        if self.tokenizer is None:
+            raise ValueError("text output needs a tokenizer")
+        return self.tokenizer.decode(state.output)
+
+
+def _poisson_arrivals(rng, n: int, mean_interarrival_s: float) -> list[float]:
+    """Seeded open-loop Poisson arrival offsets (seconds from t0) for
+    the benchmarks — here so load generators share one definition."""
+    t, out = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(mean_interarrival_s))
+        out.append(t)
+    return out
+
+
+def replay_open_loop(
+    frontend: ServingFrontend,
+    requests: list[dict],
+    arrivals_s: list[float],
+    clock=time.perf_counter,
+    sleep=time.sleep,
+) -> list[RequestHandle]:
+    """Replay an open-loop schedule against a RUNNING front end: submit
+    ``requests[i]`` (kwargs for :meth:`ServingFrontend.submit`) at
+    ``arrivals_s[i]`` seconds after the call, sleeping between arrivals
+    — open-loop, so submission never waits for service (the queue grows
+    when the engine can't keep up; that's the point of the bench)."""
+    assert len(requests) == len(arrivals_s)
+    t0 = clock()
+    handles = []
+    for req, at in zip(requests, arrivals_s):
+        lag = at - (clock() - t0)
+        if lag > 0:
+            sleep(lag)
+        handles.append(frontend.submit(**req))
+    return handles

@@ -8,18 +8,28 @@ progress — chunk counts are deterministic, so the mirror needs no device
 sync: after each dispatched prefill step every prefilling slot has
 consumed exactly ``min(chunk, remaining)`` more prompt tokens.
 
-Admission is FIFO by default. With **cache-aware admission** (the
-engine installs ``match_fn`` when live prefix sharing is on), both
-lanes admit the queued request with the LONGEST page-aligned prefix
-match against the live-inclusive prefix index instead of the head of
-the queue — a burst sharing a prefix admits back-to-back while the
-span is hot, instead of interleaving cold prompts between the hits.
-Starvation is bounded by an aging counter: every time a request is
-overtaken its ``age`` ticks, and once it reaches ``aging_limit`` it is
-admitted before any younger request regardless of match (FIFO among
-the aged). Selection is deterministic — match pages, then age, then
-submit order — so admission order (and therefore allocation order)
-stays reproducible.
+Admission is FIFO by default, refined by three optional layers that
+compose strictly top-down (see :meth:`Scheduler._select_index`):
+**priority classes** (``submit(..., priority=n)``; lower n is a
+strictly higher tier — premium admits before any best-effort request
+and is preempted/killed last), **per-tenant weighted fairness within a
+tier** (``submit(..., tenant=name)`` + :meth:`set_tenant_weight`;
+stride scheduling over virtual time gives each tenant a
+weight-proportional share of admissions under saturation), and
+**cache-aware admission** (the engine installs ``match_fn`` when live
+prefix sharing is on): within the chosen tenant both lanes admit the
+queued request with the LONGEST page-aligned prefix match against the
+live-inclusive prefix index instead of the head of the queue — a burst
+sharing a prefix admits back-to-back while the span is hot, instead of
+interleaving cold prompts between the hits. Starvation within a tier
+is bounded by an aging counter: every time a request is overtaken its
+``age`` ticks, and once it reaches ``aging_limit`` it is admitted
+before any younger request in its tier regardless of tenant or match
+(most-starved first, ties by submit order; ``age`` resets at every
+queue exit — admission and preemption requeue alike). Selection is
+deterministic — class, then age, then tenant virtual time, then match
+pages, then submit order — so admission order (and therefore
+allocation order) stays reproducible.
 
 **Riding** (claim-behind-the-writer): a row admitted behind a live
 writer of its own prompt prefix holds its prefill while the writer's
@@ -113,8 +123,25 @@ class RequestState:
     # tokens_per_s corrects by requeue_wait_s).
     pre_first_requeue_wait_s: float = 0.0
     # Times this queued request was overtaken by cache-aware admission;
-    # at Scheduler.aging_limit it regains absolute priority.
+    # at Scheduler.aging_limit it regains absolute priority within its
+    # class tier. Reset to 0 at every (re)queue boundary — admission AND
+    # preemption requeue — so a victim never re-enters with stale age.
     age: int = 0
+    # Strict priority class: 0 is the highest tier, larger numbers are
+    # more best-effort. Classes gate admission absolutely (a queued
+    # class-0 request always admits before any class-1 request); aging
+    # and fairness only reorder WITHIN a tier.
+    priority: int = 0
+    # Fairness accounting key: requests sharing a tenant share that
+    # tenant's deficit-weighted slice of admissions within their tier.
+    tenant: str = "default"
+    # Streaming cursor: output tokens already handed to the front end's
+    # per-token emit callback. Monotone, survives preemption (output is
+    # never truncated), and never passes len(output) — which is itself
+    # the host mirror of the device committed frontier
+    # (batch.committed_frontier), so a streamed token is always a
+    # committed token.
+    emitted: int = 0
     _preempt_t: float | None = None
 
     def serve_prompt(self) -> list[int]:
@@ -262,11 +289,36 @@ class Scheduler:
         # writer will still commit); None keeps admission FIFO.
         self.match_fn = None
         self.aging_limit = aging_limit
+        # Per-tenant weighted fairness (stride scheduling over virtual
+        # time): each admission charges its tenant
+        # (prompt + max_new) / weight virtual seconds; selection picks
+        # the tenant with the smallest clamped virtual time. The floor
+        # tracks the last admission's start tag so a tenant idle for a
+        # while re-enters at "now" instead of burning a huge banked
+        # deficit (the classic start-time-fair-queuing clamp).
+        self.tenant_weights: dict[str, float] = {}
+        self._tenant_vtime: dict[str, float] = {}
+        self._vtime_floor = 0.0
 
     # -- submission / admission --------------------------------------------
 
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Give ``tenant`` a ``weight``-proportional share of admissions
+        within its priority tier (default weight 1.0)."""
+        if weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        self.tenant_weights[tenant] = float(weight)
+
+    def _tenant_vtag(self, tenant: str) -> float:
+        """Clamped virtual-time tag used for selection and charging."""
+        return max(self._tenant_vtime.get(tenant, 0.0), self._vtime_floor)
+
     def submit(
-        self, prompt_ids: list[int], max_new_tokens: int | None = None
+        self,
+        prompt_ids: list[int],
+        max_new_tokens: int | None = None,
+        priority: int = 0,
+        tenant: str = "default",
     ) -> int:
         rid = self._next_rid
         self._next_rid += 1
@@ -279,6 +331,8 @@ class Scheduler:
                     if max_new_tokens is None else max_new_tokens
                 ),
                 submit_t=self.clock(),
+                priority=priority,
+                tenant=tenant,
             )
         )
         return rid
@@ -305,6 +359,15 @@ class Scheduler:
             req._preempt_t = None
         req.admit_seq = self._admit_seq
         self._admit_seq += 1
+        # Stride-scheduling charge: the admitted request advances its
+        # tenant's virtual time by worst-case serve cost over weight, so
+        # heavier-weighted tenants accrue virtual time slower and win
+        # the min-vtag selection proportionally more often.
+        weight = self.tenant_weights.get(req.tenant, 1.0)
+        start = self._tenant_vtag(req.tenant)
+        cost = len(req.serve_prompt()) + req.serve_max_new()
+        self._tenant_vtime[req.tenant] = start + cost / weight
+        self._vtime_floor = start
         if req.first_token_t is None:
             req.stage_t = now
             # The retry's adoption (if any) re-stamps this; a resumed
@@ -314,19 +377,46 @@ class Scheduler:
         return req
 
     def _select_index(self) -> int:
-        """Queue index the next admission should take. FIFO unless the
-        engine installed ``match_fn``; then: any request aged to
-        ``aging_limit`` goes first (FIFO among the aged), otherwise the
-        longest live-inclusive prefix match wins, ties broken by queue
-        order. Deterministic by construction."""
-        if self.match_fn is None or len(self.queue) <= 1:
+        """Queue index the next admission should take. Deterministic
+        hierarchy, each level only reordering within the one above:
+
+        1. **Class tier** (strict): only the lowest ``priority`` value
+           present in the queue is eligible — premium traffic admits
+           before any best-effort request, full stop.
+        2. **Aging** (within the tier): any request overtaken to
+           ``aging_limit`` goes first; among the aged, most-starved
+           first (highest ``age``), ties by submission order (``rid`` —
+           queue *position* is not a tie-break because preemption
+           requeues victims at the front with a fresh age).
+        3. **Tenant fairness** (within the tier): when the tier holds
+           several tenants, only the tenant with the smallest clamped
+           virtual time (see :meth:`set_tenant_weight`) is eligible;
+           ties by tenant name.
+        4. **Cache affinity / FIFO**: within the chosen tenant, the
+           longest live-inclusive prefix match wins when the engine
+           installed ``match_fn`` (ties by queue order), plain FIFO
+           otherwise.
+
+        With defaults (one class, one tenant, no ``match_fn``) this
+        collapses to the head of the queue — exact FIFO."""
+        if len(self.queue) <= 1:
             return 0
-        for i, req in enumerate(self.queue):
-            if req.age >= self.aging_limit:
-                return i
-        best, best_pages = 0, -1
-        for i, req in enumerate(self.queue):
-            pages = self.match_fn(req.serve_prompt())
+        top = min(req.priority for req in self.queue)
+        cand = [i for i, r in enumerate(self.queue) if r.priority == top]
+        aged = [i for i in cand if self.queue[i].age >= self.aging_limit]
+        if aged:
+            return min(
+                aged, key=lambda i: (-self.queue[i].age, self.queue[i].rid)
+            )
+        tenants = {self.queue[i].tenant for i in cand}
+        if len(tenants) > 1:
+            pick = min(tenants, key=lambda t: (self._tenant_vtag(t), t))
+            cand = [i for i in cand if self.queue[i].tenant == pick]
+        if self.match_fn is None or len(cand) == 1:
+            return cand[0]
+        best, best_pages = cand[0], -1
+        for i in cand:
+            pages = self.match_fn(self.queue[i].serve_prompt())
             if pages > best_pages:
                 best, best_pages = i, pages
         return best
@@ -572,15 +662,17 @@ class Scheduler:
         """Staging slot to kill under page pressure: most recently
         staged first (LIFO by ``admit_seq``, like decode preemption) —
         background prefills carry the least progress, so they die
-        before any decoding slot is preempted."""
+        before any decoding slot is preempted. Class-aware: the lowest
+        class (highest ``priority`` value) dies first, LIFO within a
+        class, so premium stages outlive best-effort ones."""
         live = [
-            (req.admit_seq, sid)
+            (req.priority, req.admit_seq, sid)
             for sid, req in enumerate(self.stage_req)
             if req is not None
         ]
         if not live:
             return None
-        return max(live)[1]
+        return max(live)[2]
 
     def kill_stage(self, sid: int) -> RequestState:
         """Kill a background prefill: requeue its request at the FRONT
@@ -610,8 +702,14 @@ class Scheduler:
         killed staging attempt, a still-prefilling preemption) so
         ``ttft_queue_s`` doesn't absorb kill→re-stage dead time — and
         requeue at the FRONT so progress-holding requests resume
-        first."""
+        first. ``age`` resets: aging measures time spent *queued and
+        overtaken*, and a victim re-enters the queue fresh — stale age
+        from before its admission would let it claim the aged fast-path
+        over genuinely starved requests (and, pre-fix, made victim
+        resume order depend on how starved the victim once was rather
+        than on its front-of-queue position)."""
         req.preemptions += 1
+        req.age = 0
         req._preempt_t = self.clock()
         self.queue.appendleft(req)
 
@@ -661,15 +759,18 @@ class Scheduler:
         reading-per-``admit()`` ties made "most recent" collapse to
         "highest slot index". Never offers the last live slot: a lone
         slot always fits the pool (``num_pages >= max_pages`` is
-        asserted at spec construction)."""
+        asserted at spec construction). Class-aware: among live slots
+        the lowest class (highest ``priority`` value) is preempted
+        first, LIFO within a class — best-effort work yields memory
+        back before any premium request loses progress."""
         live = [
-            (req.admit_seq, slot)
+            (req.priority, req.admit_seq, slot)
             for slot, req in enumerate(self.slot_req)
             if req is not None
         ]
         if len(live) <= 1:
             return None
-        return max(live)[1]
+        return max(live)[2]
 
     def preempt(self, slot: int) -> RequestState:
         """Evict a live request: free its slot and requeue it at the
@@ -700,6 +801,8 @@ class Scheduler:
             out.append(
                 {
                     "rid": req.rid,
+                    "priority": req.priority,
+                    "tenant": req.tenant,
                     "prompt_len": len(req.prompt),
                     "output_len": len(req.output),
                     "iterations": req.iterations,

@@ -373,6 +373,47 @@ class TestDisaggEngineIdentity:
         assert eng.last_stats["transfers"] == transfers0
         assert eng.last_stats["transfer_bytes"] == bytes0
 
+    def test_kill_mid_transfer_clears_gate_and_counts_only_adoption(self):
+        """A staging lane killed while its page transfer is in flight
+        must drop its adoption-gate entry (``_transfers``) and must NOT
+        count toward ``stats["transfers"]``/``transfer_bytes`` — the
+        telemetry counts at adoption, so a killed shipment (whose
+        buffers are never unpacked) can't inflate it and the retry's
+        re-shipment isn't double-counted."""
+        tgt, drf, tp, dp = _models()
+        eng = SpecEngine(tgt, drf, tp, dp, _cfg("disagg"))
+        eng.reset(seed=0)
+        sched = eng.scheduler
+        eng.submit(MIXED[1])  # long prompt: the transfer ships pages
+        ((sid, req),) = sched.stage_admit()
+        eng._stage(sid, req)
+        while sched.stage_pending():  # run the background prefill dry
+            (
+                eng.t_stage_cache, eng.d_stage_cache,
+                eng.stage, eng.stage_pool,
+            ) = eng.runner.stage_prefill_step(
+                eng.t_params_stage, eng.d_params_stage,
+                eng.t_stage_cache, eng.d_stage_cache,
+                eng.stage, eng.stage_pool,
+            )
+            sched.note_stage_prefill_dispatch()
+        assert sid in sched.ready_q
+        eng._dispatch_transfers()  # shipment now in flight
+        assert sid in eng._transfers and eng._transfers[sid]["bytes"] > 0
+        left = sched.stage_prefill_left(sid)
+        sched.kill_stage(sid)
+        eng._kill_stage_and_cache(sid, req, left)
+        assert sid not in eng._transfers  # gate cleared: no ghost adoption
+        _assert_stage_drained(eng)        # shipped pages back in the pool
+        res = eng.run()  # retry from the front: re-stage, re-ship, adopt
+        assert res[req.rid].finished and res[req.rid].preemptions == 1
+        assert eng.last_stats["transfers"] == 1  # only the adopted shipment
+        assert eng.last_stats["adoptions"] == 1
+        assert eng.last_stats["transfer_bytes"] > 0
+        # ...and the kill/retry never perturbs committed tokens.
+        _, (ref,) = _serve(tgt, drf, tp, dp, _cfg("async"), [MIXED[1]])
+        assert res[req.rid].output == ref
+
     def test_disaggregated_requires_async_prefill(self):
         tgt, drf, tp, dp = _models()
         with pytest.raises(ValueError, match="async_prefill"):

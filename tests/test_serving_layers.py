@@ -124,6 +124,71 @@ class TestScheduler:
         assert s.slot_req[0].admit_seq > s.slot_req[1].admit_seq
         assert s.pick_victim() == 0   # LIFO; (admit_t, slot) said 1
 
+    def test_throughput_clamps_to_none_on_degenerate_windows(self):
+        """Single-token responses and clock-resolution ties can make the
+        decode window first_token -> finish (minus requeue waits) zero
+        or negative; both throughput metrics must clamp to None — never
+        inf, which json.dumps refuses to serialize (request_metrics
+        feeds BENCH_serving.json directly)."""
+        import json
+
+        from repro.serving.scheduler import RequestState
+
+        # Exact clock tie: finish_t == first_token_t.
+        tie = RequestState(rid=0, prompt=[1], max_new_tokens=1,
+                           output=[7], submit_t=0.0,
+                           first_token_t=2.0, finish_t=2.0)
+        assert tie.tokens_per_s is None
+        # Requeue wait swallowing the whole decode window (negative dur).
+        neg = RequestState(rid=1, prompt=[1], max_new_tokens=4,
+                           output=[7, 7], submit_t=0.0, first_token_t=2.0,
+                           finish_t=3.0, requeue_wait_s=5.0)
+        assert neg.tokens_per_s is None
+        # e2e: finish_t == submit_t tie.
+        e2e = RequestState(rid=2, prompt=[1], max_new_tokens=1,
+                           output=[7], submit_t=2.0,
+                           first_token_t=2.0, finish_t=2.0)
+        assert e2e.e2e_tokens_per_s is None
+        s = self._sched(slots=1)
+        s.submit([1, 2, 3])
+        ((slot, req),) = s.admit()
+        req.output.append(7)
+        req.first_token_t = s.clock()
+        req.requeue_wait_s = 100.0
+        s.retire(slot, "length")
+        (m,) = s.request_metrics(gamma=4)
+        assert m["tokens_per_s"] is None
+        json.dumps(m)  # must not hit inf/NaN
+
+    def test_requeue_resets_stale_age(self):
+        """A preemption victim re-enters the queue fresh: its age from
+        the time it spent queued BEFORE admission must not survive the
+        requeue, or a once-starved victim would claim the aged fast-path
+        over requests that are starving NOW."""
+        s = Scheduler(1, default_max_new=8, prefill_chunk=16,
+                      clock=_FakeClock(), aging_limit=2)
+        s.submit([1, 2, 3])
+        ((slot, req),) = s.admit()
+        req.age = 5  # stale: pretend it aged past the limit pre-admission
+        s.preempt(slot)
+        assert s.queue[0] is req and req.age == 0
+
+    def test_pick_victim_prefers_lower_class(self):
+        """Preemption sheds best-effort work first: among live slots the
+        highest ``priority`` value (lowest class) is the victim, LIFO
+        within a class — even when a premium request was admitted more
+        recently."""
+        s = Scheduler(3, default_max_new=8, prefill_chunk=16,
+                      clock=_FakeClock())
+        s.submit([1, 2], priority=1)           # slot 0 (best-effort)
+        s.submit([3, 4], priority=1)           # slot 1 (best-effort)
+        s.admit()
+        s.submit([5, 6], priority=0)           # slot 2 (premium, newest)
+        s.admit()
+        assert s.pick_victim() == 1            # LIFO among class 1
+        s.preempt(1)
+        assert s.pick_victim() == 0            # still not the premium slot
+
     def test_prefill_dispatch_reports_consumed_tokens(self):
         s = self._sched(slots=2, chunk=4)
         s.submit(list(range(10)))  # 9 tokens to prefill
