@@ -512,6 +512,7 @@ class SpecEngine:
                         self.batch.page_table if okey[0] == "slot"
                         else self.stage.page_table
                     )
+                    # speclint: sync-point(memoized owner-row read - the only sync live sharing does)
                     rows[okey] = np.asarray(table[okey[1]])
                 node.page = int(rows[okey][depth])
                 assert node.page >= 0, (okey, depth)
@@ -644,11 +645,12 @@ class SpecEngine:
         if self._disagg:
             return self._adopt_disagg(sid, slot, req, stats)
         prompt = req.serve_prompt()
-        used = int(np.asarray(self.stage.pages_used[sid]))
-        ids = (
-            np.asarray(self.stage.page_table[sid, :used]).tolist()
-            if used else []
+        # speclint: sync-point(adoption's one sync: staging row page ids, one device_get round-trip)
+        used_arr, ids_arr = jax.device_get(
+            (self.stage.pages_used[sid], self.stage.page_table[sid])
         )
+        used = int(used_arr)
+        ids = ids_arr[:used].tolist() if used else []
         assert all(p >= 0 for p in ids), (sid, ids)
         self._claims[slot] = self._stage_claims.pop(sid, [])
         if self._live_on:
@@ -786,6 +788,7 @@ class SpecEngine:
         n_cache = max(consumed, 0) // self.cfg.page_size
         if n_cache == 0:
             return None
+        # speclint: sync-point(one row read at release: physical ids backing the committed prefix)
         ids = np.asarray(table_row[:n_cache]).tolist()
         assert all(p >= 0 for p in ids), ids
         # ``owner`` (live sharing): the row's own live registrations
@@ -1189,10 +1192,11 @@ class SpecEngine:
     ):
         """Host bookkeeping for one materialized iteration: append emitted
         tokens, update acceptance accounting, retire finished slots."""
-        ot = np.asarray(outs.tokens)
-        nk = np.asarray(outs.n_keep)
-        nt = np.asarray(outs.num_tokens)
-        dn = np.asarray(outs.done)
+        # speclint: sync-point(THE per-iteration sync: materialize iteration N-1's StepOutputs while N runs)
+        ot, nk, nt, dn = (
+            np.asarray(outs.tokens), np.asarray(outs.n_keep),
+            np.asarray(outs.num_tokens), np.asarray(outs.done),
+        )
         now = time.perf_counter()
         budget = self.scheduler.budget
         for slot, req in snapshot.items():

@@ -74,6 +74,7 @@ import jax.numpy as jnp
 from repro.core import sampling, verification
 from repro.models.attention import PagedKV
 from repro.models.model import Model
+from repro.models.transformer import build_plan
 from repro.models.ssm import SSMEntry
 from repro.serving import paging
 from repro.serving.batch import BatchState, StageState
@@ -668,24 +669,48 @@ def _assert_all_paged(
             1, cfg.max_len, chunk_slack=chunk_slack, page_pool=(1, 1)
         )
     )
-    bad = [
-        type(e).__name__
-        for seg in cache["segments"]
-        for entry in seg
-        for e in (entry.values() if isinstance(entry, dict) else [entry])
-        if not isinstance(e, PagedKV)
-    ]
+    plan = build_plan(model.cfg)
+    bad = []  # (global layer indices, LayerDef, offending entry types)
+    base = 0
+    for seg_def, seg in zip(plan, cache["segments"]):
+        width = len(seg_def.layers)
+        for j, (ldef, entry) in enumerate(zip(seg_def.layers, seg)):
+            parts = entry.values() if isinstance(entry, dict) else [entry]
+            types = sorted(
+                {
+                    type(e).__name__
+                    for e in parts
+                    if not isinstance(e, PagedKV)
+                }
+            )
+            if types:
+                idxs = [
+                    base + g * width + j for g in range(seg_def.n_groups)
+                ]
+                bad.append((idxs, ldef, types))
+        base += width * seg_def.n_groups
     if bad:
         want = {
             "num_paths": f"num_paths={cfg.num_paths}",
             "prefix_cache": "prefix_cache=True",
             "async_prefill": "async_prefill=True",
-        }[feature]
+        }.get(feature, f"{feature}=True")
+
+        def fmt_idxs(idxs):
+            head = ", ".join(map(str, idxs[:8]))
+            return head + (", ..." if len(idxs) > 8 else "")
+
+        detail = "; ".join(
+            f"layer{'s' if len(idxs) > 1 else ''} [{fmt_idxs(idxs)}]: "
+            + ldef.kind
+            + (f"(window={ldef.window})" if ldef.window > 0 else "")
+            + f" -> {'/'.join(types)}"
+            for idxs, ldef, types in bad
+        )
         raise ValueError(
             f"{want} needs fully-paged caches, but the "
-            f"{role} model {model.cfg.name!r} has non-paged entries "
-            f"{sorted(set(bad))} (sliding-window / SSM / cross layers); "
-            f"serve it without {feature}"
+            f"{role} model {model.cfg.name!r} has non-paged entries at "
+            f"{detail}; serve it without {feature}"
         )
 
 

@@ -1,0 +1,34 @@
+"""speclint — AST/call-graph invariant checker for this repo.
+
+Every guarantee the serving stack ships rests on structural
+conventions a type checker cannot see:
+
+* **losslessness** — prefill/staging bodies must consume no PRNG
+  (``prng-discipline``);
+* **throughput** — the double-buffered serve loop syncs host<->device
+  at exactly its sanctioned points, and jitted bodies never sync or
+  call host APIs (``host-sync``, ``jit-purity``);
+* **allocator safety** — page-state transitions go through
+  ``serving/paging.py``'s helpers and every host-side claim/evict is
+  paired with its budget bookkeeping (``allocator-discipline``);
+* **feature gating** — paged-only programs are only wired up behind an
+  ``_assert_all_paged`` check (``feature-gating``).
+
+speclint enforces them with stdlib ``ast`` plus a module-level call
+graph — no third-party deps. Run it as::
+
+    python -m repro.tools.speclint [--json out] [--baseline file] paths...
+
+Annotations (in linted source):
+
+* ``# speclint: sync-point(reason)`` — sanctions a host sync on the
+  annotated statement (same line, line above, or trailing within the
+  statement). The reason is mandatory.
+* ``# speclint: disable=<pass>[,<pass>...]`` or ``disable=*`` —
+  suppresses findings of the named pass(es) on that line / line below.
+"""
+
+from .findings import Finding
+from .driver import run_speclint
+
+__all__ = ["Finding", "run_speclint"]

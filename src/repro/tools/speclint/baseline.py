@@ -1,0 +1,54 @@
+"""Baseline (= committed findings artifact) load/apply/write.
+
+``results/LINT.json`` doubles as the machine-readable report and the
+baseline: the CLI subtracts its fingerprints so pre-existing debt is
+tracked — visible in the artifact, not silenced — while any *new*
+finding fails the run. Fingerprints are line-number independent (see
+findings.Finding), so unrelated edits don't churn the baseline.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .findings import Finding
+
+VERSION = 1
+
+
+def load_fingerprints(path: str | Path) -> set[str]:
+    data = json.loads(Path(path).read_text())
+    return {f["fingerprint"] for f in data.get("findings", [])}
+
+
+def split_by_baseline(
+    findings: list[Finding], baseline: set[str]
+) -> tuple[list[Finding], list[Finding], set[str]]:
+    """-> (new, baselined, stale-baseline-fingerprints)."""
+    new, old = [], []
+    current = set()
+    for f in findings:
+        fp = f.fingerprint
+        current.add(fp)
+        (old if fp in baseline else new).append(f)
+    return new, old, baseline - current
+
+
+def report_dict(findings: list[Finding]) -> dict:
+    by_pass: dict[str, int] = {}
+    for f in findings:
+        by_pass[f.pass_name] = by_pass.get(f.pass_name, 0) + 1
+    return {
+        "version": VERSION,
+        "tool": "speclint",
+        "total": len(findings),
+        "by_pass": dict(sorted(by_pass.items())),
+        "findings": [f.to_json() for f in findings],
+    }
+
+
+def write_report(findings: list[Finding], path: str | Path) -> None:
+    Path(path).write_text(
+        json.dumps(report_dict(findings), indent=2, sort_keys=False) + "\n"
+    )

@@ -1,0 +1,215 @@
+"""Module-level call graph + jit-root detection over an Index.
+
+Edges come in three flavours:
+
+* resolved calls — bare names through the lexical scope chain, dotted
+  names through the import-alias map;
+* method fallback — ``x.foo(...)`` with an unresolvable receiver links
+  to *every* indexed function named ``foo`` (minus a denylist of
+  generic container/array method names), which is what lets
+  reachability cross ``self.``/duck-typed indirection;
+* references — a function object loaded as a value
+  (``partial(prefill_body, ...)``, ``jax.tree.map(cb, ...)``).
+
+Jit roots are ``@jax.jit``-style decorators, ``jax.jit(f)`` /
+``jax.jit(partial(f, ...))`` call sites, ``jax.lax.scan``-family
+callee arguments, and ``pl.pallas_call`` kernels; the jitted set is
+the closure of the roots over all edge kinds.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import ast
+
+from . import config
+from .index import FunctionInfo, Index, dotted_name
+
+_JIT_MAKERS = ("jax.jit",)
+_CONTROL_FLOW_SUFFIXES = (
+    "lax.scan",
+    "lax.while_loop",
+    "lax.fori_loop",
+    "lax.cond",
+    "lax.switch",
+    "lax.map",
+    "pallas_call",
+)
+_PARTIAL_NAMES = ("functools.partial", "partial")
+
+
+def _is_jit_maker(dotted: str | None) -> bool:
+    return dotted is not None and (
+        dotted in _JIT_MAKERS or dotted.endswith(".jax.jit")
+    )
+
+
+def _is_control_flow(dotted: str | None) -> bool:
+    return dotted is not None and any(
+        dotted == s or dotted.endswith("." + s)
+        for s in _CONTROL_FLOW_SUFFIXES
+    )
+
+
+def _is_partial(dotted: str | None) -> bool:
+    return dotted in _PARTIAL_NAMES
+
+
+class CallGraph:
+    def __init__(self, index: Index):
+        self.index = index
+        n = len(index.funcs)
+        self.edges: dict[int, set[int]] = {f.fid: set() for f in index.funcs}
+        # per-function external call records: (dotted-or-None, attr, node)
+        self.external_calls: dict[int, list] = {
+            f.fid: [] for f in index.funcs
+        }
+        self._jit_root_fids: set[int] = set()
+        for func in index.funcs:
+            self._analyze(func)
+        self.jitted: set[int] = self._closure(self._jit_root_fids)
+
+    # -- construction -------------------------------------------------------
+
+    def _resolve_bare(self, func: FunctionInfo, name: str):
+        for scope in func.ancestors():
+            child = scope.children.get(name)
+            if child is not None and child.fid >= 0:
+                return child
+        mod_fn = self.index.by_module_qual.get((func.file.module, name))
+        if mod_fn is not None:
+            return mod_fn
+        dotted = func.file.aliases.get(name)
+        if dotted is not None:
+            return self.index.resolve_dotted(dotted)
+        return None
+
+    def _callee_refs(self, func: FunctionInfo, expr: ast.expr):
+        """Function(s) an expression names: ``f``, ``mod.f``,
+        ``partial(f, ...)``."""
+        out = []
+        if isinstance(expr, ast.Call):
+            dotted = dotted_name(expr.func, func.file.aliases)
+            if _is_partial(dotted) and expr.args:
+                return self._callee_refs(func, expr.args[0])
+            return out
+        if isinstance(expr, ast.Name):
+            hit = self._resolve_bare(func, expr.id)
+            if hit is not None:
+                out.append(hit)
+        elif isinstance(expr, ast.Attribute):
+            dotted = dotted_name(expr, func.file.aliases)
+            if dotted is not None:
+                hit = self.index.resolve_dotted(dotted)
+                if hit is not None:
+                    out.append(hit)
+        return out
+
+    def _analyze(self, func: FunctionInfo) -> None:
+        aliases = func.file.aliases
+        for call in func.calls:
+            tgt = call.func
+            dotted = None
+            if isinstance(tgt, ast.Name):
+                hit = self._resolve_bare(func, tgt.id)
+                if hit is not None:
+                    self.edges[func.fid].add(hit.fid)
+                else:
+                    dotted = aliases.get(tgt.id, tgt.id)
+                    self.external_calls[func.fid].append(
+                        (dotted, tgt.id, call)
+                    )
+            elif isinstance(tgt, ast.Attribute):
+                dotted = dotted_name(tgt, aliases)
+                hit = (
+                    self.index.resolve_dotted(dotted) if dotted else None
+                )
+                if hit is not None:
+                    self.edges[func.fid].add(hit.fid)
+                else:
+                    attr = tgt.attr
+                    self.external_calls[func.fid].append(
+                        (dotted, attr, call)
+                    )
+                    if attr not in config.METHOD_FALLBACK_DENYLIST:
+                        for cand in self.index.by_bare.get(attr, ()):
+                            self.edges[func.fid].add(cand.fid)
+            # jit/scan/pallas call sites turn their callee args into roots
+            site = dotted or dotted_name(tgt, aliases)
+            if _is_jit_maker(site) and call.args:
+                for hit in self._callee_refs(func, call.args[0]):
+                    self._jit_root_fids.add(hit.fid)
+            elif _is_control_flow(site):
+                for arg in call.args:
+                    for hit in self._callee_refs(func, arg):
+                        self._jit_root_fids.add(hit.fid)
+
+        # reference edges: function objects loaded as values
+        call_funcs = {id(c.func) for c in func.calls}
+        for nl in func.name_loads:
+            if id(nl) in call_funcs:
+                continue
+            hit = self._resolve_bare(func, nl.id)
+            if hit is not None:
+                self.edges[func.fid].add(hit.fid)
+        for al in func.attr_loads:
+            if id(al) in call_funcs:
+                continue
+            dotted = dotted_name(al, aliases)
+            if dotted is not None:
+                hit = self.index.resolve_dotted(dotted)
+                if hit is not None:
+                    self.edges[func.fid].add(hit.fid)
+
+        # decorator jit roots
+        node = func.node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dec
+                if isinstance(d, ast.Call):
+                    inner = dotted_name(d.func, aliases)
+                    if _is_partial(inner) and d.args:
+                        first = dotted_name(d.args[0], aliases)
+                        if _is_jit_maker(first):
+                            self._jit_root_fids.add(func.fid)
+                        continue
+                    d = d.func
+                if _is_jit_maker(dotted_name(d, aliases)):
+                    self._jit_root_fids.add(func.fid)
+
+    # -- queries ------------------------------------------------------------
+
+    def _closure(self, roots: set[int]) -> set[int]:
+        seen = set(roots)
+        frontier = deque(roots)
+        while frontier:
+            fid = frontier.popleft()
+            for nxt in self.edges.get(fid, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+        return seen
+
+    def reachable_with_paths(
+        self, roots: list[FunctionInfo]
+    ) -> dict[int, list[str]]:
+        """fid -> call chain of qualnames from the nearest root."""
+        paths: dict[int, list[str]] = {}
+        frontier: deque[int] = deque()
+        for r in roots:
+            if r.fid not in paths:
+                paths[r.fid] = [r.qualname]
+                frontier.append(r.fid)
+        while frontier:
+            fid = frontier.popleft()
+            for nxt in self.edges.get(fid, ()):
+                if nxt not in paths:
+                    paths[nxt] = paths[fid] + [
+                        self.index.funcs[nxt].qualname
+                    ]
+                    frontier.append(nxt)
+        return paths
+
+    def is_jitted(self, func: FunctionInfo) -> bool:
+        return func.fid in self.jitted

@@ -1,0 +1,91 @@
+"""CLI: ``python -m repro.tools.speclint [--json out] [--baseline file]
+paths...``
+
+Exit codes: 0 clean (or all findings baselined), 1 new findings,
+2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import baseline as baseline_mod
+from . import config
+from .driver import run_speclint
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="speclint",
+        description=(
+            "AST/call-graph invariant checker: prng-discipline, "
+            "host-sync, jit-purity, allocator-discipline, "
+            "feature-gating"
+        ),
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files or directories to lint (default: src)",
+    )
+    parser.add_argument(
+        "--json", metavar="OUT",
+        help="write the full machine-readable report (all findings, "
+        "baselined included) to this path",
+    )
+    parser.add_argument(
+        "--baseline", metavar="FILE",
+        help="subtract this report's fingerprints; only NEW findings "
+        "fail the run",
+    )
+    parser.add_argument(
+        "--passes", metavar="P1,P2",
+        help=f"comma-separated subset of: {', '.join(config.ALL_PASSES)}",
+    )
+    parser.add_argument(
+        "--root", metavar="DIR", default=None,
+        help="repo root for relative paths in findings (default: cwd)",
+    )
+    args = parser.parse_args(argv)
+
+    passes = None
+    if args.passes:
+        passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    try:
+        findings = run_speclint(
+            args.paths or ["src"], root=args.root, passes=passes
+        )
+    except ValueError as exc:
+        print(f"speclint: {exc}", file=sys.stderr)
+        return 2
+
+    if args.json:
+        baseline_mod.write_report(findings, args.json)
+
+    if args.baseline:
+        if not Path(args.baseline).exists():
+            print(
+                f"speclint: baseline {args.baseline} not found",
+                file=sys.stderr,
+            )
+            return 2
+        known = baseline_mod.load_fingerprints(args.baseline)
+        new, old, stale = baseline_mod.split_by_baseline(findings, known)
+        for f in new:
+            print(f.render())
+        print(
+            f"speclint: {len(new)} new finding(s), "
+            f"{len(old)} baselined, {len(stale)} stale baseline entr"
+            f"{'y' if len(stale) == 1 else 'ies'}"
+        )
+        return 1 if new else 0
+
+    for f in findings:
+        print(f.render())
+    print(f"speclint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

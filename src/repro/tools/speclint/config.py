@@ -1,0 +1,219 @@
+"""Pass configuration tuned to this codebase.
+
+Root sets are matched by *bare function name* so the passes fire on
+fixture copies in tests (e.g. a ``stage_prefill_body`` clone in a tmp
+dir) exactly like on the live tree.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# prng-discipline: functions that must never reach jax.random.*
+# ---------------------------------------------------------------------------
+# The jitted prefill/staging/transfer bodies plus the engine's host-side
+# staging/adoption methods: losslessness (PAPER.md Eq. 4; PR 5/7) rests
+# on prefill consuming ZERO randomness — the drafter/verifier key
+# schedule must be byte-identical whether a prompt was prefilled
+# serially, async-staged, or adopted across pods.
+PRNG_ROOTS = frozenset(
+    {
+        "prefill_body",
+        "stage_prefill_body",
+        "_pack_stage_pages",
+        "_unpack_stage_pages",
+        "_release_stage_row",
+        "_release_slot",
+        "host_adopt_stage",
+        "host_claim_prefix",
+        "host_claim_live",
+        "host_evict",
+        # engine host-side admission/staging/adoption paths
+        "_admit",
+        "_stage",
+        "_adopt",
+        "_adopt_disagg",
+        "_dispatch_transfers",
+        "_advance_rides",
+    }
+)
+
+# ---------------------------------------------------------------------------
+# host-sync: the serve loop
+# ---------------------------------------------------------------------------
+# Serve-loop scope = these roots plus every function *defined in the
+# same file* as a root that a root reaches (keeps scheduler/benchmarks
+# host code out of the one-sync rule).
+SYNC_ROOTS = frozenset(
+    {"_run_serial", "_run_async", "_process", "serve", "_service_wait"}
+)
+
+# Calls that materialize device values on host. Matched against the
+# import-alias-resolved dotted name.
+SYNC_CALLS = frozenset(
+    {
+        "numpy.asarray",
+        "numpy.array",
+        "jax.device_get",
+        "jax.block_until_ready",
+    }
+)
+# Method attrs that sync regardless of receiver resolution.
+SYNC_ATTRS = frozenset({"item", "block_until_ready"})
+
+# int()/float()/bool() only count as syncs when their argument subtree
+# visibly touches device state: a SYNC_CALLS call, or an attribute of
+# these device-resident engine fields / names.
+DEVICE_STATE_ATTRS = frozenset(
+    {
+        "batch",
+        "stage",
+        "stage_pool",
+        "t_cache",
+        "d_cache",
+        "t_stage_cache",
+        "d_stage_cache",
+        "key",
+    }
+)
+DEVICE_STATE_NAMES = frozenset({"outs", "pool"})
+
+# Parameter names treated as trace-time static inside jitted bodies
+# (config/spec/model objects), for the array-valued-``if`` check.
+STATIC_PARAM_NAMES = frozenset(
+    {
+        "self",
+        "cls",
+        "cfg",
+        "spec",
+        "page_spec",
+        "stage_spec",
+        "model",
+        "target",
+        "drafter",
+        "verify",
+        "verify_mp",
+        "plan",
+        # per-layer plan entry / kernel geometry scalars: closed over or
+        # passed as static_argnames, never traced
+        "ldef",
+        "window",
+        "softcap",
+        "interpret",
+    }
+)
+
+# ---------------------------------------------------------------------------
+# jit-purity: host APIs banned inside jitted/scan/donated bodies
+# ---------------------------------------------------------------------------
+HOST_CALL_PREFIXES = ("time.", "datetime.", "random.")
+HOST_CALL_NAMES = frozenset({"print", "time", "datetime", "random"})
+ALLOWED_IN_JIT = frozenset({"jax.debug.print", "jax.debug.callback"})
+
+# ---------------------------------------------------------------------------
+# allocator-discipline
+# ---------------------------------------------------------------------------
+PAGING_MODULE_SUFFIX = "serving/paging.py"
+# Device-side page ops: jittable pool transitions. Outside paging.py
+# they may only be called from jit-reachable code.
+PAGING_DEVICE_OPS = frozenset({"ensure", "cow_ensure", "fork", "release"})
+# Host-side transitions: never callable from jitted code.
+PAGING_HOST_OPS = frozenset(
+    {"host_claim_prefix", "host_claim_live", "host_evict", "host_adopt_stage"}
+)
+# PagePool / PageBudget state that only paging.py may write.
+POOL_FIELDS = frozenset(
+    {"free_stack", "free_count", "ref", "cached", "staged"}
+)
+BUDGET_FIELDS = frozenset({"slot_len", "stage_len"})
+# claim/evict call -> the budget bookkeeping that must appear in the
+# same function body.
+CLAIM_PAIRING = {
+    "host_claim_prefix": frozenset({"note_prefix_claim", "note_stage_claim"}),
+    "host_claim_live": frozenset({"note_prefix_claim", "note_stage_claim"}),
+    "host_evict": frozenset({"evict_deficit"}),
+}
+
+# ---------------------------------------------------------------------------
+# feature-gating
+# ---------------------------------------------------------------------------
+# Programs that assume fully-paged caches; every reference must sit in
+# a function that also calls _assert_all_paged on its config path.
+PAGED_ONLY_FUNCS = frozenset(
+    {
+        "stage_prefill_body",
+        "decode_body_multipath",
+        "_pack_stage_pages",
+        "_unpack_stage_pages",
+    }
+)
+GATE_NAME = "_assert_all_paged"
+
+# ---------------------------------------------------------------------------
+# call-graph method fallback
+# ---------------------------------------------------------------------------
+# Attr names too generic to fall back on every same-named function in
+# the index (dict/array/list methods would wire the graph into a ball).
+METHOD_FALLBACK_DENYLIST = frozenset(
+    {
+        "get",
+        "pop",
+        "items",
+        "keys",
+        "values",
+        "append",
+        "extend",
+        "add",
+        "update",
+        "setdefault",
+        "copy",
+        "sort",
+        "sorted",
+        "split",
+        "join",
+        "format",
+        "reshape",
+        "astype",
+        "at",
+        "set",
+        "sum",
+        "mean",
+        "min",
+        "max",
+        "any",
+        "all",
+        "item",
+        "tolist",
+        "flatten",
+        "ravel",
+        "read",
+        "write",
+        "close",
+        "put",
+        "clear",
+        "remove",
+        "index",
+        "count",
+    }
+)
+
+# Passes whose rules only make sense on production sources (tests and
+# benchmarks drive allocator/paged internals directly, on purpose).
+PROD_ONLY_PASSES = frozenset({"allocator-discipline", "feature-gating"})
+
+ALL_PASSES = (
+    "prng-discipline",
+    "host-sync",
+    "jit-purity",
+    "allocator-discipline",
+    "feature-gating",
+)
+
+
+def is_prod_path(relpath: str) -> bool:
+    """True for production sources (not tests/, benchmarks/, test_*.py,
+    conftest.py)."""
+    parts = relpath.replace("\\", "/").split("/")
+    if "tests" in parts or "benchmarks" in parts:
+        return False
+    base = parts[-1]
+    return not (base.startswith("test_") or base == "conftest.py")

@@ -1,0 +1,52 @@
+"""Shared state handed to every pass."""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .callgraph import CallGraph
+from .findings import Finding
+from .index import FunctionInfo, Index
+
+
+@dataclasses.dataclass
+class LintContext:
+    index: Index
+    graph: CallGraph
+
+    def finding(
+        self,
+        pass_name: str,
+        rule: str,
+        func: FunctionInfo,
+        node: ast.AST,
+        message: str,
+    ) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(
+            pass_name=pass_name,
+            rule=rule,
+            path=func.file.relpath,
+            line=line,
+            func=func.qualname,
+            code=func.file.line(line),
+            message=message,
+        )
+
+
+def enclosing_stmt(func: FunctionInfo, node: ast.AST) -> ast.stmt | None:
+    """Smallest statement of ``func`` whose span covers ``node``."""
+    line = getattr(node, "lineno", None)
+    if line is None:
+        return None
+    best = None
+    for stmt in func.scope_stmts:
+        end = getattr(stmt, "end_lineno", stmt.lineno)
+        if stmt.lineno <= line <= end:
+            if best is None or (
+                end - stmt.lineno
+                < getattr(best, "end_lineno", best.lineno) - best.lineno
+            ):
+                best = stmt
+    return best

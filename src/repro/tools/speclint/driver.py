@@ -1,0 +1,49 @@
+"""Orchestration: index -> call graph -> passes -> filters."""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from . import config
+from .callgraph import CallGraph
+from .context import LintContext
+from .findings import Finding, assign_occurrences
+from .index import build_index
+from .passes import PASSES
+
+
+def run_speclint(
+    paths: list[str | Path],
+    root: str | Path | None = None,
+    passes: list[str] | None = None,
+) -> list[Finding]:
+    """Lint ``paths`` (files or directories of ``*.py``); returns all
+    unsuppressed findings, baseline not applied. ``root`` anchors the
+    repo-relative paths in findings (defaults to cwd)."""
+    root = Path(root) if root is not None else Path.cwd()
+    root = root.resolve()
+    index = build_index([Path(p) for p in paths], root)
+    graph = CallGraph(index)
+    ctx = LintContext(index=index, graph=graph)
+
+    selected = list(passes) if passes is not None else list(config.ALL_PASSES)
+    unknown = [p for p in selected if p not in PASSES]
+    if unknown:
+        raise ValueError(f"unknown pass(es): {unknown}")
+
+    findings: list[Finding] = []
+    for name in selected:
+        findings.extend(PASSES[name](ctx))
+
+    files = {sf.relpath: sf for sf in index.files}
+    kept = []
+    for f in findings:
+        if f.pass_name in config.PROD_ONLY_PASSES and not config.is_prod_path(
+            f.path
+        ):
+            continue
+        sf = files.get(f.path)
+        if sf is not None and sf.suppressed(f.line, f.pass_name):
+            continue
+        kept.append(f)
+    return assign_occurrences(kept)

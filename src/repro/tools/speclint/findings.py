@@ -1,0 +1,73 @@
+"""Finding record + stable fingerprints for the baseline."""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+
+@dataclasses.dataclass
+class Finding:
+    """One lint violation.
+
+    ``fingerprint`` is line-number independent — it hashes the pass,
+    rule, file, enclosing function and the *normalized source line*
+    (plus an occurrence index for identical lines), so a baseline
+    survives unrelated edits above the finding.
+    """
+
+    pass_name: str
+    rule: str
+    path: str          # repo-relative, '/'-separated
+    line: int
+    func: str          # enclosing function qualname ('<module>' at top level)
+    code: str          # stripped source line
+    message: str
+    occurrence: int = 0
+
+    @property
+    def fingerprint(self) -> str:
+        key = "|".join(
+            [
+                self.pass_name,
+                self.rule,
+                self.path,
+                self.func,
+                " ".join(self.code.split()),
+                str(self.occurrence),
+            ]
+        )
+        return hashlib.sha256(key.encode("utf-8")).hexdigest()[:16]
+
+    def to_json(self) -> dict:
+        return {
+            "pass": self.pass_name,
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "func": self.func,
+            "code": self.code,
+            "message": self.message,
+            "fingerprint": self.fingerprint,
+        }
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}: [{self.pass_name}/{self.rule}] "
+            f"{self.message}\n    {self.code}"
+        )
+
+
+def assign_occurrences(findings: list[Finding]) -> list[Finding]:
+    """Disambiguate findings whose fingerprint key would collide
+    (same rule + file + function + source text) by occurrence index,
+    in line order."""
+    findings = sorted(
+        findings, key=lambda f: (f.path, f.line, f.pass_name, f.rule)
+    )
+    seen: dict[tuple, int] = {}
+    for f in findings:
+        key = (f.pass_name, f.rule, f.path, f.func, " ".join(f.code.split()))
+        f.occurrence = seen.get(key, 0)
+        seen[key] = f.occurrence + 1
+    return findings

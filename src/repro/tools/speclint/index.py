@@ -1,0 +1,332 @@
+"""Source indexing: parse files, extract comments (suppressions +
+sync-point annotations), import aliases, and per-function AST node
+ownership."""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+
+_SPECLINT_DISABLE = re.compile(
+    r"#\s*speclint:\s*disable=([\w*,\- ]+)"
+)
+_SPECLINT_SYNC = re.compile(
+    r"#\s*speclint:\s*sync-point(?:\((.*?)\))?"
+)
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One def (or the module top level) plus the AST nodes it owns —
+    nodes inside nested defs belong to the nested FunctionInfo."""
+
+    fid: int
+    name: str                    # bare name ('<module>' for top level)
+    qualname: str
+    file: "SourceFile"
+    node: ast.AST                # FunctionDef / AsyncFunctionDef / Module
+    parent: "FunctionInfo | None"
+    children: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)
+    name_loads: list = dataclasses.field(default_factory=list)
+    attr_loads: list = dataclasses.field(default_factory=list)
+    assign_targets: list = dataclasses.field(default_factory=list)
+    scope_stmts: list = dataclasses.field(default_factory=list)
+    ifs: list = dataclasses.field(default_factory=list)
+    globals_nonlocals: list = dataclasses.field(default_factory=list)
+
+    def ancestors(self):
+        f = self
+        while f is not None:
+            yield f
+            f = f.parent
+
+
+class SourceFile:
+    def __init__(self, path: Path, relpath: str, module: str, text: str):
+        self.path = path
+        self.relpath = relpath
+        self.module = module
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text)
+        self.aliases: dict[str, str] = {}
+        self.suppressions: dict[int, set[str]] = {}
+        self.sync_points: dict[int, str] = {}
+        self.functions: list[FunctionInfo] = []
+        self._scan_comments()
+
+    def line(self, n: int) -> str:
+        if 1 <= n <= len(self.lines):
+            return self.lines[n - 1].strip()
+        return ""
+
+    def _scan_comments(self) -> None:
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(self.text).readline)
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                row = tok.start[0]
+                m = _SPECLINT_DISABLE.search(tok.string)
+                if m:
+                    names = {
+                        p.strip() for p in m.group(1).split(",") if p.strip()
+                    }
+                    self.suppressions.setdefault(row, set()).update(names)
+                m = _SPECLINT_SYNC.search(tok.string)
+                if m:
+                    self.sync_points[row] = (m.group(1) or "").strip()
+        except tokenize.TokenError:
+            pass
+
+    def suppressed(self, line: int, pass_name: str) -> bool:
+        for row in (line, line - 1):
+            names = self.suppressions.get(row)
+            if names and ("*" in names or pass_name in names):
+                return True
+        return False
+
+    def sync_annotation(self, start: int, end: int) -> str | None:
+        """Return the sync-point reason annotating the statement spanning
+        ``start..end`` (comment on the line above, or any line inside
+        the span, e.g. trailing). None when unannotated."""
+        for row in range(start - 1, end + 1):
+            if row in self.sync_points:
+                return self.sync_points[row]
+        return None
+
+
+def module_name(relpath: str) -> str:
+    parts = relpath.replace("\\", "/").split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _collect_aliases(sf: SourceFile) -> None:
+    pkg_parts = sf.module.split(".")[:-1] if sf.module else []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    sf.aliases[a.asname] = a.name
+                else:
+                    # ``import a.b.c`` binds ``a``
+                    root = a.name.split(".")[0]
+                    sf.aliases[root] = root
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts[: len(pkg_parts) - (node.level - 1)]
+                prefix = ".".join(base + ([node.module] if node.module else []))
+            else:
+                prefix = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                bound = a.asname or a.name
+                sf.aliases[bound] = (
+                    f"{prefix}.{a.name}" if prefix else a.name
+                )
+
+
+class _OwnerWalker(ast.NodeVisitor):
+    """Assign every interesting node to its innermost enclosing def."""
+
+    def __init__(self, sf: SourceFile, index: "Index"):
+        self.sf = sf
+        self.index = index
+        self.current: FunctionInfo | None = None
+
+    def _new_func(self, name: str, node: ast.AST) -> FunctionInfo:
+        parent = self.current
+        if parent is None or parent.name == "<module>":
+            qual = name
+        else:
+            qual = f"{parent.qualname}.{name}"
+        info = FunctionInfo(
+            fid=len(self.index.funcs), name=name, qualname=qual,
+            file=self.sf, node=node, parent=parent,
+        )
+        self.index.funcs.append(info)
+        self.sf.functions.append(info)
+        self.index.by_bare.setdefault(name, []).append(info)
+        self.index.by_module_qual[(self.sf.module, qual)] = info
+        if parent is not None:
+            parent.children[name] = info
+        return info
+
+    def visit_Module(self, node: ast.Module):
+        self.current = self._new_func("<module>", node)
+        self.generic_visit(node)
+
+    def _visit_def(self, node):
+        prev = self.current
+        info = self._new_func(node.name, node)
+        # decorators/defaults belong to the enclosing scope
+        self.current = prev
+        for dec in node.decorator_list:
+            self.visit(dec)
+        for default in list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None
+        ]:
+            self.visit(default)
+        self.current = info
+        for stmt in node.body:
+            self.visit(stmt)
+        self.current = prev
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        # methods nest under the class name via a pseudo scope so
+        # qualnames read Class.method; node ownership stays with defs.
+        prev = self.current
+        pseudo = FunctionInfo(
+            fid=-1, name=node.name,
+            qualname=(
+                node.name
+                if prev is None or prev.name == "<module>"
+                else f"{prev.qualname}.{node.name}"
+            ),
+            file=self.sf, node=node, parent=prev,
+        )
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.current = pseudo
+        for stmt in node.body:
+            self.visit(stmt)
+        self.current = prev
+        # statements owned by the class body (rare) re-home to parent
+        if prev is not None:
+            for lst_name in (
+                "calls", "name_loads", "attr_loads", "assign_targets",
+                "scope_stmts", "ifs", "globals_nonlocals",
+            ):
+                getattr(prev, lst_name).extend(getattr(pseudo, lst_name))
+            for name, child in pseudo.children.items():
+                prev.children.setdefault(name, child)
+
+    # -- node collection ----------------------------------------------------
+
+    def visit(self, node):
+        cur = self.current
+        if cur is not None and isinstance(node, ast.stmt):
+            cur.scope_stmts.append(node)
+        return super().visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if self.current is not None:
+            self.current.calls.append(node)
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if self.current is not None and isinstance(node.ctx, ast.Load):
+            self.current.name_loads.append(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if self.current is not None and isinstance(node.ctx, ast.Load):
+            self.current.attr_loads.append(node)
+        self.generic_visit(node)
+
+    def visit_If(self, node: ast.If):
+        if self.current is not None:
+            self.current.ifs.append(node)
+        self.generic_visit(node)
+
+    def _visit_assign(self, node):
+        if self.current is not None:
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            self.current.assign_targets.extend(targets)
+        self.generic_visit(node)
+
+    visit_Assign = _visit_assign
+    visit_AugAssign = _visit_assign
+    visit_AnnAssign = _visit_assign
+
+    def visit_Global(self, node):
+        if self.current is not None:
+            self.current.globals_nonlocals.append(node)
+
+    visit_Nonlocal = visit_Global
+
+
+class Index:
+    """All parsed files + every function across them."""
+
+    def __init__(self) -> None:
+        self.files: list[SourceFile] = []
+        self.by_module: dict[str, SourceFile] = {}
+        self.funcs: list[FunctionInfo] = []
+        self.by_bare: dict[str, list[FunctionInfo]] = {}
+        self.by_module_qual: dict[tuple[str, str], FunctionInfo] = {}
+
+    def add_file(self, path: Path, root: Path) -> SourceFile | None:
+        try:
+            relpath = path.resolve().relative_to(root).as_posix()
+        except ValueError:
+            relpath = path.as_posix()
+        try:
+            text = path.read_text()
+            sf = SourceFile(path, relpath, module_name(relpath), text)
+        except (SyntaxError, UnicodeDecodeError):
+            return None
+        _collect_aliases(sf)
+        _OwnerWalker(sf, self).visit(sf.tree)
+        self.files.append(sf)
+        self.by_module[sf.module] = sf
+        return sf
+
+    def resolve_dotted(self, dotted: str) -> FunctionInfo | None:
+        """``pkg.mod.Class.fn`` -> FunctionInfo, trying the longest
+        known-module prefix."""
+        parts = dotted.split(".")
+        for cut in range(len(parts) - 1, 0, -1):
+            mod = ".".join(parts[:cut])
+            sf = self.by_module.get(mod)
+            if sf is not None:
+                qual = ".".join(parts[cut:])
+                hit = self.by_module_qual.get((sf.module, qual))
+                if hit is not None:
+                    return hit
+        return None
+
+
+def dotted_name(expr: ast.expr, aliases: dict[str, str]) -> str | None:
+    """Resolve ``np.asarray`` / ``jax.random.split`` / ``paging.ensure``
+    to an import-alias-expanded dotted string; None when the chain is
+    not rooted at a plain name (e.g. ``self.runner.fn``... returns the
+    chain with the raw root so callers can still pattern-match)."""
+    parts: list[str] = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        base = aliases.get(expr.id, expr.id)
+        return ".".join([base] + list(reversed(parts)))
+    return None
+
+
+def build_index(paths: list[Path], root: Path) -> Index:
+    index = Index()
+    seen: set[Path] = set()
+    for p in paths:
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            rf = f.resolve()
+            if rf in seen or f.suffix != ".py":
+                continue
+            seen.add(rf)
+            index.add_file(f, root)
+    return index

@@ -1,0 +1,15 @@
+"""Pass registry: name -> run(ctx) -> list[Finding]."""
+
+from __future__ import annotations
+
+from . import allocator, gating, hostsync, jitpurity, prng
+
+PASSES = {
+    "prng-discipline": prng.run,
+    "host-sync": hostsync.run,
+    "jit-purity": jitpurity.run,
+    "allocator-discipline": allocator.run,
+    "feature-gating": gating.run,
+}
+
+__all__ = ["PASSES"]

@@ -1,0 +1,170 @@
+"""allocator-discipline: page-state transitions stay inside
+``serving/paging.py``'s sanctioned helpers, device ops stay jitted,
+host ops stay un-jitted, and every host-side claim/evict pairs with
+its budget bookkeeping in the same function.
+
+The page lifecycle (free -> staged -> referenced -> cached -> evicted)
+is only provably never-fail because the pool's counters move through
+the paging helpers in lockstep with the scheduler's ``PageBudget``;
+an out-of-band field write or an unpaired claim breaks the accounting
+invariant the admission proof rests on.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import config
+from ..context import LintContext
+from ..index import FunctionInfo, dotted_name
+
+PASS = "allocator-discipline"
+
+
+def _in_paging(func: FunctionInfo) -> bool:
+    return func.file.relpath.endswith(config.PAGING_MODULE_SUFFIX)
+
+
+def _paging_op(ctx: LintContext, func: FunctionInfo, call: ast.Call, ops):
+    """Name of the paging op this call resolves to — an internal edge
+    to a paging.py function, or an (unresolvable) ``paging.X`` dotted
+    chain. Bare names / foreign methods that merely collide with an op
+    name do not count."""
+    tgt = call.func
+    if isinstance(tgt, ast.Name):
+        if tgt.id not in ops:
+            return None
+        hit = ctx.graph._resolve_bare(func, tgt.id)
+        if hit is not None:
+            return tgt.id if _in_paging(hit) else None
+        dotted = func.file.aliases.get(tgt.id, "")
+        parts = dotted.split(".")
+        if len(parts) >= 2 and parts[-2] == "paging":
+            return tgt.id
+        return None
+    if isinstance(tgt, ast.Attribute):
+        if tgt.attr not in ops:
+            return None
+        dotted = dotted_name(tgt, func.file.aliases)
+        hit = ctx.index.resolve_dotted(dotted) if dotted else None
+        if hit is not None:
+            return tgt.attr if _in_paging(hit) else None
+        if dotted:
+            parts = dotted.split(".")
+            if len(parts) >= 2 and parts[-2] == "paging":
+                return tgt.attr
+        return None
+    return None
+
+
+def _method_attrs(func: FunctionInfo) -> set[str]:
+    return {
+        c.func.attr
+        for c in func.calls
+        if isinstance(c.func, ast.Attribute)
+    } | {
+        c.func.id for c in func.calls if isinstance(c.func, ast.Name)
+    }
+
+
+def run(ctx: LintContext):
+    findings = []
+    for func in ctx.index.funcs:
+        if func.fid < 0:
+            continue
+        in_paging = _in_paging(func)
+        jitted = ctx.graph.is_jitted(func)
+
+        for call in func.calls:
+            dev = _paging_op(ctx, func, call, config.PAGING_DEVICE_OPS)
+            if dev and not in_paging and not jitted:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "device-op-outside-jit",
+                        func,
+                        call,
+                        f"paging.{dev} is a device-side pool transition; "
+                        "calling it from un-jitted host code round-trips "
+                        "the pool per call — move it into a jitted body "
+                        "or use the host_* helpers",
+                    )
+                )
+            host = _paging_op(ctx, func, call, config.PAGING_HOST_OPS)
+            if host and jitted:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "host-op-in-jit",
+                        func,
+                        call,
+                        f"paging.{host} mutates host-visible pool state "
+                        "and must never run under trace",
+                    )
+                )
+            # pool reconstruction outside paging.py: _replace on pool
+            # fields bypasses the sanctioned transitions
+            if (
+                not in_paging
+                and isinstance(call.func, ast.Attribute)
+                and call.func.attr == "_replace"
+                and any(
+                    kw.arg in config.POOL_FIELDS for kw in call.keywords
+                )
+            ):
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "pool-write-outside-paging",
+                        func,
+                        call,
+                        "PagePool field _replace outside serving/paging.py "
+                        "— page-state transitions must go through the "
+                        "paging helpers",
+                    )
+                )
+
+        if not in_paging:
+            for tgt in func.assign_targets:
+                node = tgt
+                if isinstance(node, ast.Subscript):
+                    node = node.value
+                if (
+                    isinstance(node, ast.Attribute)
+                    and node.attr
+                    in (config.POOL_FIELDS | config.BUDGET_FIELDS)
+                ):
+                    findings.append(
+                        ctx.finding(
+                            PASS,
+                            "pool-write-outside-paging",
+                            func,
+                            tgt,
+                            f"write to allocator field .{node.attr} "
+                            "outside serving/paging.py — only the "
+                            "sanctioned helpers may move pool/budget "
+                            "state",
+                        )
+                    )
+
+        # claim <-> budget pairing (host code outside paging.py)
+        if in_paging or jitted:
+            continue
+        called = _method_attrs(func)
+        for op, notes in config.CLAIM_PAIRING.items():
+            if op in called and not (called & notes):
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "unpaired-claim"
+                        if op.startswith("host_claim")
+                        else "unpaired-evict",
+                        func,
+                        func.node,
+                        f"{func.qualname!r} calls {op} without the "
+                        f"matching budget bookkeeping "
+                        f"({' / '.join(sorted(notes))}) in the same "
+                        "function — pool and PageBudget drift apart",
+                    )
+                )
+    return findings

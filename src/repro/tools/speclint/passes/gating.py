@@ -1,0 +1,77 @@
+"""feature-gating: paged-only programs (staging bodies, multi-path
+decode, page pack/unpack) may only be wired up by code that checked
+``_assert_all_paged`` on its config path.
+
+These bodies read ``page_table``/pool storage for *every* layer; on a
+mixed-attention model (sliding-window rings, SSM states, cross
+caches) the non-paged entries silently lose history instead of
+failing. The gate turns that into an actionable config error — so
+every reference site must sit in a function (or enclosing function)
+that calls the gate.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import config
+from ..context import LintContext
+from ..index import FunctionInfo, dotted_name
+
+PASS = "feature-gating"
+
+
+def _has_gate(func: FunctionInfo) -> bool:
+    for scope in func.ancestors():
+        for call in scope.calls:
+            tgt = call.func
+            name = (
+                tgt.id
+                if isinstance(tgt, ast.Name)
+                else tgt.attr if isinstance(tgt, ast.Attribute) else None
+            )
+            if name == config.GATE_NAME:
+                return True
+    return False
+
+
+def _paged_only_refs(func: FunctionInfo):
+    """(name, node) for every reference to a paged-only program."""
+    aliases = func.file.aliases
+    for nl in func.name_loads:
+        if nl.id in config.PAGED_ONLY_FUNCS:
+            yield nl.id, nl
+    for al in func.attr_loads:
+        if al.attr in config.PAGED_ONLY_FUNCS:
+            dotted = dotted_name(al, aliases)
+            # only module-qualified references count — a stray method
+            # attr with a colliding name is not a program reference
+            if dotted is not None and not dotted.startswith("self."):
+                yield al.attr, al
+
+
+def run(ctx: LintContext):
+    findings = []
+    for func in ctx.index.funcs:
+        if func.fid < 0 or func.name in config.PAGED_ONLY_FUNCS:
+            continue
+        refs = list(_paged_only_refs(func))
+        if not refs:
+            continue
+        if _has_gate(func):
+            continue
+        for name, node in refs:
+            findings.append(
+                ctx.finding(
+                    PASS,
+                    "ungated-paged-only",
+                    func,
+                    node,
+                    f"{name} assumes fully-paged caches but "
+                    f"{func.qualname!r} never checks "
+                    f"{config.GATE_NAME} on its config path — a "
+                    "mixed-attention model would silently lose "
+                    "non-paged layer history",
+                )
+            )
+    return findings

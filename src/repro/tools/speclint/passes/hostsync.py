@@ -1,0 +1,237 @@
+"""host-sync: the double-buffered serve loop syncs host<->device at
+exactly its sanctioned, annotated points; jitted bodies never sync.
+
+Scope: the serve-loop roots (``_run_serial``/``_run_async``/
+``_process``/``serve``/``_service_wait``) plus every function they
+reach *in the same file*, and every jitted function.
+
+A sanctioned sync carries ``# speclint: sync-point(reason)`` on the
+statement (line above or trailing); the reason is mandatory — an
+empty one is its own finding, so every sync stays a reviewed,
+documented decision.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import config
+from ..context import LintContext, enclosing_stmt
+from ..index import FunctionInfo, dotted_name
+
+PASS = "host-sync"
+
+
+def _sync_call_kind(call: ast.Call, aliases) -> str | None:
+    d = dotted_name(call.func, aliases)
+    if d in config.SYNC_CALLS:
+        return d
+    if isinstance(call.func, ast.Attribute):
+        attr = call.func.attr
+        if attr in config.SYNC_ATTRS:
+            return f".{attr}()"
+    return None
+
+
+def _contains_sync_call(node: ast.AST, aliases) -> bool:
+    return any(
+        isinstance(n, ast.Call) and _sync_call_kind(n, aliases)
+        for n in ast.walk(node)
+    )
+
+
+def _device_evidence(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if (
+            isinstance(n, ast.Attribute)
+            and n.attr in config.DEVICE_STATE_ATTRS
+        ):
+            return True
+        if isinstance(n, ast.Name) and n.id in config.DEVICE_STATE_NAMES:
+            return True
+    return False
+
+
+def _scalar_cast_sync(call: ast.Call, aliases) -> bool:
+    """int()/float()/bool() over device state — but not over an explicit
+    sync call, which gets its own finding."""
+    if not (
+        isinstance(call.func, ast.Name)
+        and call.func.id in ("int", "float", "bool")
+        and call.args
+    ):
+        return False
+    arg = call.args[0]
+    return _device_evidence(arg) and not _contains_sync_call(arg, aliases)
+
+
+def _is_static_test(test: ast.expr) -> bool:
+    """Tests that never concretize an array: None checks, isinstance,
+    boolean combinations thereof."""
+    if isinstance(test, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+    if isinstance(test, ast.Call) and isinstance(test.func, ast.Name):
+        return test.func.id in ("isinstance", "hasattr", "callable", "len")
+    if isinstance(test, ast.BoolOp):
+        return all(_is_static_test(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp):
+        return _is_static_test(test.operand)
+    if isinstance(test, (ast.Constant, ast.Name)):
+        # a bare name if-test is a truthiness read; names are handled by
+        # the caller's referenced-params check, constants are static
+        return isinstance(test, ast.Constant)
+    return False
+
+
+def _nonstatic_params(func: FunctionInfo) -> set[str]:
+    node = func.node
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return set()
+    args = node.args
+    all_args = list(args.posonlyargs) + list(args.args)
+    static = set(config.STATIC_PARAM_NAMES)
+    # literal-defaulted params are trace-time static knobs
+    defaulted = all_args[len(all_args) - len(args.defaults):]
+    for a, d in zip(defaulted, args.defaults):
+        if isinstance(d, ast.Constant):
+            static.add(a.arg)
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None and isinstance(d, ast.Constant):
+            static.add(a.arg)
+    for a in all_args + list(args.kwonlyargs):
+        ann = a.annotation
+        if isinstance(ann, ast.Name) and ann.id in ("int", "bool", "str"):
+            static.add(a.arg)
+    names = {a.arg for a in all_args + list(args.kwonlyargs)}
+    return names - static
+
+
+def _serve_scope(ctx: LintContext) -> dict[int, FunctionInfo]:
+    roots = [f for f in ctx.index.funcs if f.name in config.SYNC_ROOTS]
+    scope: dict[int, FunctionInfo] = {}
+    by_file: dict = {}
+    for r in roots:
+        by_file.setdefault(id(r.file), []).append(r)
+    for group in by_file.values():
+        reach = ctx.graph.reachable_with_paths(group)
+        gfile = group[0].file
+        for fid in reach:
+            func = ctx.index.funcs[fid]
+            if func.file is gfile:
+                scope[fid] = func
+    return scope
+
+
+def run(ctx: LintContext):
+    findings = []
+    serve = _serve_scope(ctx)
+
+    for fid, func in sorted(serve.items()):
+        aliases = func.file.aliases
+        for call in func.calls:
+            kind = _sync_call_kind(call, aliases)
+            if kind is None and _scalar_cast_sync(call, aliases):
+                kind = f"{call.func.id}() on device state"
+            if kind is None:
+                continue
+            stmt = enclosing_stmt(func, call) or call
+            reason = func.file.sync_annotation(
+                stmt.lineno, getattr(stmt, "end_lineno", stmt.lineno)
+            )
+            if reason is None:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "unannotated-sync",
+                        func,
+                        call,
+                        f"host sync {kind} in the serve loop without a "
+                        "'# speclint: sync-point(reason)' annotation — "
+                        "every sync must be an explicit reviewed decision",
+                    )
+                )
+            elif not reason:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "empty-sync-reason",
+                        func,
+                        call,
+                        "sync-point annotation needs a reason: "
+                        "'# speclint: sync-point(why this must sync here)'",
+                    )
+                )
+
+        for if_node in func.ifs:
+            test = if_node.test
+            if _is_static_test(test):
+                continue
+            if _device_evidence(test) and not _contains_sync_call(
+                test, aliases
+            ):
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "array-if",
+                        func,
+                        test,
+                        "``if`` on device-resident state in the serve "
+                        "loop is an implicit blocking sync — materialize "
+                        "via the sanctioned sync point first",
+                    )
+                )
+
+    for fid in sorted(ctx.graph.jitted):
+        func = ctx.index.funcs[fid]
+        aliases = func.file.aliases
+        for call in func.calls:
+            kind = _sync_call_kind(call, aliases)
+            if kind is not None:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "sync-in-jit",
+                        func,
+                        call,
+                        f"{kind} inside jitted body {func.qualname!r}: "
+                        "host materialization cannot happen under trace "
+                        "and forces a device round-trip per call",
+                    )
+                )
+        nonstatic = _nonstatic_params(func)
+        if not nonstatic:
+            continue
+        for if_node in func.ifs:
+            test = if_node.test
+            if _is_static_test(test):
+                continue
+            # names read only through .shape/.dtype/... are static
+            meta_only = {
+                n.value.id
+                for n in ast.walk(test)
+                if isinstance(n, ast.Attribute)
+                and n.attr in ("shape", "dtype", "ndim", "size")
+                and isinstance(n.value, ast.Name)
+            }
+            used = (
+                {
+                    n.id
+                    for n in ast.walk(test)
+                    if isinstance(n, ast.Name)
+                }
+                - meta_only
+            ) & nonstatic
+            if used:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "array-if",
+                        func,
+                        test,
+                        "``if`` on traced value(s) "
+                        f"{sorted(used)} inside jitted body "
+                        f"{func.qualname!r}: concretizes under trace — "
+                        "use jnp.where / lax.cond",
+                    )
+                )
+    return findings

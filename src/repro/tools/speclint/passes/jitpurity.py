@@ -1,0 +1,63 @@
+"""jit-purity: jitted/scan/donated bodies must not call host APIs
+(``time.*``/``datetime.*``/host ``random``/``print`` — ``jax.debug.*``
+is the sanctioned escape hatch) nor mutate captured Python state.
+
+Host calls inside a traced body run once at trace time and never
+again — timing reads measure compilation, prints vanish, host RNG
+freezes into the compiled program. All are silent wrong-answer bugs.
+"""
+
+from __future__ import annotations
+
+from .. import config
+from ..context import LintContext
+from ..index import dotted_name
+
+PASS = "jit-purity"
+
+
+def _host_call(dotted: str | None) -> str | None:
+    if dotted is None:
+        return None
+    if dotted in config.ALLOWED_IN_JIT or dotted.startswith("jax.debug."):
+        return None
+    if dotted in config.HOST_CALL_NAMES:
+        return dotted
+    for prefix in config.HOST_CALL_PREFIXES:
+        if dotted.startswith(prefix):
+            return dotted
+    return None
+
+
+def run(ctx: LintContext):
+    findings = []
+    for fid in sorted(ctx.graph.jitted):
+        func = ctx.index.funcs[fid]
+        aliases = func.file.aliases
+        for call in func.calls:
+            bad = _host_call(dotted_name(call.func, aliases))
+            if bad is not None:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "host-call-in-jit",
+                        func,
+                        call,
+                        f"{bad}(...) inside jitted body "
+                        f"{func.qualname!r} executes once at trace time "
+                        "only (use jax.debug.print for tracing output)",
+                    )
+                )
+        for stmt in func.globals_nonlocals:
+            findings.append(
+                ctx.finding(
+                    PASS,
+                    "state-mutation-in-jit",
+                    func,
+                    stmt,
+                    f"{type(stmt).__name__.lower()} statement inside "
+                    f"jitted body {func.qualname!r}: mutating captured "
+                    "Python state under trace happens once, not per call",
+                )
+            )
+    return findings

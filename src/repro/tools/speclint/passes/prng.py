@@ -1,0 +1,48 @@
+"""prng-discipline: no ``jax.random.*`` reachable from prefill/staging
+roots.
+
+Losslessness of block verification (PAPER.md Eq. 4) and of the greedy
+multi-path rule requires the decode-side key schedule to be a pure
+function of the committed token stream. Prefill — serial, async-staged
+or disaggregated — must therefore consume ZERO randomness: a single
+``jax.random.split`` inside a staging body would make adopted slots
+sample from a different key stream than serially-prefilled ones, and
+no tier-1 test would catch it (the distributions only drift).
+"""
+
+from __future__ import annotations
+
+from .. import config
+from ..context import LintContext
+
+PASS = "prng-discipline"
+
+
+def run(ctx: LintContext):
+    findings = []
+    roots = [
+        f for f in ctx.index.funcs if f.name in config.PRNG_ROOTS
+    ]
+    if not roots:
+        return findings
+    paths = ctx.graph.reachable_with_paths(roots)
+    for fid, chain in sorted(paths.items()):
+        func = ctx.index.funcs[fid]
+        for dotted, _attr, call in ctx.graph.external_calls[fid]:
+            if dotted is None or not (
+                dotted.startswith("jax.random.") or dotted == "jax.random"
+            ):
+                continue
+            via = " -> ".join(chain)
+            findings.append(
+                ctx.finding(
+                    PASS,
+                    "prng-in-prefill-path",
+                    func,
+                    call,
+                    f"{dotted} is reachable from prefill/staging root "
+                    f"{chain[0]!r} (via {via}); prefill must consume no "
+                    "PRNG or losslessness breaks silently",
+                )
+            )
+    return findings

@@ -1,0 +1,625 @@
+"""speclint: golden fixture snippets per pass (violation + clean
+pairs), baseline round-trip, suppression handling, call-graph
+reachability through module/method indirection — plus the meta-test
+that the live tree stays clean modulo the committed baseline.
+
+Pure stdlib: speclint never imports jax, so these tests are cheap.
+"""
+
+import json
+import textwrap
+from pathlib import Path
+
+from repro.tools.speclint import run_speclint
+from repro.tools.speclint import baseline as baseline_mod
+from repro.tools.speclint.cli import main as speclint_main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(tmp_path, files, passes=None):
+    for name, text in files.items():
+        p = tmp_path / name
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return run_speclint([tmp_path], root=tmp_path, passes=passes)
+
+
+def rules(findings):
+    return {(f.pass_name, f.rule) for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# prng-discipline
+# ---------------------------------------------------------------------------
+
+
+class TestPrngDiscipline:
+    def test_fires_on_prng_in_stage_prefill_copy(self, tmp_path):
+        # a PRNG call reached from a stage_prefill_body copy through
+        # cross-MODULE indirection: body -> helpers.mix_key -> split
+        findings = lint(
+            tmp_path,
+            {
+                "body.py": """
+                from helpers import mix_key
+
+                def stage_prefill_body(target, drafter, cfg, spec,
+                                       t_params, d_params, t_cache,
+                                       d_cache, stage, pool):
+                    noise = mix_key(stage)
+                    return t_cache, d_cache, stage, pool
+                """,
+                "helpers.py": """
+                import jax
+
+                def mix_key(stage):
+                    key = jax.random.key(0)
+                    key, sub = jax.random.split(key)
+                    return sub
+                """,
+            },
+            passes=["prng-discipline"],
+        )
+        assert ("prng-discipline", "prng-in-prefill-path") in rules(findings)
+        hit = [f for f in findings if f.path == "helpers.py"]
+        assert hit and "stage_prefill_body" in hit[0].message
+
+    def test_fires_through_method_indirection(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+
+                class Mixer:
+                    def mix_noise(self, stage):
+                        return jax.random.fold_in(jax.random.key(0), 1)
+
+                def prefill_body(target, drafter, cfg, t_params,
+                                 d_params, t_cache, d_cache, batch):
+                    m = Mixer()
+                    return m.mix_noise(batch)
+                """,
+            },
+            passes=["prng-discipline"],
+        )
+        assert ("prng-discipline", "prng-in-prefill-path") in rules(findings)
+
+    def test_clean_twin(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "body.py": """
+                import jax.numpy as jnp
+
+                def stage_prefill_body(target, drafter, cfg, spec,
+                                       t_params, d_params, t_cache,
+                                       d_cache, stage, pool):
+                    return t_cache, d_cache, stage, pool
+
+                def decode_body(target, drafter, cfg, verify, key):
+                    # decode MAY sample; only prefill/staging may not
+                    import jax
+                    return jax.random.split(key)
+                """,
+            },
+            passes=["prng-discipline"],
+        )
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+
+class TestHostSync:
+    def test_fires_on_unannotated_sync_in_serve_loop(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "eng.py": """
+                import numpy as np
+
+                class Eng:
+                    def _run_serial(self):
+                        outs = self.step()
+                        toks = np.asarray(outs.tokens)
+                        return toks
+                """,
+            },
+            passes=["host-sync"],
+        )
+        assert ("host-sync", "unannotated-sync") in rules(findings)
+
+    def test_annotation_sanctions_the_sync(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "eng.py": """
+                import numpy as np
+
+                class Eng:
+                    def _run_serial(self):
+                        outs = self.step()
+                        # speclint: sync-point(materialize StepOutputs)
+                        toks = np.asarray(outs.tokens)
+                        return toks
+                """,
+            },
+            passes=["host-sync"],
+        )
+        assert findings == []
+
+    def test_empty_reason_is_its_own_finding(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "eng.py": """
+                import numpy as np
+
+                class Eng:
+                    def _run_serial(self):
+                        outs = self.step()
+                        # speclint: sync-point()
+                        toks = np.asarray(outs.tokens)
+                        return toks
+                """,
+            },
+            passes=["host-sync"],
+        )
+        assert rules(findings) == {("host-sync", "empty-sync-reason")}
+
+    def test_sync_reached_through_same_file_helper(self, tmp_path):
+        # reachability: root -> self._drain() (method indirection),
+        # helper defined in the same file joins the serve-loop scope
+        findings = lint(
+            tmp_path,
+            {
+                "eng.py": """
+                import numpy as np
+
+                class Eng:
+                    def _process(self, outs):
+                        return self._drain(outs)
+
+                    def _drain(self, outs):
+                        return int(np.asarray(outs.done).sum())
+                """,
+            },
+            passes=["host-sync"],
+        )
+        assert ("host-sync", "unannotated-sync") in rules(findings)
+        assert findings[0].func == "Eng._drain"
+
+    def test_out_of_scope_file_is_not_linted(self, tmp_path):
+        # np.asarray outside the serve loop (no sync root in file)
+        findings = lint(
+            tmp_path,
+            {
+                "util.py": """
+                import numpy as np
+
+                def summarize(outs):
+                    return np.asarray(outs.tokens)
+                """,
+            },
+            passes=["host-sync"],
+        )
+        assert findings == []
+
+    def test_sync_in_jit_body(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+                import numpy as np
+
+                @jax.jit
+                def body(x):
+                    return np.asarray(x)
+                """,
+            },
+            passes=["host-sync"],
+        )
+        assert ("host-sync", "sync-in-jit") in rules(findings)
+
+    def test_array_if_in_jit_body(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+                import jax.numpy as jnp
+
+                @jax.jit
+                def body(x):
+                    if x > 0:
+                        return x
+                    return -x
+
+                @jax.jit
+                def fine(x, n: int = 4):
+                    if n > 2:          # literal-default knob: static
+                        return x * n
+                    if x.shape[0] > 1:  # shape read: static
+                        return x
+                    return x
+                """,
+            },
+            passes=["host-sync"],
+        )
+        assert rules(findings) == {("host-sync", "array-if")}
+        assert all(f.func == "body" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+
+class TestJitPurity:
+    def test_fires_on_host_calls(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import time
+
+                import jax
+
+                @jax.jit
+                def body(x):
+                    t = time.perf_counter()
+                    print(x)
+                    return x
+                """,
+            },
+            passes=["jit-purity"],
+        )
+        got = rules(findings)
+        assert ("jit-purity", "host-call-in-jit") in got
+        msgs = " ".join(f.message for f in findings)
+        assert "time.perf_counter" in msgs and "print" in msgs
+
+    def test_scan_body_is_jitted_and_debug_print_allowed(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import time
+
+                import jax
+
+                def scan_step(carry, x):
+                    time.sleep(0)
+                    jax.debug.print("x {}", x)
+                    return carry, x
+
+                def outer(xs):
+                    return jax.lax.scan(scan_step, 0, xs)
+                """,
+            },
+            passes=["jit-purity"],
+        )
+        assert len(findings) == 1
+        assert "time.sleep" in findings[0].message
+
+    def test_captured_state_mutation(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+
+                COUNT = 0
+
+                @jax.jit
+                def body(x):
+                    global COUNT
+                    COUNT += 1
+                    return x
+                """,
+            },
+            passes=["jit-purity"],
+        )
+        assert ("jit-purity", "state-mutation-in-jit") in rules(findings)
+
+    def test_clean_twin(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import time
+
+                import jax
+
+                @jax.jit
+                def body(x):
+                    return x + 1
+
+                def host_loop(xs):
+                    t0 = time.perf_counter()   # host code: fine
+                    print(body(xs))
+                    return time.perf_counter() - t0
+                """,
+            },
+            passes=["jit-purity"],
+        )
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# allocator-discipline
+# ---------------------------------------------------------------------------
+
+
+class TestAllocatorDiscipline:
+    def test_device_op_outside_jit_and_pool_write(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                from repro.serving import paging
+
+                def admit_slot(spec, table, used, pool, need, mask):
+                    table, used, pool, ok = paging.ensure(
+                        spec, table, used, pool, need, mask
+                    )
+                    pool.free_count = 0
+                    return pool._replace(staged=None)
+                """,
+            },
+            passes=["allocator-discipline"],
+        )
+        got = rules(findings)
+        assert ("allocator-discipline", "device-op-outside-jit") in got
+        assert ("allocator-discipline", "pool-write-outside-paging") in got
+
+    def test_host_op_in_jit(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+
+                from repro.serving import paging
+
+                @jax.jit
+                def bad_adopt(pool, sid):
+                    return paging.host_adopt_stage(pool, sid)
+                """,
+            },
+            passes=["allocator-discipline"],
+        )
+        assert rules(findings) == {
+            ("allocator-discipline", "host-op-in-jit")
+        }
+
+    def test_unpaired_claim(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                from repro.serving import paging
+
+                def admit(pool, prompt):
+                    return paging.host_claim_live(pool, prompt)
+
+                def evict(pool, n):
+                    return paging.host_evict(pool, n)
+                """,
+            },
+            passes=["allocator-discipline"],
+        )
+        assert rules(findings) == {
+            ("allocator-discipline", "unpaired-claim"),
+            ("allocator-discipline", "unpaired-evict"),
+        }
+
+    def test_clean_twin(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+
+                from repro.serving import paging
+
+                @jax.jit
+                def grow(spec, table, used, pool, need, mask):
+                    return paging.ensure(spec, table, used, pool, need, mask)
+
+                def admit(sched, pool, prompt):
+                    claims = paging.host_claim_live(pool, prompt)
+                    sched.note_prefix_claim(claims)
+                    return claims
+
+                def shrink(sched, pool, n):
+                    freed = paging.host_evict(pool, n)
+                    sched.budget.evict_deficit(freed)
+                    return freed
+                """,
+            },
+            passes=["allocator-discipline"],
+        )
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# feature-gating
+# ---------------------------------------------------------------------------
+
+
+class TestFeatureGating:
+    def test_fires_on_ungated_reference(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                from repro.serving import runner as serving_runner
+
+                def wire(cfg):
+                    return serving_runner.stage_prefill_body
+                """,
+            },
+            passes=["feature-gating"],
+        )
+        assert rules(findings) == {
+            ("feature-gating", "ungated-paged-only")
+        }
+
+    def test_gate_in_enclosing_function_sanctions(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "mod.py": """
+                from repro.serving import runner as serving_runner
+                from repro.serving.runner import _assert_all_paged
+
+                def wire(model, cfg):
+                    _assert_all_paged(model, cfg, 4, "target")
+
+                    def stage_step(*args):
+                        return serving_runner.stage_prefill_body(*args)
+
+                    return stage_step
+                """,
+            },
+            passes=["feature-gating"],
+        )
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline + CLI
+# ---------------------------------------------------------------------------
+
+
+VIOLATION = """
+import numpy as np
+
+class Eng:
+    def _run_serial(self):
+        outs = self.step()
+        toks = np.asarray(outs.tokens){suffix}
+        return toks
+"""
+
+
+class TestSuppressionAndBaseline:
+    def test_disable_comment_suppresses_named_pass(self, tmp_path):
+        files = {
+            "eng.py": VIOLATION.format(
+                suffix="  # speclint: disable=host-sync"
+            )
+        }
+        assert lint(tmp_path, files, passes=["host-sync"]) == []
+
+    def test_disable_star_and_line_above(self, tmp_path):
+        src = VIOLATION.format(suffix="")
+        src = src.replace(
+            "        toks =",
+            "        # speclint: disable=*\n        toks =",
+        )
+        assert lint(tmp_path, {"eng.py": src}, passes=["host-sync"]) == []
+
+    def test_disable_of_other_pass_does_not_suppress(self, tmp_path):
+        files = {
+            "eng.py": VIOLATION.format(
+                suffix="  # speclint: disable=jit-purity"
+            )
+        }
+        findings = lint(tmp_path, files, passes=["host-sync"])
+        assert ("host-sync", "unannotated-sync") in rules(findings)
+
+    def test_baseline_round_trip(self, tmp_path):
+        files = {"eng.py": VIOLATION.format(suffix="")}
+        findings = lint(tmp_path, files, passes=["host-sync"])
+        assert findings
+        report = tmp_path / "LINT.json"
+        baseline_mod.write_report(findings, report)
+
+        # same tree: everything baselined, nothing new, nothing stale
+        again = lint(tmp_path, files, passes=["host-sync"])
+        new, old, stale = baseline_mod.split_by_baseline(
+            again, baseline_mod.load_fingerprints(report)
+        )
+        assert new == [] and len(old) == len(findings) and stale == set()
+
+        # fingerprints survive a line-number shift (comment above)
+        shifted = "# a new leading comment\n" + textwrap.dedent(
+            files["eng.py"]
+        )
+        (tmp_path / "eng.py").write_text(shifted)
+        moved = run_speclint(
+            [tmp_path / "eng.py"], root=tmp_path, passes=["host-sync"]
+        )
+        new, old, _ = baseline_mod.split_by_baseline(
+            moved, baseline_mod.load_fingerprints(report)
+        )
+        assert new == [] and len(old) == len(findings)
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        (tmp_path / "eng.py").write_text(
+            textwrap.dedent(VIOLATION.format(suffix=""))
+        )
+        report = tmp_path / "LINT.json"
+        rc = speclint_main(
+            [
+                str(tmp_path / "eng.py"),
+                "--root",
+                str(tmp_path),
+                "--json",
+                str(report),
+            ]
+        )
+        assert rc == 1
+        data = json.loads(report.read_text())
+        assert data["total"] >= 1 and data["by_pass"]["host-sync"] >= 1
+
+        rc = speclint_main(
+            [
+                str(tmp_path / "eng.py"),
+                "--root",
+                str(tmp_path),
+                "--baseline",
+                str(report),
+            ]
+        )
+        assert rc == 0
+        assert "0 new finding(s)" in capsys.readouterr().out
+
+    def test_unknown_pass_is_usage_error(self, tmp_path):
+        assert speclint_main([str(tmp_path), "--passes", "nope"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# meta: the live tree is clean modulo the committed baseline
+# ---------------------------------------------------------------------------
+
+
+class TestLiveTree:
+    def test_clean_modulo_committed_baseline(self):
+        findings = run_speclint(
+            [REPO / "src", REPO / "tests", REPO / "benchmarks"], root=REPO
+        )
+        known = baseline_mod.load_fingerprints(REPO / "results" / "LINT.json")
+        new = [f for f in findings if f.fingerprint not in known]
+        assert not new, "new speclint findings:\n" + "\n".join(
+            f.render() for f in new
+        )
+
+    def test_committed_baseline_is_fresh(self):
+        findings = run_speclint(
+            [REPO / "src", REPO / "tests", REPO / "benchmarks"], root=REPO
+        )
+        committed = json.loads(
+            (REPO / "results" / "LINT.json").read_text()
+        )
+        assert {f.fingerprint for f in findings} == {
+            f["fingerprint"] for f in committed["findings"]
+        }, "results/LINT.json is stale — regenerate with: "
+        "python -m repro.tools.speclint src tests benchmarks --json results/LINT.json"
