@@ -16,6 +16,7 @@ skip training.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import math
 import os
@@ -32,6 +33,14 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models import Model
 from repro.serving.baseline import autoregressive_decode
 from repro.serving.engine import EngineConfig, SpecEngine
+from repro.serving.faults import (
+    SITE_ALLOC_DENY,
+    SITE_NONFINITE_LOGITS,
+    SITE_POD_DISPATCH,
+    SITE_TRANSFER_DELAY,
+    SITE_TRANSFER_LOSS,
+    FaultPlan,
+)
 from repro.serving.frontend import (
     ServingFrontend,
     _poisson_arrivals,
@@ -1024,6 +1033,212 @@ def run_openloop_smoke(train_steps: int = 120):
         with open(path) as f:
             bench = json.load(f)
     bench["openloop"] = bench_ol
+    _write_bench(bench, path)
+    return row
+
+
+def _chaos_bench(
+    tgt, drf, tp, dp,
+    gamma: int = 4,
+    max_new: int = 24,
+    n_cold: int = 3, warm_per_cold: int = 3,
+    cold_tokens: int = 96, warm_tokens: int = 8,
+    max_slots: int = 4,
+):
+    """Chaos run: the mixed cold/warm workload through the
+    device-disaggregated engine under a deterministic fault plan firing
+    EVERY registered site (lost + delayed transfers, pod dispatch
+    failures past the downgrade limit, transient allocator denials,
+    non-finite drafter rows), plus one mid-flight cancellation and one
+    impossible-deadline request. Two phases:
+
+    1. **Fault-free reference** — same prompts, ``faults=None``:
+       committed tokens + TTFT tail to compare against.
+    2. **Chaos** — the full plan. The gates (applied by
+       :func:`run_chaos_smoke`): every non-cancelled request reaches a
+       terminal state, all survivors — including fault-AFFECTED ones,
+       at temperature 0 — commit bit-identical output, the pool audit
+       never repairs anything (zero leaks, checked after every unwind
+       and at quiesce), both pods drain to reset geometry, and p99 TTFT
+       inflates by at most a bounded factor (the ladder retries/fails
+       over instead of stalling).
+    """
+    import jax.numpy as jnp
+
+    tok = ByteTokenizer()
+    n_warm = n_cold * warm_per_cold
+    warm_txt = generate_prompts(5, n_warm)
+    cold_txt = generate_prompts(7, n_cold)
+    prompts = []
+    wi = 0
+    for i in range(n_cold):
+        base = tok.encode(cold_txt[i] + " ")
+        cold = (base * (cold_tokens // len(base) + 1))[:cold_tokens]
+        prompts.append(cold)
+        for _ in range(warm_per_cold):
+            prompts.append(tok.encode(warm_txt[wi])[:warm_tokens])
+            wi += 1
+    cfg = EngineConfig(
+        gamma=gamma, verifier="block", max_slots=max_slots,
+        max_len=256, temperature=0.0, max_new_tokens=max_new,
+        prefill_chunk=8, async_prefill=True, stage_slots=2,
+        disaggregated=True,
+    )
+    eng = SpecEngine(tgt, drf, tp, dp, cfg)
+    eng.submit(prompts[0], max_new_tokens=2)  # warm compile
+    eng.run()
+
+    # -- phase 1: fault-free reference ----------------------------------
+    eng.reset(seed=0)
+    rids = [eng.submit(list(p)) for p in prompts]
+    ref_res = eng.run()
+    ref_out = [ref_res[r].output for r in rids]
+    ref_ttfts = [m["ttft_s"] for m in eng.request_metrics()]
+    ref_p99 = _pctl(ref_ttfts, 0.99)
+
+    # -- phase 2: chaos -------------------------------------------------
+    plan = FaultPlan.make(
+        seed=0,
+        rates={
+            # Loss below 1.0: a lost transfer's lane fails over and the
+            # pod downgrade then stops staging entirely, so losing EVERY
+            # early transfer would starve the delay site of dispatches.
+            SITE_TRANSFER_LOSS: 0.4,
+            SITE_TRANSFER_DELAY: 1.0,
+            SITE_POD_DISPATCH: 1.0,
+            SITE_ALLOC_DENY: 0.5,
+            SITE_NONFINITE_LOGITS: 0.5,
+        },
+        max_per_site=2,
+        # retries=0: every lost transfer walks the WHOLE ladder
+        # (timeout -> failover -> decode-pod prefill) so the smoke
+        # exercises the floor, not just the retry rung.
+        transfer_timeout_iters=2, transfer_max_retries=0,
+        pod_failure_limit=2,
+    )
+    eng.cfg = dataclasses.replace(eng.cfg, faults=plan)
+    eng.reset(seed=0)
+    rids = [eng.submit(list(p)) for p in prompts]
+    doomed = eng.submit(prompts[-1][:4], deadline_s=1e-9)
+    cancel_rid = rids[0]  # first cold prompt: mid-staging at pump 2
+    calls = {"n": 0}
+
+    def pump():
+        calls["n"] += 1
+        if calls["n"] == 2:
+            eng.cancel(cancel_rid)
+        return False
+
+    res = eng.serve(pump=pump)
+    stats = eng.last_stats
+    eng.cfg = dataclasses.replace(eng.cfg, faults=None)
+
+    survivors_identical = all(
+        list(res[r].output) == ref_out[i]
+        for i, r in enumerate(rids)
+        if not (r == cancel_rid and res[r].finish_reason == "cancelled")
+    )
+    all_terminal = all(res[r].finished for r in rids) and (
+        res[doomed].finish_reason == "deadline"
+    )
+    chaos_ttfts = [m["ttft_s"] for m in eng.request_metrics()]
+    chaos_p99 = _pctl(chaos_ttfts, 0.99)
+    pool = eng.batch.pool
+    spool = eng.stage_pool
+    drained = (
+        int(pool.free_count) + int(jnp.sum(pool.cached))
+        == pool.free_stack.shape[0]
+        and not bool(jnp.any(pool.staged))
+        and int(spool.free_count) == spool.free_stack.shape[0]
+        and int(jnp.max(spool.ref)) == 0
+    )
+    bench = {
+        "workload": {
+            "n_requests": len(prompts) + 1,
+            "n_cold": n_cold, "n_warm": n_warm,
+            "cold_prompt_tokens": cold_tokens,
+            "warm_prompt_tokens": warm_tokens,
+            "max_new_tokens": max_new,
+            "max_slots": max_slots, "stage_slots": 2,
+            "cancelled_requests": 1, "deadline_requests": 1,
+        },
+        "plan": {
+            "seed": plan.seed,
+            "rates": dict(plan.rates),
+            "max_per_site": plan.max_per_site,
+            "transfer_timeout_iters": plan.transfer_timeout_iters,
+            "transfer_max_retries": plan.transfer_max_retries,
+            "pod_failure_limit": plan.pod_failure_limit,
+        },
+        "fault_injections": stats["fault_injections"],
+        "transfer_retries": stats["transfer_retries"],
+        "failovers": stats["failovers"],
+        "pod_failures": stats["pod_failures"],
+        "downgraded": stats["downgraded"],
+        "cancelled": stats["cancelled"],
+        "deadline_shed": stats["deadline_shed"],
+        "audit_repairs": stats["audit_repairs"],
+        "all_terminal": all_terminal,
+        "survivors_bit_identical": survivors_identical,
+        "pools_drained": drained,
+        "ref_ttft_p99_s": ref_p99,
+        "chaos_ttft_p99_s": chaos_p99,
+        "ttft_p99_inflation": (
+            chaos_p99 / ref_p99 if ref_p99 else None
+        ),
+    }
+    row = {
+        "name": "wallclock/chaos",
+        "sites_fired": len(stats["fault_injections"]),
+        "failovers": stats["failovers"],
+        "downgraded": stats["downgraded"],
+        "audit_repairs": stats["audit_repairs"],
+        "survivors_bit_identical": survivors_identical,
+        "ttft_p99_inflation": (
+            round(chaos_p99 / ref_p99, 2) if ref_p99 else None
+        ),
+    }
+    return bench, row
+
+
+def run_chaos_smoke(train_steps: int = 120):
+    """CI smoke (blocking): train (or load) the char-LM pair, run the
+    chaos workload (:func:`_chaos_bench`), and refresh the ``chaos``
+    section of ``results/BENCH_serving.json`` in place. Fails if any
+    request fails to reach a terminal state, if a surviving request's
+    committed tokens diverge from the fault-free run, if the pool audit
+    ever had to repair anything (a leak — the unwind paths must be
+    exact, the audit is a net not a mop), if either pod's pool fails to
+    drain, if the plan stops actually exercising every registered fault
+    site, or if p99 TTFT inflates beyond the bounded-degradation
+    envelope (the ladder must retry/fail over, never stall)."""
+    tgt, drf, tp, dp = _get_models(train_steps)
+    bench_ch, row = _chaos_bench(tgt, drf, tp, dp)
+    # Regression-gate BEFORE touching the tracked artifact.
+    assert bench_ch["all_terminal"] is True, bench_ch
+    assert bench_ch["survivors_bit_identical"] is True, bench_ch
+    assert bench_ch["audit_repairs"] == 0, bench_ch
+    assert bench_ch["pools_drained"] is True, bench_ch
+    assert len(bench_ch["fault_injections"]) == 5, bench_ch
+    assert bench_ch["failovers"] >= 1, bench_ch
+    assert bench_ch["downgraded"] is True, bench_ch
+    assert bench_ch["cancelled"] == 1, bench_ch
+    assert bench_ch["deadline_shed"] >= 1, bench_ch
+    # Bounded degradation: chaos adds retries/failovers, not stalls.
+    # The factor is generous (CI wall clock is noisy and the reference
+    # p99 is small); the absolute floor keeps tiny references from
+    # making the ratio meaningless.
+    assert bench_ch["chaos_ttft_p99_s"] is not None, bench_ch
+    assert (
+        bench_ch["chaos_ttft_p99_s"]
+        <= 8.0 * bench_ch["ref_ttft_p99_s"] + 1.0
+    ), bench_ch
+    path = "results/BENCH_serving.json"
+    bench = {"bench": "serving"}
+    if os.path.exists(path):
+        with open(path) as f:
+            bench = json.load(f)
+    bench["chaos"] = bench_ch
     _write_bench(bench, path)
     return row
 

@@ -134,6 +134,25 @@ def _ratios(p_tok: jax.Array, q_tok: jax.Array) -> jax.Array:
     return jnp.where(q_tok > 0, p_tok / jnp.maximum(q_tok, _EPS), 0.0)
 
 
+def _guard_nonfinite(q_probs: jax.Array) -> jax.Array:
+    """Zero out drafter rows containing non-finite mass.
+
+    A corrupted drafter row (NaN/inf logits upstream) would poison the
+    accept/reject arithmetic for its whole block.  Zeroing the row keeps
+    every fallback inside the verification rule itself: ``_ratios`` maps
+    q == 0 to ratio 0, so token verification rejects at that position
+    (tau stops there) and block verification's Eq.-8 products are 0 from
+    it onward; the bonus/correction token then samples from
+    ``normalize(max(scale·p − 0, 0)) = p`` — a pure target-distribution
+    resample.  The affected step stays exactly lossless (the committed
+    token is target-distributed conditioned on the prefix), which is why
+    ``tests/test_lossless.py`` passes with this guard installed.  Finite
+    inputs are untouched bitwise.
+    """
+    row_ok = jnp.all(jnp.isfinite(q_probs), axis=-1, keepdims=True)
+    return jnp.where(row_ok, q_probs, jnp.zeros_like(q_probs))
+
+
 def make_context(
     draft_tokens: jax.Array, q_probs: jax.Array, p_probs: jax.Array
 ) -> VerifyContext:
@@ -145,7 +164,7 @@ def make_context(
     """
     g = draft_tokens.shape[1]
     dt = jnp.promote_types(jnp.result_type(q_probs, p_probs), jnp.float32)
-    q_probs = q_probs.astype(dt)
+    q_probs = _guard_nonfinite(q_probs.astype(dt))
     p_probs = p_probs.astype(dt)
     p_tok = _gather(p_probs[:, :g], draft_tokens)
     q_tok = _gather(q_probs, draft_tokens)
@@ -524,7 +543,7 @@ def make_multi_context(
     dt = jnp.promote_types(jnp.result_type(q_probs, p_probs), jnp.float32)
     return MultiVerifyContext(
         draft_tokens=draft_tokens,
-        q_probs=q_probs.astype(dt),
+        q_probs=_guard_nonfinite(q_probs.astype(dt)),
         p_probs=p_probs.astype(dt),
     )
 

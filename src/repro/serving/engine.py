@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.serving import batch as batch_mod
+from repro.serving import faults as faults_mod
 from repro.serving import paging
 from repro.serving.runner import Runner, StepOutputs
 from repro.serving.scheduler import RequestState, Scheduler  # noqa: F401
@@ -184,6 +185,21 @@ class EngineConfig:
     # anchors the single-process engine's placement.
     prefill_mesh: object | None = None
     decode_mesh: object | None = None
+    # Deterministic fault injection + degradation ladder
+    # (repro.serving.faults.FaultPlan). None — the default — is the
+    # *structural* no-op: no FaultInjector is constructed, no injection
+    # branch is reachable, and the ladder state stays inert (speclint's
+    # fault-site pass checks every injection call site is gated on this
+    # field). With a plan installed, faults fire as a pure function of
+    # (seed, site, iteration, rid) and the engine degrades instead of
+    # failing: lost transfers time out and re-dispatch with backoff,
+    # lanes that exhaust their retries fail over to decode-pod prefill,
+    # repeated pod failure downgrades disagg → async for new
+    # admissions, and non-finite drafter rows fall back to a pure
+    # target-distribution resample (still lossless — and bit-identical
+    # at temp 0, because every fallback prefill is PRNG-free and the
+    # guard's bonus sample IS the greedy token).
+    faults: faults_mod.FaultPlan | None = None
 
 
 class SpecEngine:
@@ -267,6 +283,21 @@ class SpecEngine:
         self._transfers: dict[int, dict] = {}
         self._transfer_log: list[tuple] = []
         self._loop_iter = 0
+        # Fault plane (cfg.faults; None keeps every site unreachable)
+        # and the degradation-ladder state it drives: per-sid transfer
+        # retry counts and backoff horizons, plus the pod-failure tally
+        # behind the disagg → async downgrade for new admissions.
+        self._injector = (
+            faults_mod.FaultInjector(cfg.faults)
+            if cfg.faults is not None else None
+        )
+        self._transfer_retries: dict[int, int] = {}
+        self._transfer_backoff: dict[int, int] = {}
+        self._pod_failures = 0
+        self._pod_down = False
+        # Live stats dict while a serve loop runs (audit repairs and
+        # cancel/shed counters land here from outside the loop body).
+        self._stats: dict | None = None
         self.prefix_cache = (
             paging.PrefixCache(spec)
             if cfg.prefix_cache and spec is not None else None
@@ -330,6 +361,7 @@ class SpecEngine:
         max_new_tokens: int | None = None,
         priority: int = 0,
         tenant: str = "default",
+        deadline_s: float | None = None,
     ) -> int:
         if not 1 <= len(prompt_ids) < self.cfg.max_len:
             raise ValueError(
@@ -338,9 +370,151 @@ class SpecEngine:
             )
         if max_new_tokens is not None and max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
         return self.scheduler.submit(
-            prompt_ids, max_new_tokens, priority=priority, tenant=tenant
+            prompt_ids, max_new_tokens, priority=priority, tenant=tenant,
+            deadline_s=deadline_s,
         )
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it lives in the pipeline. Queued:
+        removed and finalized, nothing else to unwind. Staged: the
+        lane's device state (claims, staged pages, any in-flight
+        transfer) is released exactly like a pressure kill, but the
+        request finalizes instead of requeueing. Live decode slot
+        (riding, prefilling or decoding): retired with its pages
+        released/parked through the same path preemption uses —
+        claimants' pins are honored (cached conversion via ``insert``)
+        and a ride ends with the row. A slot cancelled while an
+        iteration is in flight wastes that lane for one step; its
+        outputs drop at the ``req.finished`` check in :meth:`_process`.
+        Returns True when the request was live (False: unknown rid or
+        already finished). The pool is audited after every device-side
+        unwind."""
+        sched = self.scheduler
+        loc = sched.find(rid)
+        if loc is None or loc[0] == "done":
+            return False
+        kind, where = loc
+        if kind == "queued":
+            req = sched.cancel_queued(where)
+        elif kind == "staged":
+            req = sched.stage_req[where]
+            left = sched.stage_prefill_left(where)
+            sched.drop_stage(where)
+            self._kill_stage_and_cache(where, req, left)
+            self._audit()
+        else:  # live decode slot
+            req = sched.slot_req[where]
+            left = sched.prefill_left(where)
+            sched.retire(where, "cancelled")
+            self.batch = self._release_and_cache(where, req, left)
+            self._audit()
+        if self._stats is not None:
+            self._stats["cancelled"] += 1
+        self._emit_terminal(req)
+        return True
+
+    def _emit_terminal(self, req: RequestState) -> None:
+        """Terminal delta for a request finished OUTSIDE
+        :meth:`_process` (cancelled, deadline-shed, quarantined): the
+        front end must always observe a ``finished=True`` delta or its
+        caller parks on the stream forever. Unstreamed committed tokens
+        are dropped by contract — the cursor jumps to the frontier."""
+        if self._emit_cb is not None:
+            req.emitted = len(req.output)
+            self._emit_cb(req, [], True)
+
+    def _audit(self) -> dict | None:
+        """Reconcile the page pool(s) against host ground truth
+        (:func:`repro.serving.paging.audit_pool`): refcounts, page
+        tables, the free stack, the cached radix mirror and the
+        ``PageBudget`` terms. Called at quiesce and after every
+        kill/cancel/quarantine unwind. A clean pool comes back bitwise
+        unchanged — the healthy path never perturbs allocation
+        determinism — and repairs (verified-orphaned pages reclaimed,
+        stale budget keys dropped) are counted into
+        ``stats["audit_repairs"]``."""
+        spec = self.runner.page_spec
+        if spec is None:
+            return None
+        sched = self.scheduler
+        live = [s for s, r in enumerate(sched.slot_req) if r is not None]
+        srows = [s for s, r in enumerate(sched.stage_req) if r is not None]
+        shared_stage = self.stage is not None and not self._disagg
+        pool, report = paging.audit_pool(
+            spec, self.batch.pool,
+            page_table=self.batch.page_table,
+            pages_used=self.batch.pages_used,
+            live_rows=live,
+            stage_table=self.stage.page_table if shared_stage else None,
+            stage_used=self.stage.pages_used if shared_stage else None,
+            stage_rows=srows if shared_stage else (),
+            prefix_cache=self.prefix_cache,
+            budget=sched.budget,
+        )
+        self.batch = self.batch._replace(pool=pool)
+        if self._disagg:
+            spool, srep = paging.audit_pool(
+                self.runner.stage_spec, self.stage_pool,
+                stage_table=self.stage.page_table,
+                stage_used=self.stage.pages_used,
+                stage_rows=srows,
+                budget=sched.stage_budget,
+            )
+            self.stage_pool = spool
+            for k, v in srep.items():
+                if k == "clean":
+                    report["clean"] = report["clean"] and v
+                else:
+                    report[k] += v
+        if self._stats is not None:
+            self._stats["audit_repairs"] += report["repairs"]
+        return report
+
+    def _quarantine_slot(
+        self, slot: int, req: RequestState, exc: Exception
+    ) -> None:
+        """Per-request error quarantine (decode slot): an exception
+        attributable to one request finishes IT with reason "error"
+        instead of tearing down the service thread. Release is
+        best-effort — whatever a half-mutated unwind leaves behind, the
+        audit reclaims as verified orphans."""
+        req.error = f"{type(exc).__name__}: {exc}"
+        sched = self.scheduler
+        if sched.slot_req[slot] is req:
+            sched.retire(slot, "error")
+            try:
+                self.batch = self._release_and_cache(slot, req, 0)
+            except Exception:
+                pass
+        elif not req.finished:
+            sched.finalize(req, "error")
+        else:
+            req.finish_reason = "error"
+        self._audit()
+        self._emit_terminal(req)
+
+    def _quarantine_stage(
+        self, sid: int, req: RequestState, exc: Exception
+    ) -> None:
+        """Staging-lane twin of :meth:`_quarantine_slot`."""
+        req.error = f"{type(exc).__name__}: {exc}"
+        sched = self.scheduler
+        if sched.stage_req[sid] is req:
+            left = sched.stage_prefill_left(sid)
+            sched.drop_stage(sid, "error")
+            try:
+                self._kill_stage_and_cache(sid, req, left)
+            except Exception:
+                pass
+        elif not req.finished:
+            sched.finalize(req, "error")
+        else:
+            req.finish_reason = "error"
+        self._audit()
+        self._emit_terminal(req)
 
     def _admit(self, slot: int, req: RequestState):
         """Stage an admitted request: zero the slot's cache rows (chunked
@@ -717,13 +891,63 @@ class SpecEngine:
         self.stage, self.stage_pool = self.runner.release_stage(
             self.stage, self.stage_pool, sid
         )
+        self._transfer_retries.pop(sid, None)
+        self._transfer_backoff.pop(sid, None)
         if self._live_on:
             # First index visibility AFTER the transfer: the row's live
             # spans now resolve to decode-pool ids via batch.page_table.
             self._live_prompt[("slot", slot)] = prompt
         self._transfer_log.append(("adopt", sid, self._loop_iter))
 
-    def _dispatch_transfers(self) -> None:
+    def _transfer_ready(self, sid: int) -> bool:
+        """Adoption gate under disagg: the lane's transfer must have
+        been dispatched, not be marked lost in flight, and (fault plane)
+        be past any injected delay. Without faults every dispatched
+        entry is immediately ready, so this is exactly the old ``sid in
+        self._transfers`` check."""
+        entry = self._transfers.get(sid)
+        if entry is None or entry.get("lost"):
+            return False
+        return self._loop_iter >= entry.get("ready_iter", 0)
+
+    def _fail_over_stage(self, sid: int, stats: dict | None) -> None:
+        """Transfer retries exhausted: fail the staged lane over to the
+        in-decode-pod prefill path. The request is marked ``no_stage``
+        (the staging lane never takes it again), its lane unwinds
+        exactly like a pressure kill (requeued at the front), and the
+        next decode-lane admission prefills it on the decode pod —
+        serial semantics, PRNG-free, so the failover is invisible at
+        temp 0."""
+        sched = self.scheduler
+        req = sched.stage_req[sid]
+        left = sched.stage_prefill_left(sid)
+        req.no_stage = True
+        sched.kill_stage(sid)
+        self._kill_stage_and_cache(sid, req, left)
+        self._transfer_log.append(("failover", sid, self._loop_iter))
+        if stats is not None:
+            stats["failovers"] += 1
+        self._audit()
+
+    def _note_pod_failure(self, stats: dict | None) -> None:
+        """Count a prefill-pod dispatch failure; at the plan's
+        ``pod_failure_limit`` the engine downgrades disagg → async for
+        NEW admissions: staging stops taking requests and the
+        decode-lane admit (decode-pod prefill, serial semantics) takes
+        over. In-flight staged lanes finish normally."""
+        self._pod_failures += 1
+        if stats is not None:
+            stats["pod_failures"] += 1
+        if (
+            not self._pod_down
+            and self._pod_failures >= self.cfg.faults.pod_failure_limit
+        ):
+            self._pod_down = True
+            if stats is not None:
+                stats["downgraded"] = True
+            self._transfer_log.append(("downgrade", -1, self._loop_iter))
+
+    def _dispatch_transfers(self, stats: dict | None = None) -> None:
         """Ship every ready-but-not-yet-dispatched staging lane's pages
         to the decode pod: a jitted pack gathers the lane's ``n`` staged
         pages into compact ``(G, n, page, n_kv, hd)`` buffers on the
@@ -731,15 +955,50 @@ class SpecEngine:
         in ``_transfers`` — the adoption gate. Everything here is an
         async dispatch (the page-id slice is a lazy device view, ``n``
         is host-deterministic), so the transfer overlaps the decode
-        iterations that run until a decode slot frees up."""
+        iterations that run until a decode slot frees up.
+
+        Fault plane: a dispatch may be injected as *lost* (the entry
+        never turns ready; once inflight past
+        ``transfer_timeout_iters`` it is reaped here and re-dispatched
+        after a linear backoff, up to ``transfer_max_retries`` before
+        the lane fails over) or *delayed* (ready only after
+        ``transfer_delay_iters``). Without a plan neither branch is
+        reachable and a dispatched transfer always lands."""
         sched = self.scheduler
         spec = self.runner.stage_spec
-        for sid in sched.ready_q:
-            if sid in self._transfers:
+        plan = self.cfg.faults
+        for sid in list(sched.ready_q):
+            entry = self._transfers.get(sid)
+            if entry is not None:
+                # Ladder: reap a lost transfer once it times out —
+                # re-dispatch with backoff or fail the lane over.
+                if plan is not None and entry.get("lost") and (
+                    self._loop_iter - entry["iter"]
+                    >= plan.transfer_timeout_iters
+                ):
+                    self._transfers.pop(sid)
+                    self._transfer_log.append(
+                        ("timeout", sid, self._loop_iter)
+                    )
+                    retries = self._transfer_retries.get(sid, 0) + 1
+                    self._transfer_retries[sid] = retries
+                    if stats is not None:
+                        stats["transfer_retries"] += 1
+                    if retries > plan.transfer_max_retries:
+                        self._fail_over_stage(sid, stats)
+                    else:
+                        # k-th retry waits k iterations before the
+                        # re-dispatch (linear backoff).
+                        self._transfer_backoff[sid] = (
+                            self._loop_iter + retries
+                        )
                 continue
-            plen = len(sched.stage_req[sid].serve_prompt())
+            if self._loop_iter < self._transfer_backoff.get(sid, 0):
+                continue
+            req = sched.stage_req[sid]
+            plen = len(req.serve_prompt())
             n = spec.pages_for(plen - 1) if plen > 1 else 0
-            entry: dict = {"n": n}
+            entry = {"n": n, "iter": self._loop_iter}
             if n:
                 page_ids = self.stage.page_table[sid, :n]
                 t_packed = self.runner.pack_stage(
@@ -762,8 +1021,41 @@ class SpecEngine:
                     for pk in (t_packed, d_packed)
                     for leaf in jax.tree.leaves(pk)
                 ))
+            if self._injector is not None:
+                if self._injector.fires(
+                    faults_mod.SITE_TRANSFER_LOSS,
+                    iteration=self._loop_iter, rid=req.rid,
+                ):
+                    entry["lost"] = True
+                elif self._injector.fires(
+                    faults_mod.SITE_TRANSFER_DELAY,
+                    iteration=self._loop_iter, rid=req.rid,
+                ):
+                    entry["ready_iter"] = (
+                        self._loop_iter + plan.transfer_delay_iters
+                    )
             self._transfers[sid] = entry
             self._transfer_log.append(("dispatch", sid, self._loop_iter))
+
+    def _nonfinite_mask(self, snapshot) -> np.ndarray | None:
+        """Per-slot drafter-corruption mask for one decode dispatch.
+        None when ``cfg.faults`` is off — the jitted decode program (and
+        its signature) stays byte-identical to the fault-free build. A
+        flagged slot's drafted rows are overwritten with NaN inside the
+        decode body; verification's non-finite guard then zeroes the row
+        — every draft rejects and the bonus falls back to a pure
+        target-distribution sample. Still lossless, and at temp 0
+        bit-identical: the bonus argmax IS the greedy token."""
+        if self._injector is None:
+            return None
+        flags = np.zeros((self.cfg.max_slots,), dtype=bool)
+        for slot, req in snapshot.items():
+            if self._injector.fires(
+                faults_mod.SITE_NONFINITE_LOGITS,
+                iteration=self._loop_iter, rid=req.rid,
+            ):
+                flags[slot] = True
+        return flags
 
     def _cacheable_cols(
         self, req, prefill_left: int, claims, table_row, owner=None,
@@ -816,6 +1108,8 @@ class SpecEngine:
         shipped but will simply never be unpacked)."""
         if self._disagg:
             self._transfers.pop(sid, None)
+            self._transfer_retries.pop(sid, None)
+            self._transfer_backoff.pop(sid, None)
             self.stage, self.stage_pool = self.runner.release_stage(
                 self.stage, self.stage_pool, sid
             )
@@ -903,6 +1197,14 @@ class SpecEngine:
             # the bytes they moved (0 in every other mode).
             "prefill_stall_steps": 0, "overlap_steps": 0, "adoptions": 0,
             "transfers": 0, "transfer_bytes": 0,
+            # Fault plane / degradation ladder / lifecycle counters —
+            # all zero on a fault-free run with no cancels or deadlines.
+            # ``audit_repairs`` counts pool-audit reclamations (quiesce
+            # + every kill/cancel/quarantine unwind); ``downgraded``
+            # records the disagg → async downgrade tripping.
+            "audit_repairs": 0, "cancelled": 0, "deadline_shed": 0,
+            "transfer_retries": 0, "failovers": 0, "pod_failures": 0,
+            "downgraded": False,
             # Per-step allocation telemetry (paged engines): host-mirror
             # pool occupancy and cumulative preemptions at each decode
             # dispatch, consumed by benchmarks/wallclock.py into
@@ -916,10 +1218,15 @@ class SpecEngine:
             self.prefix_cache.stats()
             if self.prefix_cache is not None else None
         )
+        self._stats = stats
         return stats, pc0, time.perf_counter()
 
     def _stats_finish(self, stats, pc0, t0) -> None:
         stats["wall_s"] = time.perf_counter() - t0
+        if self._injector is not None:
+            stats["fault_injections"] = self._injector.stats()
+            stats["fault_log"] = list(self._injector.log)
+        self._stats = None
         if pc0 is not None:
             pc = self.prefix_cache.stats()
             # Counters are per-run deltas (the index persists across
@@ -982,6 +1289,13 @@ class SpecEngine:
             # iteration's programs ran are eligible this iteration.
             if self._pump_cb is not None:
                 self._pump_cb()
+            # Deadline shedding at the admission boundary (clock reads
+            # only happen when some queued request carries a deadline,
+            # so deadline-free runs keep their exact clock sequence).
+            if any(r.deadline_s is not None for r in sched.queue):
+                for req in sched.shed_expired():
+                    stats["deadline_shed"] += 1
+                    self._emit_terminal(req)
             # Page pressure (over-subscribed pools only): when the live
             # slots' conservative worst case outgrows the pool, sync the
             # in-flight step so lengths are exact, then preempt newest
@@ -1003,8 +1317,23 @@ class SpecEngine:
                     # usually re-claims them instead of re-prefilling.
                     self.batch = self._release_and_cache(victim, req, left)
                     stats["preemptions"] += 1
-            for slot, req in sched.admit():
-                self._admit(slot, req)
+            # Transient allocator denial (fault plane): veto this
+            # iteration's admissions; the queue retries next loop —
+            # behaviorally a one-iteration budget stall.
+            denied = (
+                self._injector is not None
+                and bool(sched.queue)
+                and self._injector.fires(
+                    faults_mod.SITE_ALLOC_DENY,
+                    iteration=self._loop_iter, rid=sched.queue[0].rid,
+                )
+            )
+            if not denied:
+                for slot, req in sched.admit():
+                    try:
+                        self._admit(slot, req)
+                    except Exception as exc:  # per-request quarantine
+                        self._quarantine_slot(slot, req, exc)
             if self._live_on:
                 self._update_live_index()
                 self._advance_rides()
@@ -1030,6 +1359,7 @@ class SpecEngine:
                     self.runner.decode_step(
                         self.t_params, self.d_params,
                         self.t_cache, self.d_cache, self.batch, sub,
+                        corrupt=self._nonfinite_mask(snapshot),
                     )
                 )
                 stats["iterations"] += 1
@@ -1044,6 +1374,7 @@ class SpecEngine:
             if pending is not None:
                 self._process(*pending, stats)
             pending = (snapshot, outs) if outs is not None else None
+            self._loop_iter += 1
             if (
                 pending is None
                 and not sched.prefill_pending()
@@ -1051,6 +1382,7 @@ class SpecEngine:
                 and not self._service_wait()
             ):
                 break
+        self._audit()
         self._stats_finish(stats, pc0, t0)
         return dict(sched.done)
 
@@ -1079,6 +1411,10 @@ class SpecEngine:
         while True:
             if self._pump_cb is not None:
                 self._pump_cb()
+            if any(r.deadline_s is not None for r in sched.queue):
+                for req in sched.shed_expired():
+                    stats["deadline_shed"] += 1
+                    self._emit_terminal(req)
             # Page pressure: sync the in-flight step so lengths are
             # exact, then shed load — background prefills first (least
             # progress; their fully-written pages park as cacheable),
@@ -1113,12 +1449,46 @@ class SpecEngine:
                     self.batch = self._release_and_cache(victim, req, 0)
                     stats["preemptions"] += 1
             for sid, slot, req in sched.adopt(
-                gate=self._transfers.__contains__ if self._disagg else None
+                gate=self._transfer_ready if self._disagg else None
             ):
-                self._adopt(sid, slot, req, stats)
+                try:
+                    self._adopt(sid, slot, req, stats)
+                except Exception as exc:  # per-request quarantine
+                    self._quarantine_slot(slot, req, exc)
+                    continue
                 stats["adoptions"] += 1
-            for sid, req in sched.stage_admit():
-                self._stage(sid, req)
+            denied = (
+                self._injector is not None
+                and bool(sched.queue)
+                and self._injector.fires(
+                    faults_mod.SITE_ALLOC_DENY,
+                    iteration=self._loop_iter, rid=sched.queue[0].rid,
+                )
+            )
+            if not denied:
+                if not self._pod_down:
+                    for sid, req in sched.stage_admit():
+                        try:
+                            self._stage(sid, req)
+                        except Exception as exc:
+                            self._quarantine_stage(sid, req, exc)
+                # Ladder floor: failed-over (``no_stage``) requests —
+                # and, once the pod is down, every new admission — take
+                # decode slots directly and prefill on the decode pod.
+                # Structurally inert without the fault plane (no_stage
+                # is only ever set by the ladder), so the fault-free
+                # clock/PRNG sequence is untouched.
+                if self._pod_down or any(r.no_stage for r in sched.queue):
+                    for slot, req in sched.admit(
+                        pred=(
+                            None if self._pod_down
+                            else (lambda r: r.no_stage)
+                        )
+                    ):
+                        try:
+                            self._admit(slot, req)
+                        except Exception as exc:
+                            self._quarantine_slot(slot, req, exc)
             if self._live_on:
                 self._update_live_index()
                 self._advance_rides()
@@ -1131,12 +1501,37 @@ class SpecEngine:
                     self.runner.decode_step(
                         self.t_params, self.d_params,
                         self.t_cache, self.d_cache, self.batch, sub,
+                        corrupt=self._nonfinite_mask(snapshot),
                     )
                 )
                 stats["iterations"] += 1
                 self._trace_alloc(stats, len(snapshot))
             if sched.stage_pending():
-                if self._disagg:
+                # Prefill-pod dispatch failure (fault plane, disagg
+                # only): the pod drops this iteration's stage dispatch —
+                # the mirror does not advance, the lanes retry next
+                # iteration, and repeated failures downgrade the engine.
+                pod_fail = False
+                if self._injector is not None and self._disagg:
+                    rid = next(
+                        (
+                            r.rid
+                            for s, r in enumerate(sched.stage_req)
+                            if r is not None
+                            and not sched.stage_riding(s)
+                            and sched.stage_prefill_left(s) > 0
+                        ),
+                        None,
+                    )
+                    pod_fail = rid is not None and self._injector.fires(
+                        faults_mod.SITE_POD_DISPATCH,
+                        iteration=self._loop_iter, rid=rid,
+                    )
+                    if pod_fail:
+                        self._note_pod_failure(stats)
+                if pod_fail:
+                    pass
+                elif self._disagg:
                     # The prefill pod's OWN params/caches/pool: the
                     # staging executable runs device-disjoint from the
                     # decode dispatch above — true overlap, not two
@@ -1158,29 +1553,49 @@ class SpecEngine:
                         )
                     )
                     self.batch = self.batch._replace(pool=pool)
-                stats["prefill_tokens"] += sched.note_stage_prefill_dispatch()
+                if not pod_fail:
+                    stats["prefill_tokens"] += (
+                        sched.note_stage_prefill_dispatch()
+                    )
+                    stats["prefill_steps"] += 1
+                    if outs is not None:
+                        stats["overlap_steps"] += 1
+                    if self._live_on:
+                        self._update_live_index()
+            if sched.prefill_pending():
+                # Ladder floor: failed-over / post-downgrade admissions
+                # prefill in their DECODE slot on the decode pod (serial
+                # semantics; the slot turns ready once its chunks are
+                # consumed). Unreachable without the fault plane — the
+                # async loop never admits unprefillled work into decode
+                # slots otherwise.
+                self.t_cache, self.d_cache, self.batch = (
+                    self.runner.prefill_step(
+                        self.t_params, self.d_params,
+                        self.t_cache, self.d_cache, self.batch,
+                    )
+                )
+                stats["prefill_tokens"] += sched.note_prefill_dispatch()
                 stats["prefill_steps"] += 1
-                if outs is not None:
-                    stats["overlap_steps"] += 1
-                if self._live_on:
-                    self._update_live_index()
             if self._disagg:
                 # Ship newly-ready lanes' pages now (decode for this
                 # iteration is already in flight — transfers overlap
                 # it); the lanes adopt at the top of the next iteration,
                 # exactly when the mask-flip path would have adopted.
-                self._dispatch_transfers()
-                self._loop_iter += 1
+                self._dispatch_transfers(stats)
             if pending is not None:
                 self._process(*pending, stats)
             pending = (snapshot, outs) if outs is not None else None
+            self._loop_iter += 1
             if (
                 pending is None
                 and not sched.stage_pending()
+                and not sched.prefill_pending()
                 and not sched.has_work()
                 and not self._service_wait()
             ):
                 break
+        self._audit()
         self._stats_finish(stats, pc0, t0)
         return dict(sched.done)
 
@@ -1204,33 +1619,51 @@ class SpecEngine:
                 # Retired after this step was dispatched: the lane ran one
                 # wasted iteration whose outputs are dropped.
                 continue
-            req.iterations += 1
-            req.accepted_total += max(int(nt[slot]) - 1, 0)
-            if budget is not None:
-                budget.note_commit(slot, int(nt[slot]))
-            k = int(nk[slot])
-            if k > 0:
-                if not req.output:
-                    req.first_token_t = now
-                req.output.extend(int(t) for t in ot[slot, :k])
-            if bool(dn[slot]):
-                self.scheduler.retire(slot, self._finish_reason(req))
-                # Count EVERY retired request's output — including requests
-                # cut off by the max_len guard, which earlier versions
-                # silently dropped from throughput accounting.
-                stats["tokens"] += len(req.output)
-                self.batch = self._release_and_cache(slot, req, 0)
-            # Streaming: hand the front end everything newly committed
-            # since the last emit. ``output`` only ever extends (the
-            # committed frontier is monotone — preemption recomputes but
-            # never truncates), so the cursor slice is exactly the fresh
-            # committed tokens; emitting after retirement means a final
-            # delta observes finish_t/finish_reason already stamped.
-            if self._emit_cb is not None:
-                fresh = req.output[req.emitted:]
-                if fresh or req.finished:
-                    req.emitted = len(req.output)
-                    self._emit_cb(req, fresh, req.finished)
+            try:
+                req.iterations += 1
+                req.accepted_total += max(int(nt[slot]) - 1, 0)
+                if budget is not None:
+                    budget.note_commit(slot, int(nt[slot]))
+                k = int(nk[slot])
+                if k > 0:
+                    if not req.output:
+                        req.first_token_t = now
+                    req.output.extend(int(t) for t in ot[slot, :k])
+                done_now = bool(dn[slot])
+                reason = None
+                if (
+                    not done_now
+                    and req.deadline_s is not None
+                    and req.past_deadline(self.scheduler.clock())
+                ):
+                    # Deadline shedding at the retire check: the request
+                    # stops decoding the first time its blown SLO is
+                    # observed; tokens committed so far are kept.
+                    done_now = True
+                    reason = "deadline"
+                    stats["deadline_shed"] += 1
+                if done_now:
+                    self.scheduler.retire(
+                        slot, reason or self._finish_reason(req)
+                    )
+                    # Count EVERY retired request's output — including
+                    # requests cut off by the max_len guard, which earlier
+                    # versions silently dropped from throughput accounting.
+                    stats["tokens"] += len(req.output)
+                    self.batch = self._release_and_cache(slot, req, 0)
+                # Streaming: hand the front end everything newly committed
+                # since the last emit. ``output`` only ever extends (the
+                # committed frontier is monotone — preemption recomputes but
+                # never truncates), so the cursor slice is exactly the fresh
+                # committed tokens; emitting after retirement means a final
+                # delta observes finish_t/finish_reason already stamped.
+                if self._emit_cb is not None:
+                    fresh = req.output[req.emitted:]
+                    if fresh or req.finished:
+                        req.emitted = len(req.output)
+                        self._emit_cb(req, fresh, req.finished)
+            except Exception as exc:  # per-request quarantine
+                self._quarantine_slot(slot, req, exc)
 
     def _release_and_cache(
         self, slot: int, req: RequestState, prefill_left: int

@@ -1,0 +1,136 @@
+"""Deterministic fault-injection plane for the serving stack.
+
+The serving engine has three topologies (serial, async-prefill,
+device-disaggregated) and a handful of host/device boundaries where real
+deployments fail: a page transfer that never lands, a prefill pod that
+drops a dispatch, an allocator that transiently refuses, a drafter that
+emits non-finite logits.  ``FaultPlan``/``FaultInjector`` make those
+failures *schedulable*: every injection decision is a pure function of
+``(seed, site, iteration, rid)``, so a chaos run is exactly reproducible
+and the unaffected requests can be pinned bit-identical to a fault-free
+run.
+
+Structure matters more than mechanism here:
+
+* Sites are **registered** in ``SITES`` — speclint's ``fault-site`` pass
+  rejects a ``fires(...)`` call whose site literal is not in the
+  registry, and rejects call sites not gated on the ``faults`` config
+  field.
+* When ``EngineConfig.faults is None`` the injector is never
+  constructed and no fault branch is reachable — the fault plane is
+  structurally a no-op, not a dynamic one.
+* Rate-driven sites are **bounded** (``max_per_site``): chaos must
+  terminate, because the acceptance gate is "every non-cancelled
+  request completes", not "the ladder retries forever".
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# Registered injection sites.  speclint's fault-site pass cross-checks
+# call-site literals against this tuple (mirrored in
+# tools/speclint/config.py::FAULT_SITES).
+SITE_TRANSFER_LOSS = "transfer_loss"      # disagg page transfer dropped in flight
+SITE_TRANSFER_DELAY = "transfer_delay"    # disagg page transfer held N iterations
+SITE_POD_DISPATCH = "pod_dispatch"        # prefill-pod stage dispatch fails
+SITE_ALLOC_DENY = "alloc_deny"            # transient allocator admission denial
+SITE_NONFINITE_LOGITS = "nonfinite_logits"  # drafter emits a non-finite row
+
+SITES: Tuple[str, ...] = (
+    SITE_TRANSFER_LOSS,
+    SITE_TRANSFER_DELAY,
+    SITE_POD_DISPATCH,
+    SITE_ALLOC_DENY,
+    SITE_NONFINITE_LOGITS,
+)
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Immutable, hashable description of a chaos schedule.
+
+    ``rates`` drives probabilistic injection (per-site Bernoulli on a
+    counter-mode hash of ``seed × site × iteration × rid``);
+    ``schedule`` pins explicit ``(site, iteration, rid)`` triples that
+    fire unconditionally (use ``rid=-1`` to match any request at that
+    iteration).  Both coexist; rate-driven firings stop after
+    ``max_per_site`` so every chaos run quiesces.
+    """
+
+    seed: int = 0
+    rates: Tuple[Tuple[str, float], ...] = ()
+    schedule: Tuple[Tuple[str, int, int], ...] = ()
+    max_per_site: int = 4
+    # Degradation-ladder knobs (consumed by the engine, carried here so
+    # one object describes the whole failure model of a run).
+    transfer_delay_iters: int = 2      # how long a delayed transfer is held
+    transfer_timeout_iters: int = 4    # inflight iterations before a retry
+    transfer_max_retries: int = 2      # re-dispatches before lane failover
+    pod_failure_limit: int = 3         # pod-side failures before disagg→async
+
+    def __post_init__(self) -> None:
+        for site, _ in self.rates:
+            if site not in SITES:
+                raise ValueError(f"unknown fault site in rates: {site!r}")
+        for site, _, _ in self.schedule:
+            if site not in SITES:
+                raise ValueError(f"unknown fault site in schedule: {site!r}")
+
+    @staticmethod
+    def make(seed: int = 0, rates: Dict[str, float] | None = None,
+             schedule=(), **kw) -> "FaultPlan":
+        """Dict-friendly constructor (``FaultPlan`` itself stores tuples
+        so it stays hashable inside the frozen ``EngineConfig``)."""
+        r = tuple(sorted((rates or {}).items()))
+        s = tuple((site, int(it), int(rid)) for site, it, rid in schedule)
+        return FaultPlan(seed=seed, rates=r, schedule=s, **kw)
+
+
+def _unit_hash(seed: int, site: str, iteration: int, rid: int) -> float:
+    """Deterministic uniform in [0, 1) from the injection coordinates."""
+    key = f"{seed}:{site}:{iteration}:{rid}".encode()
+    digest = hashlib.blake2b(key, digest_size=8).digest()
+    return int.from_bytes(digest, "big") / float(1 << 64)
+
+
+class FaultInjector:
+    """Evaluates a ``FaultPlan`` at each (site, iteration, rid) coordinate.
+
+    The injector is pure host-side bookkeeping: it decides *whether* a
+    fault fires and logs it; the call site owns *what* the fault means
+    (dropping a transfer entry, vetoing an admission, building a device
+    corruption mask).  ``log`` is the ground truth a chaos test uses to
+    partition requests into affected vs unaffected.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._rates: Dict[str, float] = dict(plan.rates)
+        self._sched = set(plan.schedule)
+        self._fired: Dict[str, int] = {site: 0 for site in SITES}
+        self.log: List[Tuple[str, int, int]] = []
+
+    def fires(self, site: str, *, iteration: int, rid: int) -> bool:
+        if site not in SITES:
+            raise ValueError(f"unregistered fault site: {site!r}")
+        hit = (site, iteration, rid) in self._sched or \
+              (site, iteration, -1) in self._sched
+        if not hit:
+            rate = self._rates.get(site, 0.0)
+            if rate > 0.0 and self._fired[site] < self.plan.max_per_site:
+                hit = _unit_hash(self.plan.seed, site, iteration, rid) < rate
+        if hit:
+            self._fired[site] += 1
+            self.log.append((site, iteration, rid))
+        return hit
+
+    def affected_rids(self, site: str | None = None) -> set:
+        """rids that took at least one injection (optionally one site)."""
+        return {rid for s, _, rid in self.log
+                if rid >= 0 and (site is None or s == site)}
+
+    def stats(self) -> Dict[str, int]:
+        return {site: n for site, n in self._fired.items() if n}

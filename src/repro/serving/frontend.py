@@ -57,12 +57,22 @@ class StreamDelta:
     commits blocks, so deltas arrive in E[tau]-sized bursts), plus the
     incrementally detokenized text when the front end has a tokenizer
     (the longest newly decodable UTF-8 suffix; multi-byte glyphs split
-    across deltas surface once complete)."""
+    across deltas surface once complete).
+
+    ``error`` is set on the terminal delta when the request was
+    quarantined by the engine (per-request failure; the service keeps
+    running) or when the service loop itself died (every orphaned
+    handle gets one such delta before :meth:`ServingFrontend.drain`
+    re-raises). Error deltas always carry ``finished=True`` so
+    :meth:`ServingFrontend.stream` flushes its incremental detokenizer
+    — partial multi-byte glyphs never survive past a request's last
+    delta."""
 
     rid: int
     tokens: list[int]
     finished: bool
     text: str | None = None
+    error: str | None = None
 
 
 @dataclass
@@ -75,6 +85,7 @@ class RequestHandle:
     max_new_tokens: int | None
     priority: int
     tenant: str
+    deadline_s: float | None = None
     rid: int | None = None          # assigned by the service thread
     state: RequestState | None = None  # set when the request finishes
     events: queue.Queue = field(default_factory=queue.Queue)
@@ -114,6 +125,7 @@ class ServingFrontend:
         self.idle_wait_s = idle_wait_s
         self._lock = threading.Lock()
         self._ingress: deque[RequestHandle] = deque()
+        self._cancels: deque[RequestHandle] = deque()
         self._by_rid: dict[int, RequestHandle] = {}
         self._wake = threading.Event()
         self._closed = True  # not accepting until start()
@@ -181,12 +193,25 @@ class ServingFrontend:
             self._error = exc
             with self._lock:
                 self._closed = True
-                orphans = list(self._ingress) + list(self._by_rid.values())
+                orphans, seen = [], set()
+                for h in (
+                    list(self._ingress)
+                    + list(self._cancels)          # may alias _by_rid entries
+                    + list(self._by_rid.values())
+                ):
+                    if id(h) not in seen:
+                        seen.add(id(h))
+                        orphans.append(h)
                 self._ingress.clear()
+                self._cancels.clear()
                 self._by_rid.clear()
+            msg = f"service loop failed: {type(exc).__name__}: {exc}"
             for h in orphans:  # fail waiters instead of hanging them
                 h.done.set()
-                h.events.put(None)
+                h.events.put(StreamDelta(
+                    rid=-1 if h.rid is None else h.rid, tokens=[],
+                    finished=True, error=msg,
+                ))
 
     # -- ingress (caller threads) ------------------------------------------
 
@@ -196,10 +221,14 @@ class ServingFrontend:
         max_new_tokens: int | None = None,
         priority: int = 0,
         tenant: str = "default",
+        deadline_s: float | None = None,
     ) -> RequestHandle:
         """Enqueue a request while the loop runs. ``prompt`` may be text
         (tokenized here, in the caller's thread) or token ids. Returns
-        immediately with a :class:`RequestHandle`."""
+        immediately with a :class:`RequestHandle`. ``deadline_s`` is a
+        wall-clock budget from submission: the scheduler sheds the
+        request (terminal ``finish_reason="deadline"``) if it has not
+        finished within that many seconds."""
         if isinstance(prompt, str):
             if self.tokenizer is None:
                 raise ValueError("text prompt needs a tokenizer")
@@ -217,11 +246,14 @@ class ServingFrontend:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {max_new_tokens}"
             )
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
         handle = RequestHandle(
             prompt_ids=prompt_ids,
             max_new_tokens=max_new_tokens,
             priority=priority,
             tenant=tenant,
+            deadline_s=deadline_s,
         )
         with self._lock:
             if self._closed:
@@ -232,6 +264,40 @@ class ServingFrontend:
             self._ingress.append(handle)
         self._wake.set()
         return handle
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel a request from any caller thread, at any lifecycle
+        stage. A handle still parked in the ingress is retracted right
+        here (it never reached the scheduler); anything later — queued,
+        staged, riding, or mid-decode — is marshalled through the pump
+        so engine/scheduler/JAX state is only ever touched on the
+        service thread. Either way the handle receives a terminal
+        ``finished`` delta (``finish_reason="cancelled"``), so
+        :meth:`stream` terminates and flushes its detokenizer. Returns
+        False only when the request is already finished."""
+        with self._lock:
+            if handle.done.is_set():
+                return False
+            try:
+                self._ingress.remove(handle)
+                retracted = True
+            except ValueError:
+                retracted = False
+                self._cancels.append(handle)
+        if retracted:
+            handle.state = RequestState(
+                rid=-1, prompt=list(handle.prompt_ids),
+                max_new_tokens=handle.max_new_tokens or 0,
+                priority=handle.priority, tenant=handle.tenant,
+                finished=True, finish_reason="cancelled",
+            )
+            handle.events.put(
+                StreamDelta(rid=-1, tokens=[], finished=True)
+            )
+            handle.done.set()
+        else:
+            self._wake.set()
+        return True
 
     def set_tenant_weight(self, tenant: str, weight: float) -> None:
         """Adjust a tenant's fair-share weight; effective from the next
@@ -245,18 +311,32 @@ class ServingFrontend:
 
     def _pump(self) -> bool:
         """Engine hook (service thread): drain the ingress into the
-        scheduler. Returns whether the front end still accepts new
-        requests — False lets the engine quiesce once drained."""
+        scheduler, then apply marshalled cancellations. Returns whether
+        the front end still accepts new requests — False lets the
+        engine quiesce once drained."""
         with self._lock:
             batch = list(self._ingress)
             self._ingress.clear()
+            cancels = list(self._cancels)
+            self._cancels.clear()
             accepting = not self._closed
         for h in batch:
             h.rid = self.engine.submit(
                 h.prompt_ids, h.max_new_tokens,
                 priority=h.priority, tenant=h.tenant,
+                deadline_s=h.deadline_s,
             )
             self._by_rid[h.rid] = h
+        for h in cancels:
+            if h.rid is None:
+                # Defensive: a cancel filed while this handle sat
+                # between ingress snapshot and engine.submit is only
+                # snapshotted by the NEXT pump (after its rid lands),
+                # so this should be unreachable — requeue, don't drop.
+                with self._lock:
+                    self._cancels.append(h)
+            else:
+                self.engine.cancel(h.rid)  # no-op if already finished
         return accepting
 
     def _emit(self, req: RequestState, tokens: list[int], finished: bool) -> None:
@@ -268,7 +348,10 @@ class ServingFrontend:
         if finished:
             h.state = req
             del self._by_rid[req.rid]
-        h.events.put(StreamDelta(rid=req.rid, tokens=tokens, finished=finished))
+        h.events.put(StreamDelta(
+            rid=req.rid, tokens=tokens, finished=finished,
+            error=req.error if finished else None,
+        ))
         if finished:
             h.done.set()
 
@@ -297,12 +380,22 @@ class ServingFrontend:
                     f"no stream delta within {timeout_s}s "
                     f"(rid={handle.rid})"
                 ) from None
-            if delta is None:  # service loop died — surface its error
-                raise RuntimeError("service loop failed") from self._error
             if detok is not None:
+                # Feed-then-flush on EVERY terminal delta — cancelled
+                # and errored requests included — so partial multi-byte
+                # glyphs never outlive the stream.
                 delta.text = detok.feed(delta.tokens)
                 if delta.finished:
                     delta.text += detok.flush()
+            if (
+                delta.finished
+                and delta.error is not None
+                and handle.state is None
+            ):
+                # Service loop died: deliver the terminal delta, then
+                # surface the failure the same way drain() does.
+                yield delta
+                raise RuntimeError("service loop failed") from self._error
             yield delta
             if delta.finished:
                 return

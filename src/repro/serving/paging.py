@@ -112,6 +112,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class PagePool(NamedTuple):
@@ -133,6 +134,13 @@ class PagePool(NamedTuple):
     ref: jax.Array         # (num_pages,) int32
     cached: jax.Array      # (num_pages,) bool
     staged: jax.Array      # (num_pages,) bool
+
+    def audit(self, spec, **kw):
+        """Reconcile this pool against the host's ground truth — see
+        :func:`audit_pool` (the engine runs it at quiesce and after
+        every kill/cancel, counting repairs into
+        ``stats["audit_repairs"]``)."""
+        return audit_pool(spec, self, **kw)
 
 
 @dataclass(frozen=True)
@@ -596,6 +604,126 @@ def host_adopt_stage(
     pages_used = pages_used.at[slot].set(n)
     staged = pool.staged.at[ids].set(False)
     return page_table, pages_used, pool._replace(staged=staged)
+
+
+def audit_pool(
+    spec: PageSpec,
+    pool: PagePool,
+    page_table=None,      # (B, max_pages) decode tables mapping THIS pool
+    pages_used=None,      # (B,)
+    live_rows=(),         # decode rows that legitimately hold mappings
+    stage_table=None,     # (S, max_pages) staging tables on THIS pool
+    stage_used=None,      # (S,)
+    stage_rows=(),        # staging lanes that legitimately hold mappings
+    prefix_cache=None,    # PrefixCache mirroring THIS pool (or None)
+    budget=None,          # PageBudget whose terms charge THIS pool
+) -> tuple[PagePool, dict]:
+    """Self-healing reconciliation of a pool against host ground truth.
+
+    Ground truth is the set of live table mappings (decode rows +
+    staging lanes on this pool) plus the prefix index's cached mirror;
+    from it the audit recomputes what every pool field *must* be:
+    ``ref[p]`` = number of live table entries mapping ``p``, ``staged``
+    = mapped by a staging lane, ``cached`` = parked in ``by_page``, and
+    the free stack = exactly the pages none of those account for.  Any
+    divergence — a leaked refcount after a kill raced a cancel, an
+    orphaned page neither free nor mapped, a stale free-stack entry, a
+    budget term for a retired row — is **repaired in place**: the pool
+    is rebuilt from ground truth (reclaiming verified-orphaned pages to
+    the free stack) and stale budget keys are dropped.  A clean pool is
+    returned *unchanged* (bitwise — audits on the healthy path can
+    never perturb allocation order or determinism).
+
+    This is a host op (one materialization of the pool + tables); the
+    engine invokes it only at quiesce and after kill/cancel unwinding,
+    never on the per-iteration hot path.  Runs in O(num_pages +
+    mapped entries).
+    """
+    n_pages = spec.num_pages
+    ref = np.asarray(pool.ref)
+    cached = np.asarray(pool.cached)
+    staged = np.asarray(pool.staged)
+    stack = np.asarray(pool.free_stack)
+    fc = int(pool.free_count)
+
+    expected_ref = np.zeros(n_pages, np.int64)
+    expected_staged = np.zeros(n_pages, bool)
+    if page_table is not None and live_rows:
+        pt = np.asarray(page_table)
+        pu = np.asarray(pages_used)
+        for row in live_rows:
+            ids = pt[row, : int(pu[row])]
+            np.add.at(expected_ref, ids, 1)
+    if stage_table is not None and stage_rows:
+        st = np.asarray(stage_table)
+        su = np.asarray(stage_used)
+        for row in stage_rows:
+            ids = st[row, : int(su[row])]
+            np.add.at(expected_ref, ids, 1)
+            expected_staged[ids] = True
+    expected_cached = np.zeros(n_pages, bool)
+    if prefix_cache is not None:
+        for pid in prefix_cache.by_page:
+            expected_cached[pid] = True
+
+    report = {
+        "ghost_refs": int(np.count_nonzero(ref != expected_ref)),
+        "bad_staged": int(np.count_nonzero(staged != expected_staged)),
+        "mirror_mismatch": int(np.count_nonzero(cached != expected_cached)),
+        "leaked_pages": 0,
+        "bad_free": 0,
+        "stale_budget_keys": 0,
+    }
+
+    # The free set is everything ground truth does not account for.
+    free_ok = ~(expected_ref > 0) & ~expected_cached & ~expected_staged
+    cur = [int(p) for p in stack[:fc]]
+    seen: set[int] = set()
+    kept: list[int] = []
+    for p in cur:
+        if free_ok[p] and p not in seen:
+            kept.append(p)
+            seen.add(p)
+        else:
+            report["bad_free"] += 1
+    orphans = [int(p) for p in np.nonzero(free_ok)[0] if int(p) not in seen]
+    report["leaked_pages"] = len(orphans)
+
+    if budget is not None:
+        live_set, stage_set = set(live_rows), set(stage_rows)
+        for slot in [s for s in budget.slot_len if s not in live_set]:
+            budget.note_release(slot)
+            report["stale_budget_keys"] += 1
+        for sid in [s for s in budget.stage_len if s not in stage_set]:
+            budget.note_unstage(sid)
+            report["stale_budget_keys"] += 1
+
+    pool_dirty = (
+        report["ghost_refs"] or report["bad_staged"]
+        or report["mirror_mismatch"] or report["bad_free"]
+        or report["leaked_pages"]
+    )
+    report["repairs"] = (
+        report["ghost_refs"] + report["bad_staged"]
+        + report["mirror_mismatch"] + report["bad_free"]
+        + report["leaked_pages"] + report["stale_budget_keys"]
+    )
+    report["clean"] = report["repairs"] == 0
+    if pool_dirty:
+        # Rebuild from ground truth: surviving stack entries keep their
+        # order, reclaimed orphans append in page-id order — repairs are
+        # as deterministic as the faults that caused them.
+        new_stack = kept + sorted(orphans)
+        stack_arr = np.zeros(n_pages, np.int32)
+        stack_arr[: len(new_stack)] = new_stack
+        pool = PagePool(
+            free_stack=jnp.asarray(stack_arr),
+            free_count=jnp.asarray(len(new_stack), jnp.int32),
+            ref=jnp.asarray(expected_ref, jnp.int32),
+            cached=jnp.asarray(expected_cached),
+            staged=jnp.asarray(expected_staged),
+        )
+    return pool, report
 
 
 @dataclass

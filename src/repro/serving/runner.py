@@ -445,10 +445,20 @@ def _unpack_stage_pages(
 def decode_body(
     target: Model, drafter: Model, cfg, verify,
     t_params, d_params, t_cache, d_cache, batch: BatchState, key,
+    corrupt=None,
 ):
     """One speculative iteration over all ready slots. Returns the updated
     caches and batch plus :class:`StepOutputs`; ``num_tokens``/``n_keep``
-    are 0 and ``done`` False for slots that did not run."""
+    are 0 and ``done`` False for slots that did not run.
+
+    ``corrupt`` (fault plane, ``cfg.faults``): optional per-slot bool
+    mask — flagged slots' drafted probability rows are overwritten with
+    NaN before verification, modelling a drafter that emitted non-finite
+    logits. The non-finite guard in ``verification.make_context`` zeroes
+    those rows, so every draft token rejects and the bonus falls back to
+    a pure target-distribution sample — still lossless. ``None`` (the
+    only value ever passed without a fault plan) traces the exact
+    fault-free program."""
     seq_buf, lens, d_lens = batch.seq_buf, batch.lens, batch.d_lens
     g = cfg.gamma
     vocab = target.cfg.vocab
@@ -472,6 +482,12 @@ def decode_body(
         batch.page_table, run, key_d,
     )
     d_cache_next = _restore_ssm(d_cache_drafted, d_cache_committed)
+
+    if corrupt is not None:
+        # Fault plane: flagged slots' drafter rows become non-finite
+        # before verification (static Python branch — fault-free runs
+        # trace the identical program).
+        q_rows = jnp.where(corrupt[:, None, None], jnp.nan, q_rows)
 
     # ---- 3. target verify chunk [last_token, X_1..X_gamma]. ----
     last_tok = jnp.take_along_axis(seq_buf, (lens - 1)[:, None], axis=1)
@@ -538,6 +554,7 @@ def _tile_paths(x: jax.Array, num_paths: int) -> jax.Array:
 def decode_body_multipath(
     target: Model, drafter: Model, cfg, verify_mp,
     t_params, d_params, t_cache, d_cache, batch: BatchState, key,
+    corrupt=None,
 ):
     """One multi-path speculative iteration (``cfg.num_paths`` > 1).
 
@@ -594,6 +611,13 @@ def decode_body_multipath(
         pt, run_k, key_d,
     )                                                  # (BK, G), (BK, G, V)
     d_cache = _restore_ssm(d_cache_drafted, d_cache)
+
+    if corrupt is not None:
+        # Fault plane: a flagged slot corrupts every one of its K paths
+        # (static branch; see :func:`decode_body`).
+        q_rows = jnp.where(
+            _tile_paths(corrupt, k)[:, None, None], jnp.nan, q_rows
+        )
 
     # ---- 4. ONE fused target pass verifies all K paths: each lane
     # attends through its own aliased page table into the shared pools.
@@ -894,9 +918,20 @@ class Runner:
             stage, pool, jnp.asarray(sid, jnp.int32), cache_cols
         )
 
-    def decode_step(self, t_params, d_params, t_cache, d_cache, batch, key):
+    def decode_step(
+        self, t_params, d_params, t_cache, d_cache, batch, key, corrupt=None
+    ):
+        # ``corrupt is None`` (every call without an active fault plan)
+        # omits the trailing arg entirely, so the jitted fault-free
+        # program — and its compile cache key — are byte-identical to a
+        # build without the fault plane.
+        if corrupt is None:
+            return self._decode_fn(
+                t_params, d_params, t_cache, d_cache, batch, key
+            )
         return self._decode_fn(
-            t_params, d_params, t_cache, d_cache, batch, key
+            t_params, d_params, t_cache, d_cache, batch, key,
+            jnp.asarray(corrupt),
         )
 
     def release_slot(

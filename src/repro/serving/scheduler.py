@@ -142,7 +142,27 @@ class RequestState:
     # (batch.committed_frontier), so a streamed token is always a
     # committed token.
     emitted: int = 0
+    # Caller-facing SLO: once ``clock - submit_t`` exceeds this, the
+    # request is shed — at admission (it never takes a slot) or at the
+    # retire check (it stops decoding) — with finish_reason "deadline".
+    # None = no deadline.
+    deadline_s: float | None = None
+    # Per-request quarantine: a service-loop exception attributable to
+    # this request finishes it with reason "error" and the message here,
+    # instead of tearing down the service thread.
+    error: str | None = None
+    # Degradation-ladder failover: set when this request's staged lane
+    # exhausted its transfer retries (or the prefill pod is down) — the
+    # staging lane skips it and it admits straight into a decode slot,
+    # prefilling on the decode pod (serial semantics).
+    no_stage: bool = False
     _preempt_t: float | None = None
+
+    def past_deadline(self, now: float) -> bool:
+        return (
+            self.deadline_s is not None
+            and now - self.submit_t > self.deadline_s
+        )
 
     def serve_prompt(self) -> list[int]:
         """Tokens to prefill at (re)admission: the original prompt plus
@@ -319,6 +339,7 @@ class Scheduler:
         max_new_tokens: int | None = None,
         priority: int = 0,
         tenant: str = "default",
+        deadline_s: float | None = None,
     ) -> int:
         rid = self._next_rid
         self._next_rid += 1
@@ -333,9 +354,80 @@ class Scheduler:
                 submit_t=self.clock(),
                 priority=priority,
                 tenant=tenant,
+                deadline_s=deadline_s,
             )
         )
         return rid
+
+    # -- lifecycle hardening: finalize / cancel / deadline shed -------------
+
+    def finalize(self, req: RequestState, reason: str) -> RequestState:
+        """Finish a request OUTSIDE a decode slot (cancelled while
+        queued/staged, shed at a deadline, quarantined on error) — the
+        off-slot twin of :meth:`retire`. The caller has already detached
+        the request from whatever structure held it."""
+        req.finished = True
+        req.finish_t = self.clock()
+        req.finish_reason = reason
+        self.done[req.rid] = req
+        return req
+
+    def find(self, rid: int):
+        """Locate a live request: ``("queued", index)``, ``("staged",
+        sid)``, ``("slot", slot)``, ``("done", None)``, or ``None`` for
+        an unknown rid."""
+        if rid in self.done:
+            return ("done", None)
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                return ("queued", i)
+        for sid, req in enumerate(self.stage_req):
+            if req is not None and req.rid == rid:
+                return ("staged", sid)
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req.rid == rid:
+                return ("slot", slot)
+        return None
+
+    def cancel_queued(self, idx: int, reason: str = "cancelled"):
+        """Remove + finalize ``queue[idx]``. No aging side effects — a
+        cancellation is not an overtake."""
+        req = self.queue[idx]
+        del self.queue[idx]
+        return self.finalize(req, reason)
+
+    def drop_stage(self, sid: int, reason: str = "cancelled"):
+        """Clear a staging lane and FINALIZE its request (cancel /
+        deadline / failover-exhausted), unlike :meth:`kill_stage` which
+        requeues it. The engine has already released the lane's device
+        state."""
+        req = self.stage_req[sid]
+        assert req is not None, sid
+        self.stage_req[sid] = None
+        self._stage_left[sid] = 0
+        self._stage_riding[sid] = False
+        if sid in self.ready_q:
+            self.ready_q.remove(sid)
+        sb = self.stage_budget if self.stage_budget is not None else self.budget
+        if sb is not None:
+            sb.note_unstage(sid)
+        return self.finalize(req, reason)
+
+    def shed_expired(self) -> list[RequestState]:
+        """Deadline shedding at the admission boundary: finalize every
+        queued request already past its deadline, so an expired request
+        never takes a slot (or a budget reservation) it cannot use.
+        Returns the shed requests; the engine emits their terminal
+        deltas."""
+        now = self.clock()
+        shed = []
+        for i in [
+            i for i, r in enumerate(self.queue) if r.past_deadline(now)
+        ][::-1]:
+            req = self.queue[i]
+            del self.queue[i]
+            shed.append(self.finalize(req, "deadline"))
+        return shed[::-1]
 
     def _pop_at(self, idx: int, now: float) -> RequestState:
         """Pop ``queue[idx]`` and stamp the admission bookkeeping BOTH
@@ -376,7 +468,7 @@ class Scheduler:
             req.adopt_t = None
         return req
 
-    def _select_index(self) -> int:
+    def _select_index(self, pred=None) -> int | None:
         """Queue index the next admission should take. Deterministic
         hierarchy, each level only reordering within the one above:
 
@@ -398,11 +490,20 @@ class Scheduler:
            otherwise.
 
         With defaults (one class, one tenant, no ``match_fn``) this
-        collapses to the head of the queue — exact FIFO."""
-        if len(self.queue) <= 1:
-            return 0
-        top = min(req.priority for req in self.queue)
-        cand = [i for i, r in enumerate(self.queue) if r.priority == top]
+        collapses to the head of the queue — exact FIFO. ``pred``
+        restricts eligibility (the degradation ladder's lane routing:
+        staging skips ``no_stage`` requests, the async decode lane only
+        takes them); returns None when nothing is eligible."""
+        idxs = [
+            i for i, r in enumerate(self.queue)
+            if pred is None or pred(r)
+        ]
+        if not idxs:
+            return None
+        if len(idxs) == 1:
+            return idxs[0]
+        top = min(self.queue[i].priority for i in idxs)
+        cand = [i for i in idxs if self.queue[i].priority == top]
         aged = [i for i in cand if self.queue[i].age >= self.aging_limit]
         if aged:
             return min(
@@ -421,19 +522,23 @@ class Scheduler:
                 best, best_pages = i, pages
         return best
 
-    def admit(self) -> list[tuple[int, RequestState]]:
+    def admit(self, pred=None) -> list[tuple[int, RequestState]]:
         """Fill free slots from the queue — FIFO, or cache-aware when
         ``match_fn`` is installed (see :meth:`_select_index`). With a
         page budget, admission stops at the first *selected* request the
         pool cannot cover (the selected request keeps its claim on the
         next free slot — no further overtaking past a budget stall).
-        Returns the new (slot, request) pairs; the engine stages them on
-        device."""
+        ``pred`` restricts which queued requests this lane may take (the
+        async engine's failover path admits only ``no_stage`` requests
+        straight into decode slots). Returns the new (slot, request)
+        pairs; the engine stages them on device."""
         admitted = []
         now = self.clock()
         for slot in range(self.num_slots):
             if self.slot_req[slot] is None and self.queue:
-                idx = self._select_index()
+                idx = self._select_index(pred)
+                if idx is None:
+                    break
                 plen = len(self.queue[idx].serve_prompt())
                 if self.budget is not None and not self.budget.can_admit(plen):
                     break
@@ -543,7 +648,11 @@ class Scheduler:
         sb = self.stage_budget if self.stage_budget is not None else self.budget
         for sid in range(self.num_stage_slots):
             if self.stage_req[sid] is None and self.queue:
-                idx = self._select_index()
+                # Failed-over requests never restage: the ladder routes
+                # them through the decode-lane admit (serial semantics).
+                idx = self._select_index(lambda r: not r.no_stage)
+                if idx is None:
+                    break
                 plen = len(self.queue[idx].serve_prompt())
                 if sb is not None and not sb.can_admit(plen):
                     break

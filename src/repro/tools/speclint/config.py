@@ -149,6 +149,36 @@ PAGED_ONLY_FUNCS = frozenset(
 GATE_NAME = "_assert_all_paged"
 
 # ---------------------------------------------------------------------------
+# fault-site
+# ---------------------------------------------------------------------------
+# Mirror of serving/faults.py SITES / SITE_* constants (speclint is
+# stdlib-only so it cannot import the live module);
+# tests/test_faults.py pins the two registries in sync.
+FAULT_SITES = frozenset(
+    {
+        "transfer_loss",
+        "transfer_delay",
+        "pod_dispatch",
+        "alloc_deny",
+        "nonfinite_logits",
+    }
+)
+FAULT_SITE_CONSTS = frozenset(
+    {
+        "SITE_TRANSFER_LOSS",
+        "SITE_TRANSFER_DELAY",
+        "SITE_POD_DISPATCH",
+        "SITE_ALLOC_DENY",
+        "SITE_NONFINITE_LOGITS",
+    }
+)
+FAULT_FIRES_ATTR = "fires"
+# Gate evidence: an ``is None`` / ``is not None`` test against one of
+# these names in the function or an enclosing function.
+FAULT_GATE_NAMES = frozenset({"_injector", "faults"})
+FAULTS_MODULE_SUFFIX = "serving/faults.py"
+
+# ---------------------------------------------------------------------------
 # call-graph method fallback
 # ---------------------------------------------------------------------------
 # Attr names too generic to fall back on every same-named function in
@@ -198,7 +228,9 @@ METHOD_FALLBACK_DENYLIST = frozenset(
 
 # Passes whose rules only make sense on production sources (tests and
 # benchmarks drive allocator/paged internals directly, on purpose).
-PROD_ONLY_PASSES = frozenset({"allocator-discipline", "feature-gating"})
+PROD_ONLY_PASSES = frozenset(
+    {"allocator-discipline", "feature-gating", "fault-site"}
+)
 
 ALL_PASSES = (
     "prng-discipline",
@@ -206,6 +238,7 @@ ALL_PASSES = (
     "jit-purity",
     "allocator-discipline",
     "feature-gating",
+    "fault-site",
 )
 
 

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from . import allocator, gating, hostsync, jitpurity, prng
+from . import allocator, faultsite, gating, hostsync, jitpurity, prng
 
 PASSES = {
     "prng-discipline": prng.run,
@@ -10,6 +10,7 @@ PASSES = {
     "jit-purity": jitpurity.run,
     "allocator-discipline": allocator.run,
     "feature-gating": gating.run,
+    "fault-site": faultsite.run,
 }
 
 __all__ = ["PASSES"]

@@ -1,0 +1,131 @@
+"""fault-site: every ``FaultInjector.fires(...)`` call site must name a
+registered injection site and sit behind the ``faults`` config gate.
+
+The fault plane's whole contract is that it is *structurally* a no-op
+when ``EngineConfig.faults is None`` — the injector is never
+constructed and no fault branch is reachable. That breaks two ways:
+
+* a ``fires(...)`` call whose site is a free-hand string (typo'd sites
+  raise at runtime, but only on the faulted path a normal run never
+  takes), so the site argument must resolve to one of the registered
+  ``SITE_*`` constants or their literal values;
+* a ``fires(...)`` call not guarded by an ``is None`` / ``is not
+  None`` test of the injector (or the ``faults`` config field) in the
+  function or an enclosing function — an unguarded call turns the
+  disabled plane into an AttributeError on ``None``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import config
+from ..context import LintContext
+from ..index import FunctionInfo
+
+PASS = "fault-site"
+
+
+def _fires_calls(func: FunctionInfo):
+    for call in func.calls:
+        tgt = call.func
+        if (
+            isinstance(tgt, ast.Attribute)
+            and tgt.attr == config.FAULT_FIRES_ATTR
+        ):
+            yield call
+
+
+def _site_arg(call: ast.Call) -> ast.expr | None:
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "site":
+            return kw.value
+    return None
+
+
+def _is_registered_site(arg: ast.expr | None) -> bool:
+    if arg is None:
+        return False
+    if isinstance(arg, ast.Constant):
+        return arg.value in config.FAULT_SITES
+    name = (
+        arg.attr
+        if isinstance(arg, ast.Attribute)
+        else arg.id if isinstance(arg, ast.Name) else None
+    )
+    return name in config.FAULT_SITE_CONSTS
+
+
+def _none_guarded(func: FunctionInfo) -> bool:
+    """True when the function (or an enclosing def) tests the injector
+    or the ``faults`` config field against None."""
+    for scope in func.ancestors():
+        node = scope.node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for n in ast.walk(node):
+            if not isinstance(n, ast.Compare) or len(n.ops) != 1:
+                continue
+            if not isinstance(n.ops[0], (ast.Is, ast.IsNot)):
+                continue
+            sides = [n.left] + list(n.comparators)
+            if not any(
+                isinstance(s, ast.Constant) and s.value is None
+                for s in sides
+            ):
+                continue
+            for s in sides:
+                name = (
+                    s.attr
+                    if isinstance(s, ast.Attribute)
+                    else s.id if isinstance(s, ast.Name) else None
+                )
+                if name in config.FAULT_GATE_NAMES:
+                    return True
+    return False
+
+
+def run(ctx: LintContext):
+    findings = []
+    for func in ctx.index.funcs:
+        if func.fid < 0:
+            continue
+        # the registry module itself defines fires(); its internals are
+        # not call sites of the plane
+        if func.file.relpath.endswith(config.FAULTS_MODULE_SUFFIX):
+            continue
+        calls = list(_fires_calls(func))
+        if not calls:
+            continue
+        gated = _none_guarded(func)
+        for call in calls:
+            arg = _site_arg(call)
+            if not _is_registered_site(arg):
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "unregistered-fault-site",
+                        func,
+                        call,
+                        f"fires(...) in {func.qualname!r} does not name "
+                        "a registered SITE_* constant — a typo'd site "
+                        "only raises on the faulted path a normal run "
+                        "never takes",
+                    )
+                )
+            if not gated:
+                findings.append(
+                    ctx.finding(
+                        PASS,
+                        "ungated-fault-site",
+                        func,
+                        call,
+                        f"fires(...) in {func.qualname!r} is not behind "
+                        "an injector/faults None-check — with faults "
+                        "disabled the injector is None and this call "
+                        "raises instead of no-opping",
+                    )
+                )
+    return findings

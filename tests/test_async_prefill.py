@@ -464,7 +464,7 @@ class TestAsyncEngineIdentity:
         inner = eng.runner.decode_step
         checked = {"n": 0}
 
-        def checked_decode(tp_, dp_, tc, dc, batch, key):
+        def checked_decode(tp_, dp_, tc, dc, batch, key, corrupt=None):
             staged = np.asarray(batch.pool.staged)
             table = np.asarray(batch.page_table)
             used = np.asarray(batch.pages_used)
@@ -475,7 +475,7 @@ class TestAsyncEngineIdentity:
                     assert (ids >= 0).all(), (slot, ids)
                     assert not staged[ids].any(), (slot, ids)
             checked["n"] += 1
-            return inner(tp_, dp_, tc, dc, batch, key)
+            return inner(tp_, dp_, tc, dc, batch, key, corrupt=corrupt)
 
         eng.runner.decode_step = checked_decode
         for p in MIXED:

@@ -1,0 +1,651 @@
+"""Fault-injection, degradation-ladder, and lifecycle-hardening tests.
+
+Pins the fault-tolerance contract from ISSUE 10:
+
+* **Deterministic injection** — ``FaultPlan``/``FaultInjector`` firings
+  are a pure function of ``(seed, site, iteration, rid)``; explicit
+  schedule triples fire unconditionally, rate-driven firings are capped
+  so chaos quiesces.
+* **Losslessness under faults** — at temperature 0 every fault site is
+  output-invariant: scheduling faults (denied admission, lost/delayed
+  transfers, pod dispatch failures) only reshuffle WHEN work runs, and a
+  non-finite drafter row makes verification reject the whole block and
+  resample the bonus from the raw target row — whose argmax at temp 0 is
+  the greedy token.  Survivors (and even affected requests) are
+  bit-identical to a fault-free run.
+* **Degradation ladder** — lost transfers time out, retry with backoff,
+  then fail the lane over to decode-pod prefill; repeated pod failures
+  downgrade disagg admissions to the async path.  Either way every
+  request completes.
+* **Lifecycle hardening** — ``cancel()`` unwinds queued/staged/in-flight
+  requests, ``deadline_s`` sheds at admission and retire-check, and the
+  pool audit finds zero leaks at quiesce after any of it.
+* **Chaos property (hypothesis)** — randomized seeded fault schedules
+  plus cancel/deadline traffic: every non-cancelled request completes,
+  survivors are bit-identical, ``audit_repairs == 0``.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline/minimal env: keep deterministic cases running
+    from conftest import hypothesis_stub
+
+    given, settings, st = hypothesis_stub()
+
+from test_async_prefill import MIXED, _assert_drained, _models
+
+from repro.serving import ServingFrontend, paging
+from repro.serving.engine import EngineConfig, SpecEngine
+from repro.serving.faults import (
+    SITE_ALLOC_DENY,
+    SITE_NONFINITE_LOGITS,
+    SITE_POD_DISPATCH,
+    SITE_TRANSFER_DELAY,
+    SITE_TRANSFER_LOSS,
+    SITES,
+    FaultInjector,
+    FaultPlan,
+)
+from repro.serving.frontend import StreamDelta
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+_CACHE: dict = {}
+
+
+def _engine(plan=None, **overrides) -> SpecEngine:
+    """One compiled engine per structural config, cached for the module;
+    the fault plan is swapped per-test (it is read only at reset and on
+    host-side fault branches, never baked into a compiled program)."""
+    key = tuple(sorted(overrides.items()))
+    if "models" not in _CACHE:
+        _CACHE["models"] = _models()
+    if key not in _CACHE:
+        tgt, drf, tp, dp = _CACHE["models"]
+        kw = dict(
+            gamma=3, verifier="block", max_slots=2, max_len=96,
+            temperature=0.0, max_new_tokens=10, prefill_chunk=4,
+        )
+        kw.update(overrides)
+        _CACHE[key] = SpecEngine(tgt, drf, tp, dp, EngineConfig(**kw))
+    eng = _CACHE[key]
+    eng.cfg = dataclasses.replace(eng.cfg, faults=plan)
+    eng.reset(seed=0)
+    return eng
+
+
+def _disagg_engine(plan=None, **kw) -> SpecEngine:
+    return _engine(
+        plan, async_prefill=True, stage_slots=2, disaggregated=True, **kw
+    )
+
+
+def _run(eng, prompts, pump=None):
+    rids = [eng.submit(p) for p in prompts]
+    res = eng.serve(pump=pump) if pump is not None else eng.run()
+    return rids, res
+
+
+def _outputs(rids, res):
+    return [list(res[r].output) for r in rids]
+
+
+def _assert_stage_drained(eng):
+    if eng.stage_pool is None:
+        return
+    pool = eng.stage_pool
+    assert int(pool.free_count) == pool.free_stack.shape[0]
+    assert int(jnp.max(pool.ref)) == 0
+    assert not bool(jnp.any(pool.staged))
+
+
+_REF: dict = {}
+
+
+def _reference(kind, prompts):
+    """Fault-free outputs for ``prompts``, cached per engine kind."""
+    key = (kind, tuple(map(tuple, prompts)))
+    if key not in _REF:
+        eng = _disagg_engine(None) if kind == "disagg" else _engine(None)
+        rids, res = _run(eng, prompts)
+        _REF[key] = _outputs(rids, res)
+    return _REF[key]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultInjector units
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_site_registry_is_validated(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan.make(rates={"bogus": 1.0})
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan.make(schedule=[("bogus", 0, -1)])
+        inj = FaultInjector(FaultPlan.make())
+        with pytest.raises(ValueError, match="unregistered"):
+            inj.fires("bogus", iteration=0, rid=0)
+
+    def test_plan_is_hashable_inside_engine_config(self):
+        plan = FaultPlan.make(seed=3, rates={SITE_ALLOC_DENY: 0.5})
+        cfg = EngineConfig(gamma=2, max_slots=1, max_len=32, faults=plan)
+        assert isinstance(hash(cfg), int)
+
+    def test_schedule_fires_exactly_at_coordinates(self):
+        plan = FaultPlan.make(
+            schedule=[(SITE_ALLOC_DENY, 3, 7), (SITE_TRANSFER_LOSS, 5, -1)]
+        )
+        inj = FaultInjector(plan)
+        assert not inj.fires(SITE_ALLOC_DENY, iteration=3, rid=8)
+        assert not inj.fires(SITE_ALLOC_DENY, iteration=2, rid=7)
+        assert inj.fires(SITE_ALLOC_DENY, iteration=3, rid=7)
+        # rid = -1 is a wildcard: any request at that iteration.
+        assert inj.fires(SITE_TRANSFER_LOSS, iteration=5, rid=123)
+        assert inj.fires(SITE_TRANSFER_LOSS, iteration=5, rid=456)
+        assert inj.affected_rids(SITE_ALLOC_DENY) == {7}
+
+    def test_rate_firings_are_deterministic_and_capped(self):
+        plan = FaultPlan.make(
+            seed=11, rates={SITE_POD_DISPATCH: 1.0}, max_per_site=2
+        )
+        a, b = FaultInjector(plan), FaultInjector(plan)
+        hits_a = [a.fires(SITE_POD_DISPATCH, iteration=i, rid=i % 3)
+                  for i in range(10)]
+        hits_b = [b.fires(SITE_POD_DISPATCH, iteration=i, rid=i % 3)
+                  for i in range(10)]
+        assert hits_a == hits_b and a.log == b.log
+        assert sum(hits_a) == 2  # max_per_site bounds rate-driven chaos
+        assert a.stats() == {SITE_POD_DISPATCH: 2}
+
+    def test_speclint_mirror_matches_live_registry(self):
+        # speclint is stdlib-only so its fault-site pass carries a
+        # mirror of the registry; this is the pin that keeps them in
+        # sync when a site is added or renamed.
+        from repro.tools.speclint import config as lint_config
+
+        assert lint_config.FAULT_SITES == set(SITES)
+        assert lint_config.FAULT_SITE_CONSTS == {
+            f"SITE_{s.upper()}" for s in SITES
+        }
+
+    def test_different_seeds_decorrelate(self):
+        coords = [(s, i, r) for s in SITES for i in range(20) for r in (0, 1)]
+        def mask(seed):
+            inj = FaultInjector(
+                FaultPlan.make(
+                    seed=seed, rates={s: 0.5 for s in SITES},
+                    max_per_site=10**6,
+                )
+            )
+            return [inj.fires(s, iteration=i, rid=r) for s, i, r in coords]
+        assert mask(0) != mask(1)
+
+
+# ---------------------------------------------------------------------------
+# pool audit units
+# ---------------------------------------------------------------------------
+
+
+SPEC = paging.PageSpec(page_size=8, num_pages=12, max_pages=4)
+
+
+def _mk_pool(rows=2):
+    table, used = paging.init_tables(SPEC, rows)
+    pool = paging.init_pool(SPEC)
+    table, used, pool, ok = paging.ensure(
+        SPEC, table, used, pool, jnp.asarray([9] + [0] * (rows - 1)),
+        jnp.asarray([True] + [False] * (rows - 1)),
+    )
+    assert bool(ok[0])
+    return table, used, pool
+
+
+class TestAudit:
+    def test_clean_pool_is_bitwise_unchanged(self):
+        table, used, pool = _mk_pool()
+        healed, report = paging.audit_pool(
+            SPEC, pool, page_table=table, pages_used=used, live_rows=(0,)
+        )
+        assert report["clean"] and report["repairs"] == 0
+        for a, b in zip(pool, healed):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ghost_ref_is_repaired(self):
+        table, used, pool = _mk_pool()
+        victim = int(pool.free_stack[int(pool.free_count) - 1])
+        bad = pool._replace(ref=pool.ref.at[victim].add(1))
+        healed, report = paging.audit_pool(
+            SPEC, bad, page_table=table, pages_used=used, live_rows=(0,)
+        )
+        assert not report["clean"] and report["repairs"] > 0
+        _, again = paging.audit_pool(
+            SPEC, healed, page_table=table, pages_used=used, live_rows=(0,)
+        )
+        assert again["clean"]
+
+    def test_leaked_page_returns_to_free_stack(self):
+        table, used, pool = _mk_pool()
+        # Drop row 0 from ground truth without releasing: its pages are
+        # now leaked (refcounted but unmapped) and must be reclaimed.
+        healed, report = paging.audit_pool(
+            SPEC, pool, page_table=table, pages_used=used, live_rows=()
+        )
+        assert report["leaked_pages"] > 0 and not report["clean"]
+        assert int(healed.free_count) == SPEC.num_pages
+        assert int(jnp.max(healed.ref)) == 0
+
+    def test_stale_budget_key_dropped(self):
+        table, used, pool = _mk_pool()
+        budget = paging.PageBudget(SPEC, gamma=3)
+        budget.note_admit(0, 9)
+        budget.note_admit(1, 9)   # row 1 is not live: stale after a kill
+        _, report = paging.audit_pool(
+            SPEC, pool, page_table=table, pages_used=used, live_rows=(0,),
+            budget=budget,
+        )
+        assert report["stale_budget_keys"] == 1
+        assert set(budget.slot_len) == {0}
+
+
+# ---------------------------------------------------------------------------
+# engine fault plane: losslessness at temperature 0
+# ---------------------------------------------------------------------------
+
+
+class TestEngineFaultPlane:
+    PROMPTS = [MIXED[0], MIXED[2], MIXED[4]]
+
+    def test_empty_plan_is_output_identical_noop(self):
+        ref = _reference("serial", self.PROMPTS)
+        eng = _engine(FaultPlan.make(seed=1))
+        rids, res = _run(eng, self.PROMPTS)
+        assert _outputs(rids, res) == ref
+        assert eng.last_stats["fault_injections"] == {}
+        assert eng.last_stats["fault_log"] == []
+        assert eng.last_stats["audit_repairs"] == 0
+
+    def test_nonfinite_drafter_rows_bit_identical_at_temp0(self):
+        """A corrupted drafter row rejects its whole block and resamples
+        the bonus from the raw target row — at temp 0 that argmax IS the
+        greedy token, so even AFFECTED requests commit identical output
+        (just fewer tokens per step)."""
+        ref = _reference("serial", self.PROMPTS)
+        plan = FaultPlan.make(
+            schedule=[(SITE_NONFINITE_LOGITS, 2, -1),
+                      (SITE_NONFINITE_LOGITS, 3, -1)]
+        )
+        eng = _engine(plan)
+        rids, res = _run(eng, self.PROMPTS)
+        assert _outputs(rids, res) == ref
+        fired = eng.last_stats["fault_injections"]
+        assert fired.get(SITE_NONFINITE_LOGITS, 0) >= 1
+        assert eng.last_stats["audit_repairs"] == 0
+        _assert_drained(eng)
+
+    def test_alloc_denial_delays_admission_not_output(self):
+        ref = _reference("serial", self.PROMPTS)
+        plan = FaultPlan.make(
+            schedule=[(SITE_ALLOC_DENY, 0, -1), (SITE_ALLOC_DENY, 1, -1)]
+        )
+        eng = _engine(plan)
+        rids, res = _run(eng, self.PROMPTS)
+        assert _outputs(rids, res) == ref
+        assert eng.last_stats["fault_injections"][SITE_ALLOC_DENY] == 2
+        assert eng.last_stats["audit_repairs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder (disaggregated engine)
+# ---------------------------------------------------------------------------
+
+
+class TestDegradationLadder:
+    def test_transfer_delay_defers_adoption_only(self):
+        ref = _reference("disagg", MIXED)
+        plan = FaultPlan.make(
+            seed=2, rates={SITE_TRANSFER_DELAY: 1.0}, max_per_site=3,
+            transfer_delay_iters=2,
+        )
+        eng = _disagg_engine(plan)
+        rids, res = _run(eng, MIXED)
+        assert _outputs(rids, res) == ref
+        assert eng.last_stats["fault_injections"][SITE_TRANSFER_DELAY] == 3
+        assert eng.last_stats["audit_repairs"] == 0
+        _assert_drained(eng)
+        _assert_stage_drained(eng)
+
+    def test_transfer_loss_times_out_retries_then_fails_over(self):
+        """With every transfer lost and zero retries allowed, each lane
+        walks the whole ladder: timeout → failover → decode-pod prefill.
+        Output stays bit-identical; the pools drain with zero repairs."""
+        ref = _reference("disagg", MIXED)
+        plan = FaultPlan.make(
+            rates={SITE_TRANSFER_LOSS: 1.0}, max_per_site=8,
+            transfer_timeout_iters=2, transfer_max_retries=0,
+        )
+        eng = _disagg_engine(plan)
+        rids, res = _run(eng, MIXED)
+        stats = eng.last_stats
+        assert _outputs(rids, res) == ref
+        assert stats["transfer_retries"] >= 1
+        assert stats["failovers"] >= 1
+        assert any(ev == "failover" for ev, _, _ in eng._transfer_log)
+        assert stats["audit_repairs"] == 0
+        _assert_drained(eng)
+        _assert_stage_drained(eng)
+
+    def test_transfer_loss_with_retries_recovers_without_failover(self):
+        """A bounded loss burst (cap < retry budget) re-dispatches and
+        lands every transfer without abandoning the disagg path."""
+        ref = _reference("disagg", MIXED)
+        plan = FaultPlan.make(
+            rates={SITE_TRANSFER_LOSS: 1.0}, max_per_site=1,
+            transfer_timeout_iters=2, transfer_max_retries=3,
+        )
+        eng = _disagg_engine(plan)
+        rids, res = _run(eng, MIXED)
+        stats = eng.last_stats
+        assert _outputs(rids, res) == ref
+        assert stats["transfer_retries"] == 1
+        assert stats["failovers"] == 0
+        assert stats["audit_repairs"] == 0
+
+    def test_repeated_pod_failure_downgrades_disagg_to_async(self):
+        ref = _reference("disagg", MIXED)
+        plan = FaultPlan.make(
+            rates={SITE_POD_DISPATCH: 1.0}, max_per_site=2,
+            pod_failure_limit=2,
+        )
+        eng = _disagg_engine(plan)
+        rids, res = _run(eng, MIXED)
+        stats = eng.last_stats
+        assert _outputs(rids, res) == ref
+        assert stats["pod_failures"] == 2
+        assert stats["downgraded"] is True
+        assert ("downgrade", -1) in {(e, s) for e, s, _ in eng._transfer_log}
+        assert stats["audit_repairs"] == 0
+        _assert_drained(eng)
+        _assert_stage_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle: cancel + deadline + quarantine
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    PROMPTS = [MIXED[0], MIXED[2], MIXED[4]]
+
+    def test_cancel_queued_before_run(self):
+        eng = _engine()
+        rids = [eng.submit(p) for p in self.PROMPTS]
+        assert eng.cancel(rids[2])
+        assert not eng.cancel(rids[2])  # already terminal: idempotent no
+        res = eng.run()
+        assert res[rids[2]].finish_reason == "cancelled"
+        assert res[rids[2]].output == []
+        survivors = [_o for r, _o in zip(rids, _outputs(rids, res))
+                     if r != rids[2]]
+        ref = _reference("serial", self.PROMPTS)
+        assert survivors == [ref[0], ref[1]]
+        assert eng.last_stats["audit_repairs"] == 0
+
+    def test_cancel_midflight_slot_unwinds_and_survivors_match(self):
+        eng = _engine()
+        rids = [eng.submit(p) for p in self.PROMPTS]
+        calls = {"n": 0}
+
+        def pump():
+            calls["n"] += 1
+            if calls["n"] == 2:  # rids[0] is riding a decode slot now
+                assert eng.cancel(rids[0])
+            return False
+
+        res = eng.serve(pump=pump)
+        assert res[rids[0]].finish_reason == "cancelled"
+        ref = _reference("serial", self.PROMPTS)
+        assert _outputs(rids, res)[1:] == ref[1:]
+        # a cancelled request streams a PREFIX of its fault-free output
+        assert ref[0][: len(res[rids[0]].output)] == res[rids[0]].output
+        assert eng.last_stats["cancelled"] == 1
+        assert eng.last_stats["audit_repairs"] == 0
+        _assert_drained(eng)
+
+    def test_cancel_staged_lane_disagg(self):
+        eng = _disagg_engine()
+        rids = [eng.submit(p) for p in MIXED]
+        calls = {"n": 0}
+
+        def pump():
+            calls["n"] += 1
+            if calls["n"] == 2:
+                eng.cancel(rids[3])  # long prompt: still staging
+            return False
+
+        res = eng.serve(pump=pump)
+        assert res[rids[3]].finished
+        ref = _reference("disagg", MIXED)
+        for i, r in enumerate(rids):
+            if r == rids[3]:
+                continue
+            assert list(res[r].output) == ref[i]
+        assert eng.last_stats["audit_repairs"] == 0
+        _assert_drained(eng)
+        _assert_stage_drained(eng)
+
+    def test_deadline_sheds_queued_and_running(self):
+        eng = _engine()
+        eng.scheduler.clock = _FakeClock()  # 1s per observation
+        rids = [
+            eng.submit(self.PROMPTS[0]),
+            eng.submit(self.PROMPTS[1], deadline_s=0.5),  # sheds at once
+        ]
+        res = eng.run()
+        assert res[rids[1]].finish_reason == "deadline"
+        assert res[rids[0]].finished
+        assert res[rids[0]].finish_reason not in ("deadline", "cancelled")
+        assert eng.last_stats["deadline_shed"] >= 1
+        assert eng.last_stats["audit_repairs"] == 0
+
+    def test_submit_rejects_nonpositive_deadline(self):
+        eng = _engine()
+        with pytest.raises(ValueError, match="deadline_s"):
+            eng.submit([1, 2, 3], deadline_s=0.0)
+
+    def test_quarantine_surfaces_error_without_killing_service(self):
+        """An admission blow-up quarantines THAT request (terminal
+        ``finish_reason="error"`` with the message) while the other
+        requests finish normally on the same service loop."""
+        eng = _engine()
+        rids = [eng.submit(p) for p in self.PROMPTS]
+        victim = rids[0]
+        real_admit = eng._admit
+
+        def flaky_admit(slot, req):
+            if req.rid == victim:
+                raise RuntimeError("injected admission failure")
+            return real_admit(slot, req)
+
+        eng._admit = flaky_admit
+        try:
+            res = eng.run()
+        finally:
+            del eng._admit
+        assert res[victim].finish_reason == "error"
+        assert "injected admission failure" in res[victim].error
+        ref = _reference("serial", self.PROMPTS)
+        assert _outputs(rids, res)[1:] == ref[1:]
+        assert eng.last_stats["audit_repairs"] == 0
+        _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# front end: cancel marshalling, drain error path, detokenizer flush
+# ---------------------------------------------------------------------------
+
+
+class TestFrontendLifecycle:
+    def test_ingress_cancel_retracts_and_streams_terminal_delta(self):
+        from repro.data.tokenizer import ByteTokenizer
+
+        fe = ServingFrontend(_engine(), tokenizer=ByteTokenizer())
+        fe._closed = False  # accept without spinning the service thread
+        h = fe.submit([65, 66])
+        # A committed delta carrying only the FIRST byte of a two-byte
+        # glyph, then a cancel: the stream must flush the buffered
+        # partial glyph at the terminal delta, never leak it.
+        h.events.put(StreamDelta(rid=0, tokens=[0xC3], finished=False))
+        assert fe.cancel(h)
+        assert not fe.cancel(h)  # already terminal
+        deltas = list(fe.stream(h, timeout_s=5))
+        assert deltas[-1].finished
+        assert deltas[-1].text == "�"  # flushed, per errors="replace"
+        assert fe.result(h).finish_reason == "cancelled"
+        assert not fe._ingress and not fe._cancels
+
+    def test_marshalled_cancel_through_service_thread(self):
+        eng = _engine()
+        with ServingFrontend(eng) as fe:
+            h1 = fe.submit(MIXED[0])
+            h2 = fe.submit(MIXED[1])
+            fe.cancel(h2)
+            s1 = fe.result(h1, timeout_s=120)
+            s2 = fe.result(h2, timeout_s=120)
+        assert s1.finished and s1.finish_reason != "cancelled"
+        assert s2.finish_reason == "cancelled"
+        deltas = list(fe.stream(h2, timeout_s=5))
+        assert deltas and deltas[-1].finished
+        assert eng.last_stats["audit_repairs"] == 0
+
+    def test_drain_error_path_emits_terminal_error_deltas(self):
+        import time as _time
+
+        eng = _engine()
+
+        def boom(*_a, **_k):
+            raise RuntimeError("injected")
+
+        eng._run_serial = boom  # shadow the bound method on the instance
+        try:
+            fe = ServingFrontend(eng)
+            fe.start()
+            try:
+                h = fe.submit(MIXED[0])
+            except RuntimeError:
+                h = None  # loop died before ingress reopened — fine
+            deadline = _time.monotonic() + 30
+            while fe.running and _time.monotonic() < deadline:
+                _time.sleep(0.005)
+            if h is not None:
+                g = fe.stream(h, timeout_s=5)
+                delta = next(g)
+                assert delta.finished and "injected" in delta.error
+                with pytest.raises(RuntimeError, match="service loop failed"):
+                    next(g)
+            with pytest.raises(RuntimeError, match="service loop failed"):
+                fe.drain()
+        finally:
+            del eng._run_serial
+
+    def test_frontend_deadline_passthrough(self):
+        eng = _engine()
+        eng.scheduler.clock = _FakeClock()
+        with ServingFrontend(eng) as fe:
+            doomed = fe.submit(MIXED[1], deadline_s=0.5)
+            ok = fe.submit(MIXED[0])
+            s_doomed = fe.result(doomed, timeout_s=120)
+            s_ok = fe.result(ok, timeout_s=120)
+        assert s_doomed.finish_reason == "deadline"
+        assert s_ok.finish_reason not in ("deadline", "cancelled")
+        with pytest.raises(ValueError, match="deadline_s"):
+            fe.submit([1, 2], deadline_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# chaos property: the acceptance gate
+# ---------------------------------------------------------------------------
+
+
+class TestChaosProperty:
+    @settings(max_examples=3, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16 - 1),
+        loss=st.booleans(),
+        delay=st.booleans(),
+        pod=st.booleans(),
+        deny=st.booleans(),
+        nonfinite=st.booleans(),
+        cancel_at=st.integers(0, 3),  # 0 = no cancel this example
+        doom=st.booleans(),           # add an impossible-deadline request
+    )
+    def test_chaos_survivors_bit_identical_zero_leaks(
+        self, seed, loss, delay, pod, deny, nonfinite, cancel_at, doom
+    ):
+        """Randomized seeded fault schedule + cancel/deadline traffic on
+        the disaggregated engine: every non-cancelled request reaches a
+        terminal state, survivors commit bit-identical output to the
+        fault-free run, and the audit finds zero leaks at quiesce."""
+        ref = _reference("disagg", MIXED)
+        rates = {}
+        if loss:
+            rates[SITE_TRANSFER_LOSS] = 1.0
+        if delay:
+            rates[SITE_TRANSFER_DELAY] = 1.0
+        if pod:
+            rates[SITE_POD_DISPATCH] = 1.0
+        if deny:
+            rates[SITE_ALLOC_DENY] = 0.5
+        if nonfinite:
+            rates[SITE_NONFINITE_LOGITS] = 0.3
+        plan = FaultPlan.make(
+            seed=seed, rates=rates, max_per_site=3,
+            transfer_timeout_iters=2, transfer_max_retries=1,
+            pod_failure_limit=2,
+        )
+        eng = _disagg_engine(plan)
+        rids = [eng.submit(p) for p in MIXED]
+        doomed = eng.submit([1, 2, 3], deadline_s=1e-9) if doom else None
+        cancel_rid = rids[1] if cancel_at else None
+        calls = {"n": 0}
+
+        def pump():
+            calls["n"] += 1
+            if cancel_at and calls["n"] == cancel_at:
+                eng.cancel(cancel_rid)
+            return False
+
+        res = eng.serve(pump=pump)
+        stats = eng.last_stats
+
+        # Every request reached a terminal state.
+        for r in rids:
+            assert res[r].finished, r
+        if doomed is not None:
+            assert res[doomed].finish_reason == "deadline"
+
+        # Survivors — including fault-AFFECTED requests — bit-identical.
+        for i, r in enumerate(rids):
+            if r == cancel_rid and res[r].finish_reason == "cancelled":
+                continue
+            assert list(res[r].output) == ref[i], (i, stats["fault_log"])
+
+        # Zero leaks at quiesce: no audit ever had to repair anything,
+        # and both pools drained to their reset geometry.
+        assert stats["audit_repairs"] == 0
+        _assert_drained(eng)
+        _assert_stage_drained(eng)

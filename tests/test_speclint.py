@@ -494,6 +494,86 @@ class TestFeatureGating:
 
 
 # ---------------------------------------------------------------------------
+# fault-site
+# ---------------------------------------------------------------------------
+
+
+class TestFaultSite:
+    def test_fires_on_unregistered_site_and_missing_gate(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "eng.py": """
+                class Eng:
+                    def _admit(self, req, it):
+                        # free-hand site string AND no None-guard
+                        return self._injector.fires(
+                            "transfer_lost", iteration=it, rid=req.rid
+                        )
+                """,
+            },
+            passes=["fault-site"],
+        )
+        assert rules(findings) == {
+            ("fault-site", "unregistered-fault-site"),
+            ("fault-site", "ungated-fault-site"),
+        }
+
+    def test_clean_twin(self, tmp_path):
+        # SITE_* constant + is-not-None guard: both rules satisfied,
+        # whether the site is the constant or its literal value
+        findings = lint(
+            tmp_path,
+            {
+                "eng.py": """
+                from repro.serving import faults as faults_mod
+
+                class Eng:
+                    def _admit(self, req, it):
+                        if self._injector is not None and self._injector.fires(
+                            faults_mod.SITE_ALLOC_DENY,
+                            iteration=it, rid=req.rid,
+                        ):
+                            return False
+                        return True
+
+                    def _dispatch(self, req, it):
+                        if self.cfg.faults is None:
+                            return True
+                        return not self._injector.fires(
+                            "pod_dispatch", iteration=it, rid=req.rid
+                        )
+                """,
+            },
+            passes=["fault-site"],
+        )
+        assert findings == []
+
+    def test_gate_in_enclosing_function_sanctions(self, tmp_path):
+        findings = lint(
+            tmp_path,
+            {
+                "eng.py": """
+                from repro.serving.faults import SITE_TRANSFER_LOSS
+
+                def make_step(eng):
+                    if eng._injector is None:
+                        return None
+
+                    def step(req, it):
+                        return eng._injector.fires(
+                            SITE_TRANSFER_LOSS, iteration=it, rid=req.rid
+                        )
+
+                    return step
+                """,
+            },
+            passes=["fault-site"],
+        )
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # suppression + baseline + CLI
 # ---------------------------------------------------------------------------
 
